@@ -1,0 +1,62 @@
+"""Render the §Roofline markdown table from a dry-run output directory.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [dir] [--mesh single]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from repro.roofline.analysis import suggest
+
+
+def rows_from(dir_: str, mesh: str = "single"):
+    out = []
+    for path in sorted(glob.glob(os.path.join(dir_, f"*__{mesh}.json"))):
+        r = json.load(open(path))
+        arch, shape, _ = os.path.basename(path)[:-5].split("__")
+        if r.get("status") == "skip":
+            out.append({"arch": arch, "shape": shape, "skip": True,
+                        "reason": r.get("reason", "")})
+            continue
+        if r.get("status") != "ok" or "roofline" not in r:
+            out.append({"arch": arch, "shape": shape, "fail": True})
+            continue
+        rf = r["roofline"]
+        out.append({
+            "arch": arch, "shape": shape,
+            "compute_s": rf["compute_s"], "memory_s": rf["memory_s"],
+            "collective_s": rf["collective_s"], "dominant": rf["dominant"],
+            "frac": rf["roofline_fraction"],
+            "mh": rf["model_to_hlo_flops"],
+            "note": suggest(rf),
+        })
+    return out
+
+
+def markdown(dir_: str, mesh: str = "single") -> str:
+    lines = [
+        f"| arch | shape | compute s | memory s | collective s | dominant "
+        f"| MODEL/HLO | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows_from(dir_, mesh):
+        if r.get("skip"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['reason'][:40]} | — | — |")
+        elif r.get("fail"):
+            lines.append(f"| {r['arch']} | {r['shape']} | FAIL | | | | | |")
+        else:
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3f} | "
+                f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+                f"{r['dominant']} | {r['mh']:.2f} | {r['frac']:.4f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    d = sys.argv[1] if len(sys.argv) > 1 else "dryrun_out_final"
+    mesh = sys.argv[2] if len(sys.argv) > 2 else "single"
+    print(markdown(d, mesh))

@@ -1,0 +1,41 @@
+"""Benchmark harness — one function per paper table/figure plus the
+framework-level telemetry/kernel benches.  Prints ``name,us_per_call,derived``
+CSV (scaffold contract)."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import paper_tables, telemetry_bench
+
+    benches = [
+        paper_tables.table3_leverage_effects,
+        paper_tables.table4_accuracy,
+        paper_tables.table5_modulation,
+        paper_tables.fig6_parameters,
+        paper_tables.table6_exponential,
+        paper_tables.table7_uniform,
+        paper_tables.noniid_blocks,
+        paper_tables.realdata_salary,
+        paper_tables.efficiency,
+        telemetry_bench.telemetry_collective_payload,
+        telemetry_bench.telemetry_accuracy_speed,
+        telemetry_bench.kernel_bench,
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for bench in benches:
+        try:
+            for name, us, derived in bench():
+                print(f"{name},{us:.1f},{derived:.6g}", flush=True)
+        except Exception as e:  # keep the harness honest but complete
+            failures += 1
+            print(f"{bench.__name__}/ERROR,0,{type(e).__name__}",
+                  file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,54 @@
+"""§Perf Cell C: lower the qwen2.5-32b train_4k multi-pod step with each
+telemetry mode and report the collective/flop deltas from the compiled HLO.
+
+This is the paper's contribution measured in its framework context: ISLA's
+moment-only state makes the robust (outlier-excluding) statistic O(1) in
+communication, while the exact robust competitor (trimmed mean) must gather
+and sort the global per-token tensor.
+
+Run (expensive — compiles 4 variants):
+  PYTHONPATH=src python -m benchmarks.telemetry_hlo
+"""
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import json  # noqa: E402
+
+from repro.launch.dryrun import lower_cell  # noqa: E402
+from repro.roofline import analyze_cost, parse_and_cost  # noqa: E402
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.train.train_step import TrainConfig  # noqa: E402
+
+
+def main():
+    cfg = get_config("qwen2.5-32b")
+    rows = {}
+    for mode in ("off", "isla", "exact", "trimmed_exact"):
+        tcfg = TrainConfig(telemetry_mode=mode,
+                           isla_telemetry=(mode != "off"))
+        lowered, meta, _ = lower_cell("qwen2.5-32b", "train_4k",
+                                      multi_pod=True, tcfg=tcfg)
+        compiled = lowered.compile()
+        cost = parse_and_cost(compiled.as_text())
+        r = analyze_cost(cost, cfg, SHAPES["train_4k"], meta["devices"])
+        rows[mode] = r
+        print(f"{mode:14s} coll_bytes={r['collective_bytes_per_dev']:.4e} "
+              f"flops={r['hlo_flops_per_dev']:.4e} "
+              f"hbm={r['hlo_bytes_per_dev']:.4e}", flush=True)
+    base = rows["off"]
+    print("\nname,us_per_call,derived")
+    for mode in ("isla", "exact", "trimmed_exact"):
+        d_coll = rows[mode]["collective_bytes_per_dev"] \
+            - base["collective_bytes_per_dev"]
+        d_hbm = rows[mode]["hlo_bytes_per_dev"] - base["hlo_bytes_per_dev"]
+        print(f"telemetry_hlo/{mode}_added_coll_bytes,0,{d_coll:.6g}")
+        print(f"telemetry_hlo/{mode}_added_hbm_bytes,0,{d_hbm:.6g}")
+    with open("dryrun_out/telemetry_modes.json", "w") as f:
+        json.dump({m: {k: v for k, v in r.items()
+                       if isinstance(v, (int, float, str))}
+                   for m, r in rows.items()}, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Batched serving demo: continuous batching over recycled slots.
+
+  PYTHONPATH=src python examples/serve_demo.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.launch import serve  # noqa: E402
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "olmo-1b", "--reduced",
+                "--slots", "4", "--requests", "6", "--max-new", "8",
+                "--max-seq", "64"]
+    serve.main()

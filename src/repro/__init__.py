@@ -1,0 +1,11 @@
+"""repro — ISLA (leverage-based approximate aggregation) as a production
+JAX framework: core estimator, Pallas kernels, 10-arch model stack, sharded
+training/serving, multi-pod dry-run and roofline tooling.
+
+Public API entry points:
+    repro.core          the paper's estimator (host + distributed paths)
+    repro.configs       architecture registry (--arch ids)
+    repro.launch        mesh / dryrun / train / serve drivers
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,41 @@
+"""ISLA core — the paper's contribution as a composable JAX module.
+
+Host path (float64, numpy): engine.aggregate / run_block.
+Device path (fp32, jit/shard_map-safe): distributed.isla_mean.
+Telemetry API for training loops: metrics.loss_stats etc.
+"""
+from .types import (AggregateResult, BlockResult, Boundaries, IslaParams,
+                    RegionMoments, REGION_TS, REGION_S, REGION_N, REGION_L,
+                    REGION_TL, classify, classify_np, region_of)
+from .boundaries import (choose_q, deviation_degree, is_balanced,
+                         make_boundaries)
+from .estimator import l_estimator, l_estimator_direct, theorem3_kc
+from .modulation import (lambda_star, run_modulation, solve_calibrated,
+                         solve_closed_form, classify_case, n_iterations,
+                         CASE_BALANCED)
+from .preestimation import (array_sampler, distribution_sampler, run_pilot,
+                            required_sample_size, sampling_rate, z_score)
+from .engine import (aggregate, aggregate_array, baseline_sample,
+                     phase1_sampling, phase2_iteration, run_block)
+from .summarize import summarize
+from .baselines import mv_avg, mvb_avg, uniform_avg
+from .noniid import aggregate_noniid, block_leverages
+from .online import OnlineBlockState, continue_block
+from .extremes import aggregate_extreme, block_rate_leverages
+from . import distributed, metrics
+
+__all__ = [
+    "AggregateResult", "BlockResult", "Boundaries", "IslaParams",
+    "RegionMoments", "REGION_TS", "REGION_S", "REGION_N", "REGION_L",
+    "REGION_TL", "classify", "classify_np", "region_of", "choose_q",
+    "deviation_degree", "is_balanced", "make_boundaries", "l_estimator",
+    "l_estimator_direct", "theorem3_kc", "lambda_star", "run_modulation",
+    "solve_calibrated", "solve_closed_form", "classify_case", "n_iterations",
+    "CASE_BALANCED", "array_sampler", "distribution_sampler", "run_pilot",
+    "required_sample_size", "sampling_rate", "z_score", "aggregate",
+    "aggregate_array", "baseline_sample", "phase1_sampling",
+    "phase2_iteration", "run_block", "summarize", "mv_avg", "mvb_avg",
+    "uniform_avg", "aggregate_noniid", "block_leverages", "OnlineBlockState",
+    "continue_block", "aggregate_extreme", "block_rate_leverages",
+    "distributed", "metrics",
+]

@@ -1,0 +1,303 @@
+"""Distributed / jit-safe ISLA.
+
+This is the device-side mirror of ``engine.py``: everything is branchless
+(jnp.where over the modulation cases), fp32-safe (values are pre-scaled by a
+static normalizer; ISLA is exactly scale-equivariant), and communication is
+O(1): a block's entire contribution is a 10-float vector.
+
+Two aggregation semantics, both faithful to the paper:
+ * "blocks"  — each device is a block: local Phase 1 + Phase 2, then the
+               Summarization psum of (avg * n, n)  (paper §II-B).
+ * "merged"  — moments are psum'd first, one global Phase 2 (the online/
+               continuation view: all devices form one block).
+
+``isla_mean`` is the drop-in for "mean of a big distributed tensor" telemetry:
+it samples its input at ``rate``, so the HBM traffic is rate-proportional and
+the collective payload is constant.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .types import IslaParams
+
+# ---------------------------------------------------------------------------
+# Phase 1: classification + moments (vectorized; the Pallas kernel in
+# repro.kernels implements the same contract for the TPU hot path).
+# ---------------------------------------------------------------------------
+
+
+def region_masks(v: jnp.ndarray, b: Tuple) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """S and L masks per §IV-A1 (bounds as a (s_lo, s_hi, l_lo, l_hi) tuple)."""
+    s_lo, s_hi, l_lo, l_hi = b
+    ms = (v > s_lo) & (v < s_hi)
+    ml = (v > l_lo) & (v < l_hi)
+    return ms, ml
+
+
+def moments(values: jnp.ndarray, bounds: Tuple, valid=None
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Masked (count, s1, s2, s3) for S and L as two 4-vectors (fp32)."""
+    v = values.astype(jnp.float32).reshape(-1)
+    ms, ml = region_masks(v, bounds)
+    if valid is not None:
+        valid = valid.astype(bool).reshape(-1)
+        ms, ml = ms & valid, ml & valid
+
+    def mom(mask):
+        m = mask.astype(jnp.float32)
+        vm = v * m
+        return jnp.stack([jnp.sum(m), jnp.sum(vm), jnp.sum(vm * v),
+                          jnp.sum(vm * v * v)])
+
+    return mom(ms), mom(ml)
+
+
+# ---------------------------------------------------------------------------
+# Phase 2 pieces (branchless).
+# ---------------------------------------------------------------------------
+
+
+def choose_q(dev: jnp.ndarray, params: IslaParams) -> jnp.ndarray:
+    """§IV-A4 q schedule as nested where."""
+    qp = jnp.where(
+        (dev >= 0.97) & (dev <= 1.03), 1.0,
+        jnp.where((dev >= params.mild_lo) & (dev <= params.mild_hi),
+                  params.q_mild, params.q_strong))
+    return jnp.where(dev > 1.0, 1.0 / qp, qp)
+
+
+def theorem3_kc(mom_s: jnp.ndarray, mom_l: jnp.ndarray, q: jnp.ndarray
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Closed-form (k, c) from 4-vector moments; safe for u=0 / v=0 (the
+    caller masks those out)."""
+    u, sx, sx2, sx3 = mom_s[0], mom_s[1], mom_s[2], mom_s[3]
+    v, sy, sy2, sy3 = mom_l[0], mom_l[1], mom_l[2], mom_l[3]
+    eps = jnp.float32(1e-30)
+    t2 = sx2 + sy2
+    denom_s = (1.0 + v / (q * jnp.maximum(u, 1.0))) * (u * t2 - sx2)
+    term_s = (t2 * sx - sx3) / jnp.maximum(denom_s, eps)
+    term_l = v * sy3 / jnp.maximum((q * u + v) * sy2, eps)
+    c = (sx + sy) / jnp.maximum(u + v, 1.0)
+    k = term_s + term_l - c
+    return k, c
+
+
+def n_iterations(d0: jnp.ndarray, thr: float, eta: float) -> jnp.ndarray:
+    ad = jnp.abs(d0)
+    t = jnp.ceil(jnp.log(jnp.maximum(ad / thr, 1.0)) / jnp.log(1.0 / eta))
+    return t.astype(jnp.float32)
+
+
+def _lambda_star(p1: float, p2: float) -> float:
+    from .modulation import lambda_star
+    return lambda_star(p1, p2)
+
+
+def phase2(mom_s: jnp.ndarray, mom_l: jnp.ndarray, sketch0: jnp.ndarray,
+           params: IslaParams, mode: str = "calibrated",
+           geometry=None) -> jnp.ndarray:
+    """Branchless Phase 2.  Returns the block's partial answer.
+
+    mode="calibrated" — ISLA-C fixed point (geometry-correct lambda*).
+    mode="empirical"  — ISLA-E: geometry=(kappa, b0) measured from the pilot.
+    mode="faithful"   — §V-C case table, algebraic form (== host closed form).
+    Falls back to sketch0 when u or v is 0, to c when k ~ 0.
+    """
+    eta, lam, thr = params.eta, params.lam, params.thr
+    u, v = mom_s[0], mom_l[0]
+    q = choose_q(u / jnp.maximum(v, 1.0), params)
+    k, c = theorem3_kc(mom_s, mom_l, q)
+    d0 = c - sketch0
+    t = n_iterations(d0, thr, eta)
+    total_shrink = (1.0 - eta ** t) * jnp.abs(d0)
+
+    if mode == "empirical":
+        kappa, b0 = geometry
+        c_adj = c - b0
+        d0 = c_adj - sketch0
+        t = n_iterations(d0, thr, eta)
+        shrink = (1.0 - eta ** t) * jnp.abs(d0)
+        avg = c_adj - jnp.sign(d0) * kappa * shrink / (1.0 + kappa)
+        balanced = jnp.zeros_like(d0, dtype=bool)
+    elif mode == "calibrated":
+        lam_c = _lambda_star(params.p1, params.p2)
+        s_sk = total_shrink / (1.0 + lam_c)
+        mu_move = -jnp.sign(d0) * lam_c * s_sk
+        avg = c + mu_move
+        balanced = jnp.zeros_like(d0, dtype=bool)  # calibrated always modulates
+    elif mode == "faithful":
+        sgn_k = jnp.where(k >= 0, 1.0, -1.0)
+        case1 = (d0 < 0) & (u < v)
+        case2 = (d0 < 0) & (u >= v)
+        case3 = (d0 >= 0) & (u < v)
+        # case4 = (d0 >= 0) & (u >= v)
+        # mu-dominant cases (1/4): dmu = +-shrink/(1-lam)
+        mu_dom_move = jnp.where(case1, total_shrink / (1.0 - lam),
+                                -total_shrink / (1.0 - lam))
+        # sketch-dominant cases (2/3): gain = |sgn_k*lam -+ (-1/+1)|
+        gain2 = 1.0 + sgn_k * lam
+        gain3 = 1.0 - sgn_k * lam
+        sk_dom_move = jnp.where(case2,
+                                sgn_k * lam * total_shrink / gain2,
+                                sgn_k * lam * total_shrink / gain3)
+        # cases 2/3 are sketch-dominant, cases 1/4 mu-dominant:
+        mu_move = jnp.where(case2 | case3, sk_dom_move, mu_dom_move)
+        avg = c + mu_move
+        dev = u / jnp.maximum(v, 1.0)
+        balanced = (dev > params.balanced_lo) & (dev < params.balanced_hi)
+    else:
+        raise ValueError(f"unknown mode {mode}")
+
+    avg = jnp.where(jnp.abs(k) < 1e-12, c, avg)
+    avg = jnp.where(balanced, sketch0, avg)
+    avg = jnp.where((u < params.min_region_count) |
+                    (v < params.min_region_count), sketch0, avg)
+    return avg
+
+
+# ---------------------------------------------------------------------------
+# Pilot + end-to-end distributed mean.
+# ---------------------------------------------------------------------------
+
+
+def local_pilot(values: jnp.ndarray, pilot_size: int = 256
+                ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Cheap local sketch/sigma from a strided slice: (sum, sumsq, n)."""
+    v = values.astype(jnp.float32).reshape(-1)
+    n = v.shape[0]
+    take = min(pilot_size, n)
+    stride = max(n // take, 1)
+    pv = jax.lax.slice(v, (0,), (take * stride,), (stride,))
+    return jnp.sum(pv), jnp.sum(pv * pv), jnp.float32(pv.shape[0])
+
+
+def pilot_band_geometry(pilot_vals: jnp.ndarray, sketch0, sigma,
+                        params: IslaParams, axis_names=None):
+    """Device-side ISLA-E geometry: (kappa, b0) from the pilot slice.
+
+    Evaluates the S∪L band mean at three centers (sketch0, sketch0 -+ h) via
+    masked sums — a (3, 2) psum, still O(1) collective payload.  b0 =
+    band-mean offset at delta=0 (skew signal); kappa = central-difference
+    slope (the Theorem-1 deviation ratio).
+    """
+    v = pilot_vals.astype(jnp.float32).reshape(-1)
+    h = 0.25 * sigma
+    centers = jnp.stack([sketch0, sketch0 - h, sketch0 + h])
+
+    def band_sum(center):
+        lo1, hi1 = center - params.p2 * sigma, center - params.p1 * sigma
+        lo2, hi2 = center + params.p1 * sigma, center + params.p2 * sigma
+        m = (((v > lo1) & (v < hi1)) | ((v > lo2) & (v < hi2))
+             ).astype(jnp.float32)
+        return jnp.stack([jnp.sum(v * m), jnp.sum(m)])
+
+    sums = jax.vmap(band_sum)(centers)              # (3, 2)
+    sums = _psum(sums, axis_names)
+    means = sums[:, 0] / jnp.maximum(sums[:, 1], 1.0)
+    means = jnp.where(sums[:, 1] > 0, means, centers)
+    kappa_hat = jnp.clip((means[1] - means[2]) / (2.0 * h), -0.9, 0.9)
+    b0_hat = means[0] - sketch0                      # sketch0 == pilot mean
+    # Shrink toward the analytic normal prior (kappa*, b0=0) by pilot mass:
+    # a small pilot's measured geometry is noise-dominated; N0 ~ the pilot
+    # size at which measurement and prior carry equal weight.
+    n0 = jnp.float32(1024.0)
+    w = sums[0, 1] / (sums[0, 1] + n0)
+    kappa = w * kappa_hat + (1.0 - w) * _lambda_star(params.p1, params.p2)
+    b0 = w * b0_hat
+    return kappa, b0
+
+
+def _psum(x, axis_names):
+    return jax.lax.psum(x, axis_names) if axis_names else x
+
+
+def subsample(values: jnp.ndarray, rate: float,
+              key: Optional[jax.Array] = None) -> jnp.ndarray:
+    """Uniform sample of ~rate*n elements.
+
+    Strided when key is None (cheap, good for i.i.d.-positioned data);
+    PRNG gather otherwise.
+    """
+    v = values.reshape(-1)
+    n = v.shape[0]
+    m = max(1, int(round(n * rate)))
+    if key is None:
+        stride = max(n // m, 1)
+        return jax.lax.slice(v, (0,), (m * stride,), (stride,))
+    idx = jax.random.randint(key, (m,), 0, n)
+    return v[idx]
+
+
+def isla_mean(values: jnp.ndarray,
+              params: IslaParams,
+              axis_names=None,
+              rate: float = 0.05,
+              key: Optional[jax.Array] = None,
+              scale_hint: Optional[float] = None,
+              semantics: str = "blocks",
+              mode: str = "calibrated",
+              pilot_size: int = 256) -> jnp.ndarray:
+    """Approximate distributed mean of ``values`` (local shard view).
+
+    Must be called inside shard_map/jit with ``axis_names`` naming the mesh
+    axes to aggregate over (None = single device).  Cross-device traffic:
+    one psum of 3 floats (pilot) + one psum of 10 floats (moments/partials),
+    regardless of tensor size or mesh size.
+    """
+    v = values.astype(jnp.float32).reshape(-1)
+
+    # --- Pre-estimation (pilot): relaxed sketch0 + sigma, hierarchical psum.
+    ps, pss, pn = local_pilot(v, pilot_size)
+    ps, pss, pn = _psum(jnp.stack([ps, pss, pn]), axis_names)
+    sketch0 = ps / jnp.maximum(pn, 1.0)
+    var = jnp.maximum(pss / jnp.maximum(pn, 1.0) - sketch0 * sketch0, 1e-12)
+    sigma = jnp.sqrt(var)
+
+    # --- fp32 safety: scale so values are O(1).  Exact equivariance.
+    scale = (jnp.float32(scale_hint) if scale_hint is not None
+             else jnp.maximum(jnp.abs(sketch0), sigma))
+    scale = jnp.maximum(scale, 1e-12)
+    vs = v / scale
+    sk = sketch0 / scale
+    sg = sigma / scale
+
+    bounds = (sk - params.p2 * sg, sk - params.p1 * sg,
+              sk + params.p1 * sg, sk + params.p2 * sg)
+
+    # --- ISLA-E geometry from the pilot slice (O(1): one (3,2) psum).
+    geometry = None
+    if mode == "empirical":
+        n_loc = v.shape[0]
+        take = min(max(pilot_size, 2048), n_loc)  # geometry needs more mass
+        stride = max(n_loc // take, 1)
+        pv = jax.lax.slice(vs, (0,), (take * stride,), (stride,))
+        geometry = pilot_band_geometry(pv, sk, sg, params, axis_names)
+
+    # --- Phase 1 on a sampled subset.
+    samp = subsample(vs, rate, key)
+    mom_s, mom_l = moments(samp, bounds)
+
+    if semantics == "merged":
+        mom = _psum(jnp.concatenate([mom_s, mom_l]), axis_names)
+        avg = phase2(mom[:4], mom[4:], sk, params, mode=mode,
+                     geometry=geometry)
+        return avg * scale
+    elif semantics == "blocks":
+        avg = phase2(mom_s, mom_l, sk, params, mode=mode, geometry=geometry)
+        n_local = jnp.float32(samp.shape[0])
+        acc = _psum(jnp.stack([avg * n_local, n_local]), axis_names)
+        return (acc[0] / jnp.maximum(acc[1], 1.0)) * scale
+    raise ValueError(f"unknown semantics {semantics}")
+
+
+def exact_mean(values: jnp.ndarray, axis_names=None) -> jnp.ndarray:
+    """The exact competitor: full local reduction + psum (for benchmarks)."""
+    s = jnp.sum(values.astype(jnp.float32))
+    n = jnp.float32(values.size)
+    acc = _psum(jnp.stack([s, n]), axis_names)
+    return acc[0] / acc[1]

@@ -1,0 +1,204 @@
+"""The ISLA block engine — Alg. 1 (sampling) + Alg. 2 (iteration) + the full
+Pre-estimation -> Calculation -> Summarization pipeline (paper Fig. 2).
+
+Host path: float64 numpy.  The device path lives in ``distributed.py`` and is
+bit-validated against this one in tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import baselines
+from .boundaries import choose_q, deviation_degree, make_boundaries
+from .estimator import theorem3_kc
+from .modulation import (CASE_BALANCED, ModulationResult, empirical_geometry,
+                         run_modulation, solve_calibrated, solve_closed_form,
+                         solve_empirical)
+from .preestimation import (PilotResult, array_sampler, required_sample_size,
+                            run_pilot, sampling_rate)
+from .summarize import summarize
+from .types import (AggregateResult, BlockResult, Boundaries, IslaParams,
+                    REGION_L, REGION_S, RegionMoments, classify_np)
+
+Sampler = Callable[[int, np.random.Generator], np.ndarray]
+
+# |k| below this is "no leverage capability": f(alpha) cannot move, return c.
+_K_EPS = 1e-12
+
+
+def phase1_sampling(samples: np.ndarray, boundaries: Boundaries
+                    ) -> Tuple[RegionMoments, RegionMoments]:
+    """Alg. 1: classify samples, accumulate S/L moments, drop the samples.
+
+    Vectorized host version of the scalar loop; the Pallas kernel
+    (``repro.kernels.isla_moments``) implements the same contract on TPU.
+    """
+    s = np.asarray(samples, dtype=np.float64)
+    codes = classify_np(s, boundaries)
+    xs = s[codes == REGION_S]
+    ys = s[codes == REGION_L]
+
+    def mom(vals: np.ndarray) -> RegionMoments:
+        return RegionMoments(
+            count=float(vals.size), s1=float(np.sum(vals)),
+            s2=float(np.sum(vals * vals)), s3=float(np.sum(vals ** 3)))
+
+    return mom(xs), mom(ys)
+
+
+_SOLVERS = {
+    "faithful": run_modulation,        # Alg. 2 loop, §V-C case table verbatim
+    "faithful_cf": solve_closed_form,  # same recursion, algebraic form
+    "calibrated": solve_calibrated,    # beyond-paper: lambda* geometry (ISLA-C)
+    # "empirical" (ISLA-E) needs the pilot geometry — handled explicitly.
+}
+
+
+def phase2_iteration(param_s: RegionMoments, param_l: RegionMoments,
+                     sketch0: float, params: IslaParams,
+                     mode: str = "faithful",
+                     geometry=None) -> ModulationResult:
+    """Alg. 2: construct D, pick the modulation strategy, iterate to |D|<=thr.
+
+    Falls back to sketch0 when a region is empty (Theorem 3 needs u,v > 0 —
+    sketch0 still carries its relaxed confidence assurance) and to c when
+    k ~= 0 (the l-estimator cannot move; c is the uniform S∪L answer).
+    """
+    u, v = float(param_s.count), float(param_l.count)
+    if u < params.min_region_count or v < params.min_region_count:
+        return ModulationResult(avg=sketch0, alpha=0.0, sketch=sketch0,
+                                d=0.0, n_iter=0, case=CASE_BALANCED)
+    dev = deviation_degree(u, v)
+    q = choose_q(dev, params)
+    k, c = theorem3_kc(param_s, param_l, q)
+    if abs(k) < _K_EPS:
+        return ModulationResult(avg=c, alpha=0.0, sketch=sketch0,
+                                d=c - sketch0, n_iter=0, case=CASE_BALANCED)
+    if mode == "empirical":
+        if geometry is None:
+            raise ValueError("mode='empirical' needs the pilot geometry")
+        kappa, b0 = geometry
+        return solve_empirical(k, c, sketch0, u, v, params, kappa, b0)
+    return _SOLVERS[mode](k, c, sketch0, u, v, params)
+
+
+def run_block(block_id: int, sampler: Sampler, block_size: int, rate: float,
+              boundaries: Boundaries, sketch0: float, params: IslaParams,
+              rng: np.random.Generator, shift: float = 0.0,
+              carry: Optional[Tuple[RegionMoments, RegionMoments]] = None,
+              max_samples: Optional[int] = None,
+              mode: str = "faithful", geometry=None) -> BlockResult:
+    """One block's partial answer.
+
+    ``shift`` — footnote 1: data are translated by +shift before the math so
+    everything is positive; the answer is translated back by the caller.
+    ``carry`` — the online extension (§VII-A): previous (param_S, param_L) to
+    merge with the new round's moments.
+    ``max_samples`` — the time-constraint extension (§VII-F) / straggler
+    mitigation: truncate this block's quota; moments are valid at any prefix.
+    """
+    m = int(math.ceil(rate * block_size))
+    if max_samples is not None:
+        m = min(m, int(max_samples))
+    m = max(m, 1)
+    raw = np.asarray(sampler(m, rng), dtype=np.float64) + shift
+    p_s, p_l = phase1_sampling(raw, boundaries)
+    if carry is not None:
+        p_s = carry[0].merge(p_s)
+        p_l = carry[1].merge(p_l)
+    mod = phase2_iteration(p_s, p_l, sketch0, params, mode=mode,
+                           geometry=geometry)
+    return BlockResult(
+        block_id=block_id, avg=mod.avg, alpha=mod.alpha, sketch=mod.sketch,
+        case=mod.case, n_iter=mod.n_iter, u=int(p_s.count), v=int(p_l.count),
+        n_sampled=m, param_s=p_s, param_l=p_l)
+
+
+@dataclasses.dataclass
+class IslaQuery:
+    """SELECT AVG(column) FROM data WHERE precision=e (paper §II-B)."""
+    e: float = 0.1
+    beta: float = 0.95
+
+
+def aggregate(block_samplers: Sequence[Sampler],
+              block_sizes: Sequence[int],
+              params: IslaParams,
+              rng: np.random.Generator,
+              rate_override: Optional[float] = None,
+              sigma_guess: Optional[float] = None,
+              mode: str = "faithful",
+              deadline_samples: Optional[int] = None) -> AggregateResult:
+    """Full pipeline: Pre-estimation -> per-block Calculation -> Summarization.
+
+    ``rate_override`` lets experiments set the sampling rate directly (e.g.
+    Table III uses r/3).  ``deadline_samples`` caps every block's quota
+    (time-constraint extension).
+    """
+    if len(block_samplers) != len(block_sizes):
+        raise ValueError("one sampler per block required")
+    data_size = int(sum(block_sizes))
+
+    # --- Pre-estimation: pilot -> sigma, sketch0, shift; rate from Eq. 1.
+    pilot = run_pilot(block_samplers, block_sizes, params, rng,
+                      sigma_guess=sigma_guess)
+    rate = (rate_override if rate_override is not None
+            else sampling_rate(params.e, pilot.sigma, params.beta, data_size))
+    sample_size = max(1, int(math.ceil(rate * data_size)))
+
+    shifted_sketch0 = pilot.sketch0 + pilot.shift
+    boundaries = make_boundaries(shifted_sketch0, pilot.sigma, params)
+
+    # mode="auto": calibrated for near-symmetric data (analytic geometry is
+    # lowest-variance), empirical when the pilot shows real skew.
+    if mode == "auto":
+        pv = pilot.values
+        skew = float(np.mean(((pv - np.mean(pv)) / (np.std(pv) + 1e-12))
+                             ** 3))
+        mode = "empirical" if abs(skew) > 0.5 else "calibrated"
+
+    # ISLA-E: fit the band geometry (kappa, b0) on the pilot distribution.
+    geometry = None
+    if mode == "empirical":
+        geometry = empirical_geometry(pilot.values + pilot.shift,
+                                      shifted_sketch0, pilot.sigma, params)
+
+    # --- Calculation: per-block Alg. 1 + Alg. 2.
+    blocks = []
+    for j, (sampler, bs) in enumerate(zip(block_samplers, block_sizes)):
+        blocks.append(run_block(
+            j, sampler, bs, rate, boundaries, shifted_sketch0, params, rng,
+            shift=pilot.shift, max_samples=deadline_samples, mode=mode,
+            geometry=geometry))
+
+    # --- Summarization: final = sum avg_j * |B_j| / M, then un-shift.
+    answer = summarize([b.avg for b in blocks], list(block_sizes)) - pilot.shift
+    return AggregateResult(
+        answer=answer, sketch0=pilot.sketch0, sigma=pilot.sigma,
+        sampling_rate=rate, sample_size=sample_size, blocks=blocks,
+        boundaries=boundaries)
+
+
+def aggregate_array(data: np.ndarray, n_blocks: int, params: IslaParams,
+                    rng: np.random.Generator, **kw) -> AggregateResult:
+    """Convenience: split an in-memory array into b equal blocks and run."""
+    chunks = np.array_split(np.asarray(data, dtype=np.float64), n_blocks)
+    samplers = [array_sampler(c) for c in chunks]
+    sizes = [c.size for c in chunks]
+    return aggregate(samplers, sizes, params, rng, **kw)
+
+
+def baseline_sample(block_samplers: Sequence[Sampler],
+                    block_sizes: Sequence[int], rate: float,
+                    rng: np.random.Generator) -> np.ndarray:
+    """Uniform sample at the given rate, drawn per block proportionally —
+    shared substrate for the US/MV/MVB baselines."""
+    out = []
+    for sampler, bs in zip(block_samplers, block_sizes):
+        m = max(1, int(math.ceil(rate * bs)))
+        out.append(np.asarray(sampler(m, rng), dtype=np.float64))
+    return np.concatenate(out)

@@ -1,0 +1,94 @@
+"""Training/serving telemetry built on distributed ISLA.
+
+Inside a sharded train_step, per-token losses live sharded over
+(pod, data) and exact statistics need a full-width reduction.  ISLA gives a
+precision-assured estimate while touching only ``rate`` of the elements and
+psum'ing 13 floats.  On a 512-chip mesh with 1M+ token batches the telemetry
+collective goes from O(MB) to O(bytes) — see EXPERIMENTS.md §Perf.
+
+The gradient-magnitude monitor treats |g| as the aggregated value — its
+heavy-tailed distribution is exactly the regime the paper's TL-region
+handling (structural outlier exclusion) was designed for.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from .distributed import exact_mean, isla_mean
+from .types import IslaParams
+
+DEFAULT_PARAMS = IslaParams(e=0.01, te=3.0)
+
+
+def loss_stats(per_token_loss: jnp.ndarray,
+               axis_names=None,
+               params: Optional[IslaParams] = None,
+               rate: float = 0.05,
+               key: Optional[jax.Array] = None,
+               include_exact: bool = False) -> Dict[str, jnp.ndarray]:
+    """ISLA estimate of the global mean per-token loss (+ optional exact
+    reference for validation runs)."""
+    p = params or DEFAULT_PARAMS
+    # per-token loss distributions are right-skewed; use the pilot-measured
+    # geometry (ISLA-E) — still O(1) collective payload.
+    out = {
+        "loss_mean_isla": isla_mean(per_token_loss, p, axis_names=axis_names,
+                                    rate=rate, key=key, mode="empirical"),
+    }
+    if include_exact:
+        out["loss_mean_exact"] = exact_mean(per_token_loss, axis_names)
+    return out
+
+
+def loss_stats_trimmed_exact(per_token_loss: jnp.ndarray,
+                             lo_q: float = 0.023, hi_q: float = 0.977
+                             ) -> Dict[str, jnp.ndarray]:
+    """The exact robust competitor to ISLA: a trimmed mean that excludes the
+    same ~2.3% tails the TS/TL regions drop.  Needs a global sort/quantile —
+    under sharding this gathers the full tensor (O(B*S) collective), vs
+    ISLA's 13 floats.  Used by the §Perf telemetry comparison."""
+    flat = per_token_loss.astype(jnp.float32).reshape(-1)
+    lo = jnp.quantile(flat, lo_q)
+    hi = jnp.quantile(flat, hi_q)
+    mask = ((flat >= lo) & (flat <= hi)).astype(jnp.float32)
+    return {"loss_mean_trimmed": jnp.sum(flat * mask)
+            / jnp.maximum(jnp.sum(mask), 1.0)}
+
+
+def grad_abs_stats(grads,
+                   axis_names=None,
+                   params: Optional[IslaParams] = None,
+                   rate: float = 0.01,
+                   max_leaves: int = 8) -> Dict[str, jnp.ndarray]:
+    """Approximate mean |g| over the largest gradient leaves.
+
+    Uses merged semantics (leaves form one logical population).  Leaves are
+    sampled *before* flattening so the cost is rate-bounded.
+    """
+    p = params or DEFAULT_PARAMS
+    leaves = [l for l in jax.tree_util.tree_leaves(grads)
+              if hasattr(l, "size") and l.size > 0]
+    leaves.sort(key=lambda l: l.size, reverse=True)
+    take = leaves[:max_leaves]
+    flat = jnp.concatenate([jnp.abs(l).reshape(-1)[: max(1, l.size // 16)]
+                            for l in take])
+    return {
+        "grad_absmean_isla": isla_mean(flat, p, axis_names=axis_names,
+                                       rate=rate, semantics="merged"),
+    }
+
+
+def router_load_stats(router_probs: jnp.ndarray,
+                      axis_names=None,
+                      params: Optional[IslaParams] = None,
+                      rate: float = 0.05) -> Dict[str, jnp.ndarray]:
+    """MoE router health: approximate mean top-1 prob across the batch."""
+    p = params or DEFAULT_PARAMS
+    top1 = jnp.max(router_probs, axis=-1)
+    return {
+        "router_top1_isla": isla_mean(top1, p, axis_names=axis_names,
+                                      rate=rate),
+    }

@@ -1,0 +1,225 @@
+"""Core datatypes for ISLA (Iterative Scheme for Leverage-based Aggregation).
+
+Everything here is deliberately tiny and pytree-friendly: the whole point of
+the paper is that a block's sampling state is four scalars per region
+(``counter, sum, squareSum, cubeSum`` — Alg. 1), so the distributed state that
+crosses the wire is O(1) regardless of sample size.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = Any
+
+# Region codes used throughout (paper §IV-A1, Fig. 3).
+REGION_TS = 0  # too small   (-inf, sketch0 - p2*sigma]
+REGION_S = 1   # small       (sketch0 - p2*sigma, sketch0 - p1*sigma)
+REGION_N = 2   # normal      [sketch0 - p1*sigma, sketch0 + p1*sigma]
+REGION_L = 3   # large       (sketch0 + p1*sigma, sketch0 + p2*sigma)
+REGION_TL = 4  # too large   [sketch0 + p2*sigma, +inf)
+NUM_REGIONS = 5
+REGION_NAMES = ("TS", "S", "N", "L", "TL")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RegionMoments:
+    """Streaming moments of the samples that fell into one region.
+
+    Matches the paper's ``param_S`` / ``param_L`` arrays exactly
+    (Alg. 1, ``updateParams``): counter, sum, square sum, cube sum.
+    """
+
+    count: Array  # number of samples in the region
+    s1: Array     # sum of values
+    s2: Array     # sum of squared values
+    s3: Array     # sum of cubed values
+
+    @staticmethod
+    def zeros(dtype=jnp.float32) -> "RegionMoments":
+        z = jnp.zeros((), dtype)
+        return RegionMoments(count=z, s1=z, s2=z, s3=z)
+
+    @staticmethod
+    def zeros_np() -> "RegionMoments":
+        return RegionMoments(count=0.0, s1=0.0, s2=0.0, s3=0.0)
+
+    def update(self, a) -> "RegionMoments":
+        """Alg. 1 ``updateParams`` — add one sample."""
+        return RegionMoments(
+            count=self.count + 1,
+            s1=self.s1 + a,
+            s2=self.s2 + a * a,
+            s3=self.s3 + a * a * a,
+        )
+
+    def merge(self, other: "RegionMoments") -> "RegionMoments":
+        """Moments are additive — this is what makes ISLA distributable and
+        its online extension (§VII-A) trivial."""
+        return RegionMoments(
+            count=self.count + other.count,
+            s1=self.s1 + other.s1,
+            s2=self.s2 + other.s2,
+            s3=self.s3 + other.s3,
+        )
+
+    def scaled(self, scale) -> "RegionMoments":
+        """Moments of ``scale * a`` given moments of ``a``.
+
+        ISLA is exactly equivariant under value scaling (leverages are scale
+        invariant; k, c scale linearly) — this is the fp32-safety lever used
+        by the distributed path.
+        """
+        return RegionMoments(
+            count=self.count,
+            s1=self.s1 * scale,
+            s2=self.s2 * scale * scale,
+            s3=self.s3 * scale * scale * scale,
+        )
+
+    @staticmethod
+    def from_values(values, mask=None) -> "RegionMoments":
+        """Vectorized Alg. 1 inner loop over an array of samples."""
+        v = jnp.asarray(values)
+        if mask is None:
+            mask = jnp.ones(v.shape, dtype=v.dtype)
+        else:
+            mask = jnp.asarray(mask, dtype=v.dtype)
+        vm = v * mask
+        return RegionMoments(
+            count=jnp.sum(mask),
+            s1=jnp.sum(vm),
+            s2=jnp.sum(vm * v),
+            s3=jnp.sum(vm * v * v),
+        )
+
+    def as_vector(self):
+        return jnp.stack(
+            [jnp.asarray(self.count, jnp.float32),
+             jnp.asarray(self.s1, jnp.float32),
+             jnp.asarray(self.s2, jnp.float32),
+             jnp.asarray(self.s3, jnp.float32)])
+
+    @staticmethod
+    def from_vector(vec) -> "RegionMoments":
+        return RegionMoments(count=vec[0], s1=vec[1], s2=vec[2], s3=vec[3])
+
+    def to_float(self) -> "RegionMoments":
+        """Host-side float64 view (numpy scalars -> python floats)."""
+        return RegionMoments(
+            count=float(self.count), s1=float(self.s1),
+            s2=float(self.s2), s3=float(self.s3))
+
+
+@dataclasses.dataclass(frozen=True)
+class IslaParams:
+    """All tunables of the scheme, defaults per the paper's §VIII setup."""
+
+    e: float = 0.1                 # desired precision (user query)
+    beta: float = 0.95             # confidence
+    p1: float = 0.5                # inner data-boundary factor
+    p2: float = 2.0                # outer data-boundary factor ("3-sigma rule" cut)
+    eta: float = 0.5               # convergence speed: D -> eta * D per iteration
+    lam: float = 0.8               # step-length factor lambda
+    thr: float = 1e-4              # iteration threshold on |D|
+    te: float = 3.0                # relaxed-precision factor for sketch0 (t_e > 1)
+    # |S|/|L| ranges (§IV-A4, §VIII "Parameters"):
+    balanced_lo: float = 0.99      # dev in (balanced_lo, balanced_hi) => Case 5
+    balanced_hi: float = 1.01
+    mild_lo: float = 0.94          # dev in (mild_lo,0.97)∪(1.03,mild_hi) => q'=5
+    mild_hi: float = 1.06
+    q_mild: float = 5.0
+    q_strong: float = 10.0         # dev beyond mild range => q'=10
+    min_region_count: int = 1      # guard: need >=1 sample in S and in L
+
+    def replace(self, **kw) -> "IslaParams":
+        return dataclasses.replace(self, **kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class Boundaries:
+    """Data-division criteria (paper §IV-A1): four cut points derived from
+    sketch0 and sigma.  ``s_lo/s_hi`` bound the S region, ``l_lo/l_hi`` the L
+    region."""
+
+    s_lo: float  # sketch0 - p2*sigma
+    s_hi: float  # sketch0 - p1*sigma
+    l_lo: float  # sketch0 + p1*sigma
+    l_hi: float  # sketch0 + p2*sigma
+
+    def as_tuple(self) -> Tuple[float, float, float, float]:
+        return (self.s_lo, self.s_hi, self.l_lo, self.l_hi)
+
+
+@dataclasses.dataclass
+class BlockResult:
+    """Partial answer of one block (Alg. 2 output + bookkeeping)."""
+
+    block_id: int
+    avg: float
+    alpha: float
+    sketch: float
+    case: int
+    n_iter: int
+    u: int                 # |S|
+    v: int                 # |L|
+    n_sampled: int
+    param_s: RegionMoments
+    param_l: RegionMoments
+
+
+@dataclasses.dataclass
+class AggregateResult:
+    """Final ISLA answer + provenance."""
+
+    answer: float
+    sketch0: float
+    sigma: float
+    sampling_rate: float
+    sample_size: int
+    blocks: list
+    boundaries: Boundaries
+
+    def __float__(self) -> float:
+        return float(self.answer)
+
+
+def region_of(value: float, b: Boundaries) -> int:
+    """Scalar classifier — reference semantics for the vectorized paths."""
+    if value <= b.s_lo:
+        return REGION_TS
+    if value < b.s_hi:
+        return REGION_S
+    if value <= b.l_lo:
+        return REGION_N
+    if value < b.l_hi:
+        return REGION_L
+    return REGION_TL
+
+
+def classify(values, b: Boundaries):
+    """Vectorized region codes.  Region edges follow §IV-A1 exactly:
+    TS: (-inf, s_lo]; S: (s_lo, s_hi); N: [s_hi, l_lo]; L: (l_lo, l_hi);
+    TL: [l_hi, inf)."""
+    v = jnp.asarray(values)
+    code = jnp.full(v.shape, REGION_N, dtype=jnp.int32)
+    code = jnp.where(v <= b.s_lo, REGION_TS, code)
+    code = jnp.where((v > b.s_lo) & (v < b.s_hi), REGION_S, code)
+    code = jnp.where((v > b.l_lo) & (v < b.l_hi), REGION_L, code)
+    code = jnp.where(v >= b.l_hi, REGION_TL, code)
+    return code
+
+
+def classify_np(values: np.ndarray, b: Boundaries) -> np.ndarray:
+    v = np.asarray(values)
+    code = np.full(v.shape, REGION_N, dtype=np.int32)
+    code[v <= b.s_lo] = REGION_TS
+    code[(v > b.s_lo) & (v < b.s_hi)] = REGION_S
+    code[(v > b.l_lo) & (v < b.l_hi)] = REGION_L
+    code[v >= b.l_hi] = REGION_TL
+    return code

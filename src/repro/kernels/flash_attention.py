@@ -1,0 +1,87 @@
+"""Pallas TPU flash attention (causal, GQA) — the model stack's compute
+hot-spot kernel.
+
+Grid: (batch*kv_head*group, q_blocks).  Each program streams KV blocks for
+one query block, keeping the (Bq, Bk) score tile and the (Bq, hd) output
+accumulator in VMEM — the (S, S) score matrix never touches HBM, which is
+the flash win the jnp blocked path cannot express at the XLA level
+(§Perf A3).  Causality skips KV blocks strictly above the diagonal via
+fori_loop bounds.
+
+Layouts (one (batch, head) slice per program):
+  q: (S, hd)  k/v: (S, hd)  out: (S, hd)
+Block shapes: (BQ, hd) queries, (BK, hd) keys/values; fp32 accumulation.
+
+Validated in interpret mode against ref.flash_attention_ref for shape/dtype
+sweeps (tests/test_kernels_flash.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int,
+                  scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale            # (BQ, hd)
+    hd = q.shape[-1]
+
+    m0 = jnp.full((bq,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((bq,), jnp.float32)
+    a0 = jnp.zeros((bq, hd), jnp.float32)
+
+    q_pos = qi * bq + jax.lax.iota(jnp.int32, bq)        # (BQ,)
+    # last KV block that intersects the causal triangle (ceil for bq < bk)
+    n_kv = ((qi + 1) * bq + bk - 1) // bk
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice(k_ref[0], (j * bk, 0),
+                                  (bk, hd)).astype(jnp.float32)
+        v = jax.lax.dynamic_slice(v_ref[0], (j * bk, 0),
+                                  (bk, hd)).astype(jnp.float32)
+        s = q @ k.T                                      # (BQ, BK)
+        k_pos = j * bk + jax.lax.iota(jnp.int32, bk)
+        causal = q_pos[:, None] >= k_pos[None, :]
+        s = jnp.where(causal, s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        acc = acc * corr[:, None] + p @ v
+        return m_new, l, acc
+
+    m, l, acc = jax.lax.fori_loop(0, n_kv, body, (m0, l0, a0))
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bq", "bk", "interpret"))
+def flash_attention_pallas(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                           bq: int = 512, bk: int = 512,
+                           interpret: bool = False) -> jnp.ndarray:
+    """q: (BH, S, hd); k/v: (BH, S, hd) (kv already expanded per q-head or
+    GQA-shared via the ops wrapper).  Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    if S % bq != 0 or S % bk != 0:
+        raise ValueError(f"seq {S} must divide block sizes ({bq},{bk})")
+    scale = hd ** -0.5
+    grid = (BH, S // bq)
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, S, hd), lambda b, i: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        interpret=interpret,
+    )(q, k, v)

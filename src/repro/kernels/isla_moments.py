@@ -1,0 +1,125 @@
+"""Pallas TPU kernel for ISLA Phase 1: classify + masked moment reduction.
+
+The paper's Alg. 1 is a scalar loop over samples; the TPU-native version is a
+tiled, vectorized reduction: each grid step streams one (TM, 128) tile
+HBM -> VMEM, computes the S/L masks on the VPU, and accumulates the eight
+moment scalars into a single (2, 4) output block that every grid step maps to
+(sequential-grid accumulation — the standard TPU reduction idiom).
+
+The *strided* variant is the fused "sample while reducing" path: the input
+index_map selects every ``stride``-th tile, so HBM traffic is cut by the
+sampling rate instead of gathering a sample first (which would read the full
+tensor once AND write the sample).  Tile-granular sampling of i.i.d.-
+positioned data is statistically equivalent to element sampling at the same
+rate; see DESIGN.md §3.
+
+Padding contract: callers pad the tail with any value strictly inside the N
+region ((s_hi + l_lo)/2 is always safe) — N-region values contribute to
+neither S nor L, so no validity mask is needed.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128          # TPU vector lane width
+DEFAULT_TM = 512    # rows per tile -> tile = 512*128*4B = 256 KiB VMEM
+
+
+def _moments_kernel(bounds_ref, x_ref, o_ref):
+    """One grid step: accumulate tile moments into o_ref (2, 4)."""
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    s_lo, s_hi = bounds_ref[0], bounds_ref[1]
+    l_lo, l_hi = bounds_ref[2], bounds_ref[3]
+
+    ms = ((x > s_lo) & (x < s_hi)).astype(jnp.float32)
+    ml = ((x > l_lo) & (x < l_hi)).astype(jnp.float32)
+    xs = x * ms
+    xl = x * ml
+    # rows: (S, L); cols: (count, s1, s2, s3)
+    tile = jnp.stack([
+        jnp.stack([jnp.sum(ms), jnp.sum(xs), jnp.sum(xs * x),
+                   jnp.sum(xs * x * x)]),
+        jnp.stack([jnp.sum(ml), jnp.sum(xl), jnp.sum(xl * x),
+                   jnp.sum(xl * x * x)]),
+    ])
+    o_ref[...] += tile
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tm", "stride", "interpret"))
+def isla_moments_pallas(values2d: jnp.ndarray, bounds: jnp.ndarray,
+                        tm: int = DEFAULT_TM, stride: int = 1,
+                        interpret: bool = False) -> jnp.ndarray:
+    """Tiled ISLA moments.
+
+    values2d: (rows, 128), rows % tm == 0; bounds: (4,) fp32
+    (s_lo, s_hi, l_lo, l_hi).  stride > 1 reads every stride-th tile only.
+    Returns (2, 4) fp32 moments.
+    """
+    rows, lane = values2d.shape
+    if lane != LANE:
+        raise ValueError(f"last dim must be {LANE}, got {lane}")
+    if rows % tm != 0:
+        raise ValueError(f"rows {rows} not a multiple of tile rows {tm}")
+    n_tiles = rows // tm
+    n_sel = max(1, n_tiles // stride) if stride > 1 else n_tiles
+
+    grid_spec = pl.GridSpec(
+        grid=(n_sel,),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # bounds: tiny, replicated
+            pl.BlockSpec((tm, LANE), lambda i: (i * stride, 0)),
+        ],
+        out_specs=pl.BlockSpec((2, 4), lambda i: (0, 0)),
+    )
+    return pl.pallas_call(
+        _moments_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((2, 4), jnp.float32),
+        interpret=interpret,
+    )(bounds.astype(jnp.float32), values2d)
+
+
+def _pilot_kernel(x_ref, o_ref):
+    x = x_ref[...].astype(jnp.float32)
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[3] = jnp.min(x)  # seed min with the first tile's min
+
+    o_ref[0] += jnp.float32(x.size)
+    o_ref[1] += jnp.sum(x)
+    o_ref[2] += jnp.sum(x * x)
+    o_ref[3] = jnp.minimum(o_ref[3], jnp.min(x))
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def pilot_stats_pallas(values2d: jnp.ndarray, tm: int = DEFAULT_TM,
+                       interpret: bool = False) -> jnp.ndarray:
+    """Fused pre-estimation statistics: (count, sum, sumsq, min)."""
+    rows, lane = values2d.shape
+    if lane != LANE:
+        raise ValueError(f"last dim must be {LANE}, got {lane}")
+    if rows % tm != 0:
+        raise ValueError(f"rows {rows} not a multiple of tile rows {tm}")
+    n_tiles = rows // tm
+    grid_spec = pl.GridSpec(
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec((tm, LANE), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((4,), lambda i: (0,)),
+    )
+    return pl.pallas_call(
+        _pilot_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((4,), jnp.float32),
+        interpret=interpret,
+    )(values2d)

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These define the numerical contract; every kernel test sweeps shapes/dtypes
+and asserts allclose against these.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+def isla_moments_ref(values: jnp.ndarray,
+                     s_lo: float, s_hi: float, l_lo: float, l_hi: float
+                     ) -> jnp.ndarray:
+    """(2, 4) array: rows = (S, L), cols = (count, s1, s2, s3).
+
+    Region edges per paper §IV-A1: S = (s_lo, s_hi) open, L = (l_lo, l_hi)
+    open.  Accumulation in fp32 regardless of input dtype.
+    """
+    v = values.astype(jnp.float32).reshape(-1)
+
+    def mom(mask):
+        m = mask.astype(jnp.float32)
+        vm = v * m
+        return jnp.stack([jnp.sum(m), jnp.sum(vm), jnp.sum(vm * v),
+                          jnp.sum(vm * v * v)])
+
+    ms = (v > s_lo) & (v < s_hi)
+    ml = (v > l_lo) & (v < l_hi)
+    return jnp.stack([mom(ms), mom(ml)])
+
+
+def isla_moments_strided_ref(values2d: jnp.ndarray, stride: int,
+                             s_lo: float, s_hi: float, l_lo: float,
+                             l_hi: float) -> jnp.ndarray:
+    """Oracle for the strided (tile-sampled) variant: only every ``stride``-th
+    row-tile of the (rows, 128) input participates."""
+    rows = values2d.shape[0]
+    sel = values2d[jnp.arange(0, rows, stride)]
+    return isla_moments_ref(sel, s_lo, s_hi, l_lo, l_hi)
+
+
+def pilot_stats_ref(values: jnp.ndarray) -> jnp.ndarray:
+    """(4,) array: (count, sum, sumsq, min) in fp32."""
+    v = values.astype(jnp.float32).reshape(-1)
+    return jnp.stack([jnp.float32(v.shape[0]), jnp.sum(v), jnp.sum(v * v),
+                      jnp.min(v)])
+
+
+def flash_attention_ref(q, k, v) -> "jnp.ndarray":
+    """Causal attention oracle for the flash kernel.
+    q/k/v: (BH, S, hd) -> (BH, S, hd), fp32 softmax."""
+    import jax
+    qf = q.astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqh,bkh->bqk", qf * scale, k.astype(jnp.float32))
+    S = q.shape[1]
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

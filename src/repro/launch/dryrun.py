@@ -1,0 +1,220 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS_EXTRA", ""))
+
+"""Multi-pod dry-run: .lower().compile() every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any jax import (jax locks the device count
+on first init).  Do not set this flag globally — smoke tests and benches see
+1 device.
+
+Per cell this produces dryrun_out/<arch>__<shape>__<mesh>.json with:
+  memory_analysis (per-device bytes), cost_analysis (flops/bytes),
+  collective table + roofline terms (repro.roofline), timing, and the
+  optimized HLO (gzipped) for §Perf iteration.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch yi-34b --shape train_4k \
+      --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh both] [--force]
+"""
+import argparse  # noqa: E402
+import functools  # noqa: E402
+import gzip  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from ..configs import SHAPES, get_config, list_archs, shape_applicable  # noqa: E402
+from ..models import model as model_lib  # noqa: E402
+from ..sharding import (activation_constraint, batch_specs, cache_specs,  # noqa: E402
+                        opt_state_specs, param_specs, shardings)
+from ..sharding.context import use_mesh  # noqa: E402
+from ..train.optimizer import abstract_opt_state  # noqa: E402
+from ..train.train_step import TrainConfig, train_step  # noqa: E402
+from .mesh import make_production_mesh, mesh_devices  # noqa: E402
+from .specs_io import input_specs  # noqa: E402
+
+OUT_DIR = os.environ.get("DRYRUN_OUT", "dryrun_out")
+
+
+def _with_shardings(mesh, tree, spec_fn, cfg):
+    specs = spec_fn(cfg, mesh, tree)
+    sh = shardings(mesh, specs)
+    return jax.tree_util.tree_map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        tree, sh), sh
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               tcfg: TrainConfig = TrainConfig()):
+    """Build + lower one cell; returns (lowered, meta)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    spec = input_specs(cfg, shape_name)
+    aparams = model_lib.abstract_params(cfg)
+    aparams_sh, param_sh = _with_shardings(mesh, aparams, param_specs, cfg)
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "devices": mesh_devices(mesh),
+        "params": cfg.n_params(), "active_params": cfg.n_active_params(),
+        "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+        "kind": spec["kind"],
+    }
+    with mesh, use_mesh(mesh):
+        if spec["kind"] == "train":
+            constraint = activation_constraint(cfg, mesh)
+            aopt = abstract_opt_state(aparams)
+            aopt_sh, opt_sh = _with_shardings(mesh, aopt, opt_state_specs,
+                                              cfg)
+            abatch = spec["batch"]
+            abatch_sh, batch_sh = _with_shardings(mesh, abatch, batch_specs,
+                                                  cfg)
+            step = functools.partial(train_step, cfg, tcfg,
+                                     constraint=constraint)
+            lowered = jax.jit(
+                step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            ).lower(aparams_sh, aopt_sh, abatch_sh)
+        elif spec["kind"] == "prefill":
+            constraint = activation_constraint(cfg, mesh)
+            abatch_sh, batch_sh = _with_shardings(mesh, spec["batch"],
+                                                  batch_specs, cfg)
+            acache_sh, cache_sh = _with_shardings(mesh, spec["cache"],
+                                                  cache_specs, cfg)
+            fn = functools.partial(model_lib.serve_prefill, cfg,
+                                   constraint=constraint)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(param_sh, batch_sh, cache_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(2,),
+            ).lower(aparams_sh, abatch_sh, acache_sh)
+        else:  # decode
+            abatch_sh, batch_sh = _with_shardings(mesh, spec["batch"],
+                                                  batch_specs, cfg)
+            acache_sh, cache_sh = _with_shardings(mesh, spec["cache"],
+                                                  cache_specs, cfg)
+            fn = functools.partial(model_lib.serve_decode, cfg)
+            lowered = jax.jit(
+                fn,
+                in_shardings=(param_sh, batch_sh["token"], batch_sh["pos"],
+                              cache_sh),
+                out_shardings=(None, cache_sh),
+                donate_argnums=(3,),
+            ).lower(aparams_sh, abatch_sh["token"], abatch_sh["pos"],
+                    acache_sh)
+    return lowered, meta, cfg
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             force: bool = False, save_hlo: bool = True) -> dict:
+    mesh_name = "multi" if multi_pod else "single"
+    os.makedirs(out_dir, exist_ok=True)
+    out_path = os.path.join(out_dir, f"{arch}__{shape_name}__{mesh_name}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+    cfg = get_config(arch)
+    ok, why = shape_applicable(cfg, SHAPES[shape_name])
+    if not ok:
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "skip", "reason": why}
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+        return result
+    t0 = time.time()
+    try:
+        lowered, meta, cfg = lower_cell(arch, shape_name, multi_pod)
+        t_lower = time.time() - t0
+        t1 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t1
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        result = dict(meta)
+        result.update({
+            "status": "ok",
+            "t_lower_s": round(t_lower, 2),
+            "t_compile_s": round(t_compile, 2),
+            "memory_analysis": {
+                k: int(getattr(mem, k, 0) or 0) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes")},
+            "cost_analysis": {k: float(v) for k, v in (cost or {}).items()
+                              if isinstance(v, (int, float))},
+        })
+        hlo_path = out_path.replace(".json", ".hlo.gz")
+        if save_hlo:
+            txt = compiled.as_text()
+            with gzip.open(hlo_path, "wt") as f:
+                f.write(txt)
+            result["hlo_path"] = hlo_path
+            # roofline terms (needs the HLO text + config)
+            try:
+                from ..roofline.analysis import analyze_cell
+                result["roofline"] = analyze_cell(txt, cfg,
+                                                  SHAPES[shape_name],
+                                                  result)
+            except Exception as e:  # roofline failure is not a cell failure
+                result["roofline_error"] = f"{type(e).__name__}: {e}"
+    except Exception as e:
+        result = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                  "status": "fail",
+                  "error": f"{type(e).__name__}: {e}",
+                  "traceback": traceback.format_exc()[-4000:]}
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-hlo", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    archs = list_archs() if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if args.shape is None else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, args.out, force=args.force,
+                             save_hlo=not args.no_hlo)
+                status = r.get("status")
+                line = (f"{arch:24s} {shape:12s} "
+                        f"{'multi ' if mp else 'single'} -> {status}")
+                if status == "ok":
+                    ca = r.get("cost_analysis", {})
+                    line += (f"  flops/dev={ca.get('flops', 0):.3e}"
+                             f"  lower={r['t_lower_s']}s"
+                             f" compile={r['t_compile_s']}s")
+                elif status == "fail":
+                    line += "  " + r.get("error", "")[:160]
+                    failures += 1
+                elif status == "skip":
+                    line += "  " + r.get("reason", "")
+                print(line, flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

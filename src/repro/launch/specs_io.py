@@ -1,0 +1,57 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input, per
+(arch x shape).  Weak-type-correct, shardable, no device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ArchConfig, ShapeConfig
+from ..models import model as model_lib
+
+
+def train_input_specs(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    s_tok = S - cfg.frontend_len
+    out = {
+        "tokens": jax.ShapeDtypeStruct((B, s_tok), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((B, s_tok), jnp.int32),
+    }
+    if cfg.frontend is not None:
+        out["prefix_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.frontend_len, cfg.d_model), jnp.dtype(cfg.param_dtype))
+    return out
+
+
+def prefill_input_specs(cfg: ArchConfig, shape: ShapeConfig
+                        ) -> Tuple[Dict[str, Any], Any]:
+    """(batch specs, abstract cache) for a prefill of the full sequence."""
+    batch = train_input_specs(cfg, shape)
+    del batch["labels"]
+    cache = model_lib.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    return batch, cache
+
+
+def decode_input_specs(cfg: ArchConfig, shape: ShapeConfig
+                       ) -> Tuple[Dict[str, Any], Any]:
+    """(decode inputs, abstract cache at full context length)."""
+    B = shape.global_batch
+    inputs = {
+        "token": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+    }
+    cache = model_lib.abstract_cache(cfg, B, shape.seq_len)
+    return inputs, cache
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    shape = SHAPES[shape_name]
+    if shape.kind == "train":
+        return {"kind": "train", "batch": train_input_specs(cfg, shape)}
+    if shape.kind == "prefill":
+        batch, cache = prefill_input_specs(cfg, shape)
+        return {"kind": "prefill", "batch": batch, "cache": cache}
+    batch, cache = decode_input_specs(cfg, shape)
+    return {"kind": "decode", "batch": batch, "cache": cache}

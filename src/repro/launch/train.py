@@ -1,0 +1,184 @@
+"""Fault-tolerant training driver.
+
+Runs the sharded train step under a supervisor that:
+  * checkpoints asynchronously every --ckpt-every steps (atomic commit),
+  * simulates data-group failures at scheduled steps (--fail "step:groups"),
+  * on failure: rebuilds the mesh via elastic.remesh_plan, restores the last
+    committed checkpoint re-sharded onto the surviving mesh, replays the
+    deterministic data stream, and converts lost data-parallelism into
+    gradient-accumulation so the global batch (and the optimization
+    trajectory) is preserved.
+
+On this CPU container the mesh is host-device based (use
+XLA_FLAGS=--xla_force_host_platform_device_count=8 for a multi-device drill);
+on a real cluster the same driver runs per host with jax.distributed.
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from ..configs import get_config
+from ..models import model as model_lib
+from ..sharding import (activation_constraint, batch_specs, opt_state_specs,
+                        param_specs, shardings)
+from ..train import checkpoint as ckpt
+from ..train.data import SyntheticStream
+from ..train.elastic import FailureInjector, remesh_plan, rescale_batch
+from ..train.optimizer import (OptimizerConfig, abstract_opt_state,
+                               init_opt_state)
+from ..train.train_step import TrainConfig, train_step
+from .mesh import make_host_mesh
+
+
+def _fingerprint(cfg, tcfg) -> str:
+    return f"{cfg.name}|{cfg.n_layers}|{cfg.d_model}|{tcfg.opt.lr}"
+
+
+def build_step(cfg, tcfg, mesh):
+    """jit train step with shardings when the mesh has >1 device."""
+    if mesh is None:
+        return jax.jit(functools.partial(train_step, cfg, tcfg)), None
+    from ..sharding.context import use_mesh
+    constraint = activation_constraint(cfg, mesh)
+
+    def fn(params, opt_state, batch):
+        with use_mesh(mesh):
+            return train_step(cfg, tcfg, params, opt_state, batch,
+                              constraint=constraint)
+
+    ap = model_lib.abstract_params(cfg)
+    p_sh = shardings(mesh, param_specs(cfg, mesh, ap))
+    o_sh = shardings(mesh, opt_state_specs(cfg, mesh,
+                                           abstract_opt_state(ap)))
+    step = jax.jit(fn, in_shardings=(p_sh, o_sh, None),
+                   out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
+    return step, p_sh
+
+
+def run(args) -> dict:
+    cfg = get_config(args.arch, reduced=args.reduced)
+    tcfg = TrainConfig(
+        opt=OptimizerConfig(lr=args.lr, warmup_steps=args.warmup,
+                            total_steps=args.steps),
+        microbatches=args.microbatches,
+        isla_telemetry=True, telemetry_exact=args.telemetry_exact,
+    )
+    n_dev = len(jax.devices())
+    mesh_shape = None
+    mesh = None
+    if n_dev > 1:
+        data = max(1, n_dev // args.model_parallel)
+        mesh_shape = (data, args.model_parallel)
+        mesh = make_host_mesh(mesh_shape, ("data", "model"))
+
+    params = model_lib.init_params(cfg, jax.random.key(args.seed))
+    opt_state = init_opt_state(params)
+    stream = SyntheticStream(cfg, batch=args.batch, seq=args.seq)
+    step_fn, _ = build_step(cfg, tcfg, mesh)
+    injector = FailureInjector(
+        [(int(s.split(":")[0]), int(s.split(":")[1]))
+         for s in (args.fail or [])])
+    writer = ckpt.AsyncCheckpointer(args.ckpt_dir, keep=3) \
+        if args.ckpt_dir else None
+    fp = _fingerprint(cfg, tcfg)
+
+    start = 0
+    if args.ckpt_dir and args.resume:
+        ckpt.clean_tmp(args.ckpt_dir)
+        last = ckpt.latest_step(args.ckpt_dir)
+        if last is not None:
+            restored, _ = ckpt.restore(
+                args.ckpt_dir, last,
+                {"params": params, "opt": opt_state}, fingerprint=fp)
+            params, opt_state = restored["params"], restored["opt"]
+            start = last
+            print(f"[resume] from step {last}")
+
+    history = []
+    step = start
+    while step < args.steps:
+        n_fail = injector.failures_at(step)
+        if n_fail and mesh is not None:
+            # ---- simulated failure: shrink mesh, restore, replay
+            plan = remesh_plan(mesh_shape, ("data", "model"), n_fail)
+            print(f"[elastic] step {step}: {plan.note}")
+            _, accum = rescale_batch(args.batch, mesh_shape[0],
+                                     plan.shape[0])
+            mesh_shape = plan.shape
+            mesh = make_host_mesh(plan.shape, plan.axis_names)
+            tcfg = TrainConfig(opt=tcfg.opt,
+                               microbatches=tcfg.microbatches * accum,
+                               isla_telemetry=tcfg.isla_telemetry)
+            step_fn, _ = build_step(cfg, tcfg, mesh)
+            if writer:
+                writer.wait()
+            last = ckpt.latest_step(args.ckpt_dir)
+            restored, _ = ckpt.restore(
+                args.ckpt_dir, last, {"params": params, "opt": opt_state},
+                fingerprint=fp)
+            params, opt_state = restored["params"], restored["opt"]
+            step = last
+            continue
+
+        t0 = time.perf_counter()
+        batch = stream.batch_at(step)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        loss = float(metrics["loss"])
+        dt = time.perf_counter() - t0
+        history.append({"step": step, "loss": loss, "dt_s": round(dt, 3),
+                        **{k: float(v) for k, v in metrics.items()
+                           if hasattr(v, "shape") and v.shape == ()}})
+        if step % args.log_every == 0:
+            isla = metrics.get("loss_mean_isla")
+            print(f"step {step:5d} loss {loss:.4f} "
+                  f"({dt:.2f}s)"
+                  + (f" isla_loss {float(isla):.4f}" if isla is not None
+                     else ""), flush=True)
+        step += 1
+        if writer and step % args.ckpt_every == 0:
+            writer.submit(step, {"params": params, "opt": opt_state},
+                          fingerprint=fp)
+    if writer:
+        writer.submit(step, {"params": params, "opt": opt_state},
+                      fingerprint=fp)
+        writer.close()
+    return {"history": history, "final_loss": history[-1]["loss"]
+            if history else None}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--telemetry-exact", action="store_true")
+    ap.add_argument("--fail", nargs="*", default=None,
+                    help="step:groups failure injections, e.g. 50:1")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    result = run(args)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(result, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+from . import attention, frontends, layers, mamba2, model, moe, transformer
+
+__all__ = ["attention", "frontends", "layers", "mamba2", "model", "moe",
+           "transformer"]

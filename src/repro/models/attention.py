@@ -1,0 +1,200 @@
+"""GQA/MQA attention with RoPE, causal masking and a KV cache decode path.
+
+Layouts:
+  q:  (B, S, H, hd)    k/v: (B, S, KV, hd)    cache: (B, S_max, KV, hd)
+GQA repeats each kv head H//KV times (broadcast via reshape, no copy until
+einsum).  Scores/softmax run in fp32.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import apply_rope, pdtype
+
+Params = Dict[str, jnp.ndarray]
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg: ArchConfig, key) -> Params:
+    d = cfg.d_model
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    dt = pdtype(cfg)
+    s = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, cfg.attn_dim)) * s).astype(dt),
+        "wk": (jax.random.normal(k2, (d, cfg.kv_dim)) * s).astype(dt),
+        "wv": (jax.random.normal(k3, (d, cfg.kv_dim)) * s).astype(dt),
+        "wo": (jax.random.normal(k4, (cfg.attn_dim, d))
+               * cfg.attn_dim ** -0.5).astype(dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.attn_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    return p
+
+
+def _project_qkv(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                 positions: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    B, S, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q: (B,Sq,H,hd), k: (B,Sk,KV,hd) -> scores (B,H,Sq,Sk) fp32."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k,
+                   preferred_element_type=jnp.float32)
+    return s.reshape(B, KV * G, Sq, k.shape[1]) * (hd ** -0.5)
+
+
+def _gqa_out(probs: jnp.ndarray, v: jnp.ndarray, dtype) -> jnp.ndarray:
+    """probs: (B,H,Sq,Sk) fp32, v: (B,Sk,KV,hd) -> (B,Sq,H*hd)."""
+    B, H, Sq, Sk = probs.shape
+    KV = v.shape[2]
+    G = H // KV
+    pg = probs.reshape(B, KV, G, Sq, Sk)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", pg.astype(dtype), v)
+    return o.reshape(B, Sq, H * v.shape[3])
+
+
+# Blocked online-softmax at/above this seq len.  §Perf A3 measured that at
+# 4k the jnp-level blocking INCREASES HBM traffic (fp32 scan carries
+# round-trip per block) — the flash win needs the fused Pallas kernel
+# (kernels/flash_attention.py).  jnp blocking stays for >=8k prefill where
+# the dense (B,H,S,S) tensor wouldn't fit memory at all.
+BLOCKED_THRESHOLD = 8192
+
+
+def attention_train(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                    positions: jnp.ndarray) -> jnp.ndarray:
+    """Causal self-attention (training / prefill).
+
+    Long sequences use the blocked online-softmax path (§Perf A3): the
+    (B,H,S,S) score/prob tensors never materialize — only (B,H,S,block)
+    working sets — cutting the attention HBM term by ~S/block.  The Pallas
+    flash kernel (repro.kernels.flash_attention) implements the same
+    contract for TPU; this jnp path is its at-scale oracle and the dry-run
+    lowering."""
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    S = x.shape[1]
+    if S >= BLOCKED_THRESHOLD and S % 1024 == 0:
+        out = _blocked_attention(q, k, v, positions, block=1024)
+    else:
+        scores = _gqa_scores(q, k)                   # (B,H,S,S)
+        causal = positions[:, None, :, None] >= positions[:, None, None, :]
+        scores = jnp.where(causal, scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1)
+        out = _gqa_out(probs, v, x.dtype)
+    return out @ params["wo"]
+
+
+def _blocked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                       positions: jnp.ndarray, block: int) -> jnp.ndarray:
+    """Exact causal attention with online softmax over KV blocks.
+
+    q: (B,S,H,hd); k/v: (B,S,KV,hd).  Returns (B,S,H*hd).
+    Carry: running max m, normalizer l, accumulator acc — flash-attention
+    recurrence (Rabe&Staats / FlashAttention), fp32 accumulation.
+    """
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    nb = S // block
+    qg = q.reshape(B, S, KV, G, hd)
+    scale = hd ** -0.5
+
+    kb = k.reshape(B, nb, block, KV, hd)
+    vb = v.reshape(B, nb, block, KV, hd)
+    pb = positions.reshape(B, nb, block)
+
+    def step(carry, inp):
+        m, l, acc = carry                       # (B,KV,G,S), ., (B,KV,G,S,hd)
+        k_j, v_j, p_j = inp                     # (B,block,KV,hd), ., (B,block)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qg, k_j,
+                       preferred_element_type=jnp.float32) * scale
+        causal = positions[:, None, None, :, None] >= \
+            p_j[:, None, None, None, :]
+        s = jnp.where(causal, s, NEG_INF)       # (B,KV,G,S,block)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum("bkgqs,bskh->bkgqh", p.astype(v_j.dtype), v_j,
+                        preferred_element_type=jnp.float32)
+        acc = acc * corr[..., None] + pv
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, S), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, S), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, S, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        step, (m0, l0, a0),
+        (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+         jnp.moveaxis(pb, 1, 0)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]    # (B,KV,G,S,hd)
+    out = jnp.moveaxis(out, 3, 1)                   # (B,S,KV,G,hd)
+    return out.reshape(B, S, H * hd).astype(q.dtype)
+
+
+def attention_prefill(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                      positions: jnp.ndarray, cache_k: jnp.ndarray,
+                      cache_v: jnp.ndarray
+                      ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Causal attention that also fills the KV cache (cache len == S)."""
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    new_k = jax.lax.dynamic_update_slice(cache_k, k.astype(cache_k.dtype),
+                                         (0, 0, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache_v, v.astype(cache_v.dtype),
+                                         (0, 0, 0, 0))
+    scores = _gqa_scores(q, k)
+    causal = positions[:, None, :, None] >= positions[:, None, None, :]
+    scores = jnp.where(causal, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, v, x.dtype)
+    return out @ params["wo"], new_k, new_v
+
+
+def attention_decode(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                     pos: jnp.ndarray, cache_k: jnp.ndarray,
+                     cache_v: jnp.ndarray
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Single-token decode: x (B, 1, d), cache (B, S_max, KV, hd); ``pos`` is
+    the (B,)-shaped current position (tokens < pos are valid)."""
+    B = x.shape[0]
+    positions = pos[:, None]                                   # (B, 1)
+    q, k, v = _project_qkv(cfg, params, x, positions)
+    # write the new kv at position pos (vmapped dynamic slice over batch)
+    def upd(ck, cv, kk, vv, p):
+        ck = jax.lax.dynamic_update_slice(ck, kk.astype(ck.dtype), (p, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, vv.astype(cv.dtype), (p, 0, 0))
+        return ck, cv
+    new_k, new_v = jax.vmap(upd)(cache_k, cache_v, k, v, pos)
+    scores = _gqa_scores(q, new_k)                             # (B,H,1,Smax)
+    smax = cache_k.shape[1]
+    valid = jnp.arange(smax)[None, None, None, :] <= pos[:, None, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = _gqa_out(probs, new_v, x.dtype)
+    return out @ params["wo"], new_k, new_v

@@ -1,0 +1,27 @@
+"""Modality frontend STUBS for [audio] / [vlm] architectures.
+
+Per the assignment, the transformer BACKBONE is the deliverable; the modality
+frontend provides precomputed frame/patch embeddings via ``input_specs()``.
+These helpers generate those embeddings for smoke tests / examples and define
+their abstract shapes for the dry-run.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+
+def frontend_embed_shape(cfg: ArchConfig, batch: int):
+    """(B, frontend_len, d_model) prefix embeddings."""
+    if cfg.frontend is None:
+        return None
+    return (batch, cfg.frontend_len, cfg.d_model)
+
+
+def synth_frontend_embeds(cfg: ArchConfig, batch: int, key) -> jnp.ndarray:
+    """Deterministic stand-in for EnCodec frames / SigLIP patches."""
+    shape = frontend_embed_shape(cfg, batch)
+    return (jax.random.normal(key, shape) * 0.02).astype(
+        jnp.dtype(cfg.param_dtype))

@@ -1,0 +1,169 @@
+"""Shared model layers: norms, RoPE, MLPs, embedding, chunked CE loss.
+
+Functional style: params are plain dicts of jnp arrays; every layer is
+``fn(cfg, params, x, ...) -> y``.  Compute dtype bf16, norm/softmax math fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+
+Params = Dict[str, jnp.ndarray]
+
+
+def pdtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.param_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ArchConfig, key) -> Params:
+    if cfg.norm == "ln_nonparam":
+        return {}
+    return {"scale": jnp.ones((cfg.d_model,), pdtype(cfg))}
+
+
+def apply_norm(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+               eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "ln_nonparam":
+        # olmo: LayerNorm without learnable scale/bias
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    scale = params["scale"].astype(jnp.float32)
+    if cfg.norm == "rmsnorm_1p":      # gemma convention: (1 + scale)
+        scale = 1.0 + scale
+    return (y * scale).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jnp.ndarray:
+    exponent = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponent)  # (head_dim/2,)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float
+               ) -> jnp.ndarray:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                       # (hd/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,hd/2)
+    angles = angles[..., None, :]                             # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (swiglu / gelu)
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(cfg: ArchConfig, key) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    k1, k2, k3 = jax.random.split(key, 3)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+    dt = pdtype(cfg)
+    if cfg.mlp == "swiglu":
+        return {
+            "w_gate": (jax.random.normal(k1, (d, f)) * scale_in).astype(dt),
+            "w_up": (jax.random.normal(k2, (d, f)) * scale_in).astype(dt),
+            "w_down": (jax.random.normal(k3, (f, d)) * scale_out).astype(dt),
+        }
+    return {
+        "w_in": (jax.random.normal(k1, (d, f)) * scale_in).astype(dt),
+        "w_out": (jax.random.normal(k2, (f, d)) * scale_out).astype(dt),
+    }
+
+
+def apply_mlp(cfg: ArchConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    if cfg.mlp == "swiglu":
+        g = x @ params["w_gate"]
+        u = x @ params["w_up"]
+        return (jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u) \
+            @ params["w_down"]
+    h = x @ params["w_in"]
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head / loss
+# ---------------------------------------------------------------------------
+
+
+def init_embed(cfg: ArchConfig, key) -> Params:
+    dt = pdtype(cfg)
+    k1, k2 = jax.random.split(key)
+    out = {"embedding": (jax.random.normal(
+        k1, (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(dt)}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = (jax.random.normal(
+            k2, (cfg.padded_vocab, cfg.d_model)) * 0.02).astype(dt)
+    return out
+
+
+def embed_tokens(cfg: ArchConfig, params: Params, tokens: jnp.ndarray
+                 ) -> jnp.ndarray:
+    return params["embedding"][tokens]
+
+
+def lm_logits(cfg: ArchConfig, params: Params, x: jnp.ndarray) -> jnp.ndarray:
+    head = params.get("lm_head", params["embedding"])
+    return x @ head.T
+
+
+def chunked_ce_loss(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                    labels: jnp.ndarray, mask: Optional[jnp.ndarray] = None
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Cross-entropy over the vocab, computed in sequence chunks so the
+    (B, S, V) logits tensor never materializes (V up to 257k).
+
+    Returns (sum_loss, per_token_loss) — per-token loss feeds the ISLA
+    telemetry engine.
+    """
+    B, S, D = x.shape
+    head = params.get("lm_head", params["embedding"])  # (V, D)
+    chunk = min(cfg.loss_chunk, S)
+    n_chunks = S // chunk if S % chunk == 0 else 1
+    if S % chunk != 0:
+        chunk = S
+        n_chunks = 1
+    xs = x.reshape(B, n_chunks, chunk, D).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    ms = mask.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(_, inp):
+        xc, lc, mc = inp
+        logits = (xc @ head.T).astype(jnp.float32)       # (B, chunk, V)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        # one-hot contraction, not take_along_axis: under vocab sharding the
+        # gather would all-gather the fp32 logits chunk; the contraction
+        # reduces over the sharded V locally + a scalar psum (§Perf C1).
+        onehot = jax.nn.one_hot(lc, logits.shape[-1], dtype=logits.dtype)
+        gold = jnp.einsum("bcv,bcv->bc", logits, onehot)
+        tok_loss = (logz - gold) * mc
+        return None, tok_loss
+
+    _, tok = jax.lax.scan(body, None, (xs, ls, ms))
+    per_token = tok.transpose(1, 0, 2).reshape(B, S)
+    return jnp.sum(per_token), per_token

@@ -1,0 +1,272 @@
+"""Mamba2 mixer (SSD — state-space duality), chunked scan + decode step.
+
+Per block:
+  in_proj -> [z | x | B | C | dt]     (gate, values, input/output maps, step)
+  causal depthwise conv (width d_conv) over [x|B|C], silu
+  dt = softplus(dt + dt_bias);  A = -exp(A_log)  (per head)
+  y = SSD(x, dt*A, B, C) + D*x
+  y = RMSNorm(y * silu(z));  out_proj
+
+SSD chunked algorithm (chunk Q):
+  da       = dt * A                       (B,S,H)
+  cum      = intra-chunk cumsum of da
+  Y_diag   = ((C_q . B_s) * exp(cum_q - cum_s) * dt_s)_{s<=q} x_s
+  S_chunk  = sum_s B_s * exp(cum_Q - cum_s) * dt_s * x_s       (H,N,P)
+  h_c      = h_{c-1} * exp(cum_Q) + S_chunk      (scan over chunks)
+  Y_inter  = (C_q . h_{c-1}) * exp(cum_q)
+Decode is the recurrence h <- h*exp(dt*A) + dt * B x per token.
+
+Oracle for tests: ``ssd_reference`` — the naive O(S^2) masked-attention form.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import pdtype
+
+Params = Dict[str, jnp.ndarray]
+
+
+def _mcfg(cfg: ArchConfig):
+    assert cfg.mamba is not None
+    return cfg.mamba
+
+
+def init_mamba(cfg: ArchConfig, key) -> Params:
+    """Projections are stored per-component (z/x/B/C/dt + per-stream convs),
+    NOT as one fused in_proj: a fused projection's output sharding cuts
+    across the z|x|B|C|dt split boundaries and GSPMD resharding floods the
+    step with all-gathers/permutes (§Perf B1).  Per-component weights give
+    head-clean sharding: x/z/dt shard with the heads over "model"; the
+    small shared B/C streams replicate."""
+    m = _mcfg(cfg)
+    d = cfg.d_model
+    H, P, N, G = m.n_heads, m.head_dim, m.d_state, m.n_groups
+    gn = G * N
+    keys = jax.random.split(key, 9)
+    dt = pdtype(cfg)
+    s = d ** -0.5
+    return {
+        "wz": (jax.random.normal(keys[0], (d, m.d_inner)) * s).astype(dt),
+        "wx": (jax.random.normal(keys[1], (d, m.d_inner)) * s).astype(dt),
+        "wB": (jax.random.normal(keys[2], (d, gn)) * s).astype(dt),
+        "wC": (jax.random.normal(keys[3], (d, gn)) * s).astype(dt),
+        "wdt": (jax.random.normal(keys[4], (d, H)) * s).astype(dt),
+        "conv_x_w": (jax.random.normal(keys[5], (m.d_conv, m.d_inner))
+                     * 0.2).astype(dt),
+        "conv_x_b": jnp.zeros((m.d_inner,), dt),
+        "conv_B_w": (jax.random.normal(keys[6], (m.d_conv, gn))
+                     * 0.2).astype(dt),
+        "conv_B_b": jnp.zeros((gn,), dt),
+        "conv_C_w": (jax.random.normal(keys[7], (m.d_conv, gn))
+                     * 0.2).astype(dt),
+        "conv_C_b": jnp.zeros((gn,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)).astype(jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm_scale": jnp.ones((m.d_inner,), dt),
+        "out_proj": (jax.random.normal(keys[8], (m.d_inner, d))
+                     * m.d_inner ** -0.5).astype(dt),
+    }
+
+
+def _causal_conv(w: jnp.ndarray, b: jnp.ndarray, x: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv: x (B,S,Cdim), w (K,Cdim)."""
+    K = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        out = out + pads[:, i:i + x.shape[1], :] * w[i]
+    return out + b
+
+
+def _split_conv_state(cfg: ArchConfig, conv: jnp.ndarray):
+    """Cache keeps one concatenated (B, K-1, d_inner + 2GN) tail."""
+    m = _mcfg(cfg)
+    gn = m.n_groups * m.d_state
+    return jnp.split(conv, [m.d_inner, m.d_inner + gn], axis=-1)
+
+
+def _segsum_exp(cum: jnp.ndarray) -> jnp.ndarray:
+    """exp(cum_q - cum_s) masked to s <= q.  cum: (..., Q) -> (..., Q, Q).
+
+    Mask BEFORE the exp: exp() of the (large, positive) upper-triangular
+    entries would be inf, and grad-of-where(inf) is NaN — the standard
+    safe-softmax trap."""
+    diff = cum[..., :, None] - cum[..., None, :]
+    Q = cum.shape[-1]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.exp(jnp.where(mask, diff, -jnp.inf))
+
+
+def ssd_chunked(x: jnp.ndarray, da: jnp.ndarray, dt: jnp.ndarray,
+                Bm: jnp.ndarray, Cm: jnp.ndarray, chunk: int,
+                h0: jnp.ndarray = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan.
+
+    x: (B,S,H,P); da = dt*A: (B,S,H); dt: (B,S,H);
+    Bm/Cm: (B,S,G,N) with H % G == 0; h0: (B,H,N,P) or None.
+    Returns (y (B,S,H,P), h_final (B,H,N,P)).  fp32 state math.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+    rep = H // G
+
+    # Intra-chunk tensors stay in the INPUT dtype (bf16 in production —
+    # §Perf B4 halves the SSD einsum traffic); cumsums/decays/state carries
+    # are fp32.
+    cdt = x.dtype
+    xr = x.reshape(Bsz, nc, Q, H, P)
+    dar = da.reshape(Bsz, nc, Q, H).astype(jnp.float32)
+    dtr = dt.reshape(Bsz, nc, Q, H).astype(cdt)
+    Br = jnp.repeat(Bm.reshape(Bsz, nc, Q, G, N), rep, axis=3
+                    ).astype(cdt)                              # (B,nc,Q,H,N)
+    Cr = jnp.repeat(Cm.reshape(Bsz, nc, Q, G, N), rep, axis=3
+                    ).astype(cdt)
+
+    cum = jnp.cumsum(dar, axis=2)                              # (B,nc,Q,H)
+    # ---- intra-chunk (diagonal blocks)
+    # einsum labels: b=batch, c=chunk, q/k=position-in-chunk, h=head,
+    # s=state(N), p=head_dim(P)
+    Lmat = _segsum_exp(jnp.moveaxis(cum, -1, 2))               # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcqhs,bckhs->bchqk", Cr, Br,
+                        preferred_element_type=jnp.float32)
+    w = (scores * Lmat).astype(cdt)                            # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchqk,bckh,bckhp->bcqhp", w, dtr, xr,
+                        preferred_element_type=jnp.float32)
+
+    # ---- chunk states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum).astype(cdt)
+    s_chunk = jnp.einsum("bcqhs,bcqh,bcqh,bcqhp->bchsp",
+                         Br, decay_to_end, dtr, xr,
+                         preferred_element_type=jnp.float32)   # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    # ---- inter-chunk recurrence
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def step(h, inp):
+        s_c, dec = inp                                         # (B,H,N,P),(B,H)
+        h_out = h                                              # state BEFORE chunk
+        h = h * dec[..., None, None] + s_c
+        return h, h_out
+
+    s_swap = jnp.moveaxis(s_chunk, 1, 0)                       # (nc,B,H,N,P)
+    d_swap = jnp.moveaxis(chunk_decay, 1, 0)                   # (nc,B,H)
+    h_final, h_prevs = jax.lax.scan(step, h0, (s_swap, d_swap))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                      # (B,nc,H,N,P)
+
+    # ---- inter-chunk output
+    y_inter = jnp.einsum("bcqhs,bchsp,bcqh->bcqhp",
+                         Cr, h_prevs, jnp.exp(cum))
+    y = (y_diag + y_inter).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), h_final
+
+
+def ssd_reference(x, da, dt, Bm, Cm) -> jnp.ndarray:
+    """Naive O(S^2) oracle (masked attention form) for tests."""
+    Bsz, S, H, P = x.shape
+    G, N = Bm.shape[2], Bm.shape[3]
+    rep = H // G
+    Br = jnp.repeat(Bm, rep, axis=2).astype(jnp.float32)
+    Cr = jnp.repeat(Cm, rep, axis=2).astype(jnp.float32)
+    cum = jnp.cumsum(da.astype(jnp.float32), axis=1)           # (B,S,H)
+    diff = cum[:, :, None, :] - cum[:, None, :, :]             # (B,q,s,H)
+    mask = jnp.tril(jnp.ones((S, S), bool))[None, :, :, None]
+    L = jnp.exp(jnp.where(mask, diff, -jnp.inf))
+    scores = jnp.einsum("bqhn,bshn->bqsh", Cr, Br)
+    w = scores * L
+    return jnp.einsum("bqsh,bsh,bshp->bqhp", w,
+                      dt.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)
+
+
+def apply_mamba_train(cfg: ArchConfig, params: Params, x: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Full-sequence mixer (train/prefill, no state io)."""
+    y, _, _ = _mamba_forward(cfg, params, x, h0=None, conv0=None)
+    return y
+
+
+def _mamba_forward(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                   h0, conv0):
+    from ..sharding.context import constrain_heads
+
+    m = _mcfg(cfg)
+    Bsz, S, _ = x.shape
+    H, P, N, G = m.n_heads, m.head_dim, m.d_state, m.n_groups
+    z = x @ params["wz"]
+    xs = x @ params["wx"]
+    Bs = x @ params["wB"]
+    Cs = x @ params["wC"]
+    dth = x @ params["wdt"]
+
+    def conv(name, stream, tail):
+        if tail is not None:  # decode: prepend conv state
+            full = jnp.concatenate([tail, stream], axis=1)
+            out = _causal_conv(params[f"conv_{name}_w"],
+                               params[f"conv_{name}_b"], full)
+            return out[:, tail.shape[1]:, :]
+        return _causal_conv(params[f"conv_{name}_w"],
+                            params[f"conv_{name}_b"], stream)
+
+    tails = (_split_conv_state(cfg, conv0) if conv0 is not None
+             else (None, None, None))
+    xc = conv("x", xs, tails[0])
+    Bc = conv("B", Bs, tails[1])
+    Cc = conv("C", Cs, tails[2])
+    tail_len = m.d_conv - 1
+    if conv0 is not None:
+        joined = jnp.concatenate(
+            [jnp.concatenate([t, s], axis=1)[:, -tail_len:, :]
+             for t, s in zip(tails, (xs, Bs, Cs))], axis=-1)
+        new_conv = joined
+    else:
+        new_conv = (jnp.concatenate(
+            [xs[:, -tail_len:, :], Bs[:, -tail_len:, :],
+             Cs[:, -tail_len:, :]], axis=-1) if S >= tail_len else None)
+    silu = lambda t: jax.nn.silu(t.astype(jnp.float32)).astype(x.dtype)
+    xc, Bc, Cc = silu(xc), silu(Bc), silu(Cc)
+    xh = constrain_heads(xc.reshape(Bsz, S, H, P), head_dim=2)
+    Bm = Bc.reshape(Bsz, S, G, N)
+    Cm = Cc.reshape(Bsz, S, G, N)
+    dt = jax.nn.softplus(dth.astype(jnp.float32) + params["dt_bias"])
+    dt = constrain_heads(dt, head_dim=2)
+    A = -jnp.exp(params["A_log"])                              # (H,)
+    da = dt * A
+    y, h_final = ssd_chunked(xh, da, dt, Bm, Cm, m.chunk, h0=h0)
+    y = y + xh.astype(jnp.float32).astype(y.dtype) \
+        * params["D"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, m.d_inner)
+    # gated RMSNorm
+    yf = y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32))
+    ms = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    yf = yf * jax.lax.rsqrt(ms + 1e-6) * params["norm_scale"].astype(
+        jnp.float32)
+    out = yf.astype(x.dtype) @ params["out_proj"]
+    return out, h_final, new_conv
+
+
+def mamba_state_shapes(cfg: ArchConfig, batch: int):
+    m = _mcfg(cfg)
+    G, N = m.n_groups, m.d_state
+    conv_dim = m.d_inner + 2 * G * N
+    return ((batch, m.n_heads, N, m.head_dim),           # h
+            (batch, m.d_conv - 1, conv_dim))             # conv tail
+
+
+def apply_mamba_decode(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                       h: jnp.ndarray, conv: jnp.ndarray):
+    """One-token decode: x (B,1,d); h (B,H,N,P); conv (B,K-1,conv_dim)."""
+    out, h_new, conv_new = _mamba_forward(cfg, params, x, h0=h, conv0=conv)
+    return out, h_new, conv_new

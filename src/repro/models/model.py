@@ -1,0 +1,124 @@
+"""Public model API: init / abstract shapes / train loss / prefill / decode.
+
+Batch contract (matches launch.input_specs):
+  train/prefill: {"tokens": (B, S_tok) int32, "labels": (B, S_tok) int32,
+                  optional "prefix_embeds": (B, F, d)}   with F + S_tok = S
+  decode:        {"token": (B, 1) int32, "pos": (B,) int32} + cache
+
+Loss = masked mean CE over token positions (+ MoE aux terms), plus ISLA
+telemetry hooks (per-token losses feed repro.core.metrics).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import transformer
+from .layers import (apply_norm, chunked_ce_loss, embed_tokens, init_embed,
+                     init_norm, lm_logits, pdtype)
+
+Params = Dict[str, Any]
+
+MOE_LB_COEF = 0.01
+MOE_Z_COEF = 1e-3
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        **init_embed(cfg, k1),
+        "blocks": transformer.init_stack(cfg, k2),
+        "final_norm": init_norm(cfg, k3),
+    }
+
+
+def abstract_params(cfg: ArchConfig) -> Params:
+    return jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.key(0))
+
+
+def _assemble_inputs(cfg: ArchConfig, params: Params, batch
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Embed tokens (+ frontend prefix).  Returns (x, positions, loss_mask)
+    over the FULL sequence; loss mask is 0 on prefix positions."""
+    tokens = batch["tokens"]
+    x = embed_tokens(cfg, params, tokens)
+    B, S_tok, _ = x.shape
+    if cfg.frontend is not None:
+        prefix = batch["prefix_embeds"].astype(x.dtype)
+        F = prefix.shape[1]
+        x = jnp.concatenate([prefix, x], axis=1)
+        mask = jnp.concatenate([
+            jnp.zeros((B, F), jnp.float32), jnp.ones((B, S_tok), jnp.float32)],
+            axis=1)
+    else:
+        mask = jnp.ones((B, S_tok), jnp.float32)
+    S = x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions, mask
+
+
+def train_loss(cfg: ArchConfig, params: Params, batch, constraint=None
+               ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """Mean CE loss + aux.  aux includes per-token losses (for ISLA
+    telemetry) and the MoE load-balance terms."""
+    x, positions, mask = _assemble_inputs(cfg, params, batch)
+    x, aux = transformer.forward_train(cfg, params, x, positions,
+                                       constraint=constraint)
+    x = apply_norm(cfg, params.get("final_norm", {}), x)
+    # labels over full sequence: prefix positions are masked anyway
+    labels = batch["labels"]
+    if cfg.frontend is not None:
+        pad = jnp.zeros(
+            (labels.shape[0], cfg.frontend_len), labels.dtype)
+        labels = jnp.concatenate([pad, labels], axis=1)
+    sum_loss, per_token = chunked_ce_loss(cfg, params, x, labels, mask)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = sum_loss / denom
+    if cfg.moe is not None:
+        loss = loss + MOE_LB_COEF * aux.get("moe_lb_loss", 0.0) \
+            + MOE_Z_COEF * aux.get("moe_z_loss", 0.0)
+    aux = dict(aux)
+    aux["per_token_loss"] = per_token
+    aux["loss_mask"] = mask
+    return loss, aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def serve_prefill(cfg: ArchConfig, params: Params, batch, cache,
+                  constraint=None):
+    """Returns (last-position logits, filled cache)."""
+    x, positions, _ = _assemble_inputs(cfg, params, batch)
+    x, cache = transformer.forward_prefill(cfg, params, x, positions, cache,
+                                           constraint=constraint)
+    x = apply_norm(cfg, params.get("final_norm", {}), x)
+    logits = lm_logits(cfg, params, x[:, -1:, :])
+    return logits, cache
+
+
+def serve_decode(cfg: ArchConfig, params: Params, token: jnp.ndarray,
+                 pos: jnp.ndarray, cache):
+    """One decode step: token (B, 1) -> logits (B, 1, V), updated cache."""
+    x = embed_tokens(cfg, params, token)
+    x, cache = transformer.forward_decode(cfg, params, x, pos, cache)
+    x = apply_norm(cfg, params.get("final_norm", {}), x)
+    logits = lm_logits(cfg, params, x)
+    return logits, cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    return transformer.init_cache(cfg, batch, max_seq, dtype)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+    return transformer.abstract_cache(cfg, batch, max_seq, dtype)

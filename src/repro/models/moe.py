@@ -1,0 +1,179 @@
+"""Top-k (k=2) token-choice MoE with grouped capacity dispatch.
+
+Mesh-TF / MaxText style dropping implementation: tokens are routed within
+fixed-size groups; each expert accepts up to C tokens per group; overflow is
+dropped (residual passes through).  Dispatch/combine are einsums against a
+(G, Tg, E, C) one-hot — EP-shardable on E, DP-shardable on G, and the
+dispatch FLOPs are bounded by E*C = topk*Tg*cf (arch-independent).
+
+Also implements arctic's dense-residual variant: a normal FFN runs in
+parallel with the MoE and the results are added.
+
+Aux losses: switch-style load balance (E * sum f_e * p_e) and router z-loss.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import apply_mlp, init_mlp, pdtype
+
+Params = Dict[str, jnp.ndarray]
+
+
+def init_moe(cfg: ArchConfig, key) -> Params:
+    """Expert weights are STORED in the virtual-expert layout
+    (E*factor, d, f/factor) — see ``virtual_expert_factor`` — so the
+    (virtual-)expert dim always shards cleanly over the model axis."""
+    assert cfg.moe is not None
+    e = cfg.moe.n_experts
+    d, f = cfg.d_model, cfg.d_ff
+    fac = virtual_expert_factor(cfg)
+    ev, fv = e * fac, f // fac if f else 0
+    keys = jax.random.split(key, 5)
+    dt = pdtype(cfg)
+    s_in, s_out = d ** -0.5, f ** -0.5
+    p: Params = {
+        "router": (jax.random.normal(keys[0], (d, e)) * s_in
+                   ).astype(jnp.float32),
+    }
+    if cfg.mlp == "swiglu":
+        p["w_gate"] = (jax.random.normal(keys[1], (ev, d, fv)) * s_in
+                       ).astype(dt)
+        p["w_up"] = (jax.random.normal(keys[2], (ev, d, fv)) * s_in
+                     ).astype(dt)
+        p["w_down"] = (jax.random.normal(keys[3], (ev, fv, d)) * s_out
+                       ).astype(dt)
+    else:
+        p["w_in"] = (jax.random.normal(keys[1], (ev, d, fv)) * s_in
+                     ).astype(dt)
+        p["w_out"] = (jax.random.normal(keys[2], (ev, fv, d)) * s_out
+                      ).astype(dt)
+    if cfg.moe.dense_residual:
+        p["residual"] = init_mlp(cfg, keys[4])
+    return p
+
+
+def capacity(cfg: ArchConfig, tg: int) -> int:
+    m = cfg.moe
+    c = int(math.ceil(tg * m.top_k * m.capacity_factor / m.n_experts))
+    # pad to even for layout, to 4 only when the relative waste is small
+    # (small groups at large E make C tiny; +60% padding showed up as
+    # dispatch-FLOP inflation in §Perf A5)
+    c4 = ((c + 3) // 4) * 4
+    if c4 <= 1.2 * c:
+        return max(4, c4)
+    return max(2, ((c + 1) // 2) * 2)
+
+
+def virtual_expert_factor(cfg: ArchConfig, tp: int = 16) -> int:
+    """When n_experts < the model axis, split each expert's ff dim into
+    ``factor`` *virtual experts* so the (virtual-)expert dim shards cleanly
+    over the whole axis.  Exact for gated/gelu MLPs: the nonlinearity is
+    elementwise in f, and the down-projection partial sums are re-added by
+    the combine einsum's contraction over the expert dim.
+
+    §Perf iteration A1 (grok E=8 on tp=16): removes the giant per-layer
+    expert-FFN all-reduces of the f-sharded fallback.
+    """
+    e = cfg.moe.n_experts
+    if e >= tp or cfg.d_ff == 0:
+        return 1
+    factor = tp // e
+    while factor > 1 and cfg.d_ff % factor != 0:
+        factor //= 2
+    return max(factor, 1)
+
+
+def _expert_ffn(cfg: ArchConfig, params: Params, xe: jnp.ndarray
+                ) -> jnp.ndarray:
+    """xe: (E', G, C, d) -> (E', G, C, d), per-(virtual-)expert weights on
+    axis 0 (E' = E * factor; the stored layout)."""
+    if cfg.mlp == "swiglu":
+        g = jnp.einsum("egcd,edf->egcf", xe, params["w_gate"])
+        u = jnp.einsum("egcd,edf->egcf", xe, params["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(xe.dtype) * u
+        return jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    h = jnp.einsum("egcd,edf->egcf", xe, params["w_in"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(xe.dtype)
+    return jnp.einsum("egcf,efd->egcd", h, params["w_out"])
+
+
+def apply_moe(cfg: ArchConfig, params: Params, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, d) -> (B, S, d), plus aux metrics/losses."""
+    m = cfg.moe
+    B, S, d = x.shape
+    T = B * S
+    tg = min(m.group_size, T)
+    if T % tg != 0:
+        tg = T  # degenerate small-input fallback (smoke tests)
+    G = T // tg
+    E = m.n_experts
+    C = capacity(cfg, tg)
+
+    xt = x.reshape(G, tg, d)
+    # router matmul in the activation dtype (bf16), softmax in fp32: an
+    # xt.astype(f32) here would make the *residual-stream cotangent* f32 —
+    # every backward collective doubles (§Perf A2).
+    logits = (xt @ params["router"].astype(xt.dtype)).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- aux losses on the full distribution
+    me = jnp.mean(probs, axis=(0, 1))                          # (E,)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    dispatch = jnp.zeros((G, tg, E, C), x.dtype)
+    combine = jnp.zeros((G, tg, E, C), jnp.float32)
+    gates_remaining = probs
+    ce_accum = jnp.zeros((E,), jnp.float32)
+    # cumulative slots already used per expert (from previous choices)
+    used = jnp.zeros((G, E), jnp.int32)
+    for _ in range(m.top_k):
+        idx = jnp.argmax(gates_remaining, axis=-1)             # (G,Tg)
+        gate = jnp.take_along_axis(gates_remaining, idx[..., None],
+                                   axis=-1)[..., 0]            # (G,Tg)
+        onehot = jax.nn.one_hot(idx, E, dtype=jnp.int32)       # (G,Tg,E)
+        ce_accum = ce_accum + jnp.sum(onehot, axis=(0, 1)).astype(jnp.float32)
+        pos = jnp.cumsum(onehot, axis=1) - 1 + used[:, None, :]  # (G,Tg,E)
+        slot = jnp.sum(pos * onehot, axis=-1)                  # (G,Tg)
+        keep = (slot < C).astype(jnp.float32) * jnp.max(
+            onehot, axis=-1).astype(jnp.float32)
+        slot_oh = jax.nn.one_hot(slot, C, dtype=jnp.float32) \
+            * keep[..., None]                                  # (G,Tg,C)
+        d_k = onehot.astype(jnp.float32)[..., :, None] * slot_oh[..., None, :]
+        dispatch = dispatch + d_k.astype(x.dtype)
+        combine = combine + d_k * gate[..., None, None]
+        used = used + jnp.sum(
+            (onehot * (pos < C)).astype(jnp.int32), axis=1)
+        gates_remaining = gates_remaining * (1.0 - onehot.astype(jnp.float32))
+
+    # load-balance loss: E * sum_e (frac tokens to e) * (mean prob of e)
+    ce = ce_accum / jnp.float32(T * m.top_k)
+    lb_loss = jnp.float32(E) * jnp.sum(ce * me)
+
+    # virtual experts (E' = E * factor): each token is dispatched to every
+    # f-slice of its expert; the combine contraction re-adds the slices.
+    fac = virtual_expert_factor(cfg)
+    if fac > 1:
+        dispatch = jnp.repeat(dispatch, fac, axis=2)
+        combine = jnp.repeat(combine, fac, axis=2)
+    from ..sharding.context import constrain_expert_parallel
+    xe = jnp.einsum("gtd,gtec->egcd", xt, dispatch)            # (E',G,C,d)
+    xe = constrain_expert_parallel(xe)
+    ye = _expert_ffn(cfg, params, xe)
+    ye = constrain_expert_parallel(ye)
+    yt = jnp.einsum("egcd,gtec->gtd", ye,
+                    combine.astype(x.dtype))                   # (G,Tg,d)
+    y = yt.reshape(B, S, d)
+
+    if m.dense_residual:
+        y = y + apply_mlp(cfg, params["residual"], x)
+
+    aux = {"moe_lb_loss": lb_loss, "moe_z_loss": z_loss,
+           "moe_router_probs": me}
+    return y, aux

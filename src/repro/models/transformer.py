@@ -1,0 +1,276 @@
+"""Block assembly and layer stacks for every assigned architecture.
+
+A config's layer pattern is described by a *period*: the smallest repeating
+block structure.  Dense archs have period 1 (attention + MLP); jamba has
+period 8 (7 mamba + 1 attention, MoE on odd positions).  Layers are stored
+stacked over ``n_groups = n_layers / period`` and executed with a
+``lax.scan`` over groups (python loop over the period inside the body) —
+keeping the HLO small for 64-layer models while remaining remat-friendly.
+
+Cache layout (serving): every period position owns a leaf stacked over
+groups: attention -> {"k","v": (G, B, S_max, KV, hd)}, mamba -> {"h": (G, B,
+H, N, P), "conv": (G, B, K-1, conv_dim)}.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from . import attention as attn
+from . import mamba2, moe
+from .layers import apply_mlp, apply_norm, init_mlp, init_norm, pdtype
+
+Params = Dict[str, Any]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def grad_boundary(x):
+    """Identity with a cotangent dtype boundary.
+
+    fp32-preferred einsums (attention scores, router) make their input
+    cotangents fp32; without a boundary that promotion cascades down the
+    whole residual stream and every backward collective doubles.  This casts
+    the cotangent back to the primal dtype at each block edge (§Perf A2/C2).
+    """
+    return x
+
+
+def _gb_fwd(x):
+    # residual must be a jax type: carry a 0-size array of the primal dtype
+    return x, jnp.zeros((0,), x.dtype)
+
+
+def _gb_bwd(res, g):
+    return (g.astype(res.dtype),)
+
+
+grad_boundary.defvjp(_gb_fwd, _gb_bwd)
+
+
+def period_of(cfg: ArchConfig) -> int:
+    p = 1
+    if cfg.mamba is not None and cfg.n_heads > 0:
+        p = cfg.attn_every
+    if cfg.moe is not None:
+        p = max(p, cfg.moe.moe_every)
+        assert p % cfg.moe.moe_every == 0
+    assert cfg.n_layers % p == 0, \
+        f"{cfg.name}: n_layers {cfg.n_layers} % period {p} != 0"
+    return p
+
+
+def n_groups_of(cfg: ArchConfig) -> int:
+    return cfg.n_layers // period_of(cfg)
+
+
+def position_kind(cfg: ArchConfig, pos: int) -> Tuple[str, str]:
+    """(mixer, channel) for period position ``pos``:
+    mixer in {attn, mamba}; channel in {mlp, moe, none}."""
+    mixer = "attn" if cfg.block_is_attention(pos) else "mamba"
+    if cfg.moe is not None and cfg.block_is_moe(pos):
+        channel = "moe"
+    elif cfg.d_ff > 0:
+        channel = "mlp"
+    else:
+        channel = "none"
+    return mixer, channel
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def init_block_position(cfg: ArchConfig, pos: int, key) -> Params:
+    mixer, channel = position_kind(cfg, pos)
+    keys = jax.random.split(key, 4)
+    p: Params = {"ln1": init_norm(cfg, keys[0])}
+    if mixer == "attn":
+        p["attn"] = attn.init_attention(cfg, keys[1])
+    else:
+        p["mamba"] = mamba2.init_mamba(cfg, keys[1])
+    if channel != "none":
+        p["ln2"] = init_norm(cfg, keys[2])
+        if channel == "moe":
+            p["moe"] = moe.init_moe(cfg, keys[3])
+        else:
+            p["mlp"] = init_mlp(cfg, keys[3])
+    return p
+
+
+def init_stack(cfg: ArchConfig, key) -> List[Params]:
+    """params["blocks"]: list over period positions, leaves stacked over
+    groups."""
+    period = period_of(cfg)
+    groups = n_groups_of(cfg)
+    out: List[Params] = []
+    for pos in range(period):
+        pkeys = jax.random.split(jax.random.fold_in(key, pos), groups)
+        per_group = [init_block_position(cfg, pos, k) for k in pkeys]
+        stacked = jax.tree_util.tree_map(
+            lambda *xs: jnp.stack(xs), *per_group)
+        out.append(stacked)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def _apply_channel(cfg: ArchConfig, pos: int, bp: Params, x, aux):
+    _, channel = position_kind(cfg, pos)
+    if channel == "none":
+        return x, aux
+    h = apply_norm(cfg, bp.get("ln2", {}), x)
+    if channel == "moe":
+        y, a = moe.apply_moe(cfg, bp["moe"], h)
+        aux = {k: aux.get(k, 0.0) + v for k, v in a.items()
+               if not k.endswith("probs")}
+    else:
+        y = apply_mlp(cfg, bp["mlp"], h)
+    return x + y, aux
+
+
+def _train_group_body(cfg: ArchConfig, constraint, x, aux, group_params,
+                      positions):
+    for pos in range(period_of(cfg)):
+        bp = group_params[pos]
+        # constraint BEFORE boundary: in backward the boundary's bf16 cast
+        # then runs BEFORE the constraint's collective, so resharding moves
+        # bf16 cotangents, not f32 (§Perf B3).
+        if constraint is not None:
+            x = constraint(x)
+        x = grad_boundary(x)
+        h = apply_norm(cfg, bp.get("ln1", {}), x)
+        mixer, _ = position_kind(cfg, pos)
+        if mixer == "attn":
+            y = attn.attention_train(cfg, bp["attn"], h, positions)
+        else:
+            y = mamba2.apply_mamba_train(cfg, bp["mamba"], h)
+        x = x + y
+        x, aux = _apply_channel(cfg, pos, bp, x, aux)
+    return x, aux
+
+
+def forward_train(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                  positions: jnp.ndarray, constraint=None
+                  ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    """x: (B, S, d) embedded inputs -> final hidden states + aux losses."""
+    aux0 = {}
+    if cfg.moe is not None:
+        aux0 = {"moe_lb_loss": jnp.float32(0.0),
+                "moe_z_loss": jnp.float32(0.0)}
+
+    def body(carry, group_params):
+        x, aux = carry
+        x, aux = _train_group_body(cfg, constraint, x, aux, group_params,
+                                   positions)
+        return (x, aux), None
+
+    if cfg.remat:
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    (x, aux), _ = jax.lax.scan(body, (x, aux0), tuple(params["blocks"]))
+    return x, aux
+
+
+# ---------------- caches ----------------
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> List[Dict[str, jnp.ndarray]]:
+    """One cache entry per period position, leaves stacked over groups."""
+    period = period_of(cfg)
+    groups = n_groups_of(cfg)
+    cache: List[Dict[str, jnp.ndarray]] = []
+    for pos in range(period):
+        mixer, _ = position_kind(cfg, pos)
+        if mixer == "attn":
+            shape = (groups, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+            cache.append({"k": jnp.zeros(shape, dtype),
+                          "v": jnp.zeros(shape, dtype)})
+        else:
+            (hs, cs) = mamba2.mamba_state_shapes(cfg, batch)
+            cache.append({"h": jnp.zeros((groups,) + hs, jnp.float32),
+                          "conv": jnp.zeros((groups,) + cs, dtype)})
+    return cache
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                   dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(init_cache, cfg, batch, max_seq, dtype))
+
+
+def forward_prefill(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                    positions: jnp.ndarray, cache, constraint=None):
+    """Prefill: causal forward that fills the cache (cache S_max == S)."""
+
+    def body(carry, scanned):
+        x = carry
+        group_params, cache_in = scanned
+        new_cache = []
+        for pos in range(period_of(cfg)):
+            bp = group_params[pos]
+            if constraint is not None:
+                x = constraint(x)
+            h = apply_norm(cfg, bp.get("ln1", {}), x)
+            mixer, _ = position_kind(cfg, pos)
+            if mixer == "attn":
+                y, nk, nv = attn.attention_prefill(
+                    cfg, bp["attn"], h, positions,
+                    cache_in[pos]["k"], cache_in[pos]["v"])
+                new_cache.append({"k": nk, "v": nv})
+            else:
+                y, hN, convN = mamba2._mamba_forward(
+                    cfg, bp["mamba"], h, h0=cache_in[pos]["h"], conv0=None)
+                new_cache.append({
+                    "h": hN,
+                    "conv": convN.astype(cache_in[pos]["conv"].dtype)})
+            x = x + y
+            x, _ = _apply_channel(cfg, pos, bp, x, {})
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x,
+                                (tuple(params["blocks"]), tuple(cache)))
+    return x, list(new_cache)
+
+
+def forward_decode(cfg: ArchConfig, params: Params, x: jnp.ndarray,
+                   pos: jnp.ndarray, cache):
+    """Single-token decode: x (B, 1, d); pos (B,) current positions."""
+
+    def body(carry, scanned):
+        x = carry
+        group_params, cache_in = scanned
+        new_cache = []
+        for p_i in range(period_of(cfg)):
+            bp = group_params[p_i]
+            h = apply_norm(cfg, bp.get("ln1", {}), x)
+            mixer, _ = position_kind(cfg, p_i)
+            if mixer == "attn":
+                y, nk, nv = attn.attention_decode(
+                    cfg, bp["attn"], h, pos,
+                    cache_in[p_i]["k"], cache_in[p_i]["v"])
+                new_cache.append({"k": nk, "v": nv})
+            else:
+                y, hN, convN = mamba2.apply_mamba_decode(
+                    cfg, bp["mamba"], h, cache_in[p_i]["h"],
+                    cache_in[p_i]["conv"])
+                new_cache.append({"h": hN,
+                                  "conv": convN.astype(
+                                      cache_in[p_i]["conv"].dtype)})
+            x = x + y
+            x, _ = _apply_channel(cfg, p_i, bp, x, {})
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x,
+                                (tuple(params["blocks"]), tuple(cache)))
+    return x, list(new_cache)

@@ -1,0 +1,7 @@
+from .analysis import (analyze_cell, analyze_cost, analyze_file, model_flops,
+                       suggest, PEAK_FLOPS, HBM_BW, ICI_BW_LINK)
+from .hlo_parse import Cost, parse_and_cost, parse_module
+
+__all__ = ["analyze_cell", "analyze_cost", "analyze_file", "model_flops",
+           "suggest", "PEAK_FLOPS", "HBM_BW", "ICI_BW_LINK", "Cost",
+           "parse_and_cost", "parse_module"]

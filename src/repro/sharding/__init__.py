@@ -1,0 +1,5 @@
+from .specs import (activation_constraint, batch_specs, cache_specs, dp_axes,
+                    opt_state_specs, param_specs, shardings)
+
+__all__ = ["activation_constraint", "batch_specs", "cache_specs", "dp_axes",
+           "opt_state_specs", "param_specs", "shardings"]

@@ -1,0 +1,85 @@
+"""Ambient mesh context for intra-module sharding constraints.
+
+Model code (MoE dispatch, SSD heads) sometimes needs explicit activation
+constraints that GSPMD propagation gets wrong (e.g. FSDP weight sharding
+leaking into activation layouts).  Modules call the role-based helpers here;
+without an active mesh they are no-ops, so single-device tests/examples are
+untouched.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_STATE = threading.local()
+
+MODEL_AXIS = "model"
+
+
+def active_mesh() -> Optional[Mesh]:
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh):
+    prev = getattr(_STATE, "mesh", None)
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def _dp(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def _axis_or_none(mesh, name):
+    return name if name in mesh.shape else None
+
+
+def constrain(x, spec: P):
+    mesh = active_mesh()
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def constrain_expert_parallel(xe, expert_dim: int = 0, group_dim: int = 1):
+    """(E', G, C, d) activations: experts over "model", groups over dp —
+    keeps the expert FFN einsums comm-free and makes XLA all-gather the
+    (small) FSDP weight shards instead of the (huge) token tensors."""
+    mesh = active_mesh()
+    if mesh is None or MODEL_AXIS not in mesh.shape:
+        return xe
+    if xe.shape[expert_dim] % mesh.shape[MODEL_AXIS] != 0:
+        return xe
+    dp = _dp(mesh)
+    spec = [None] * xe.ndim
+    spec[expert_dim] = MODEL_AXIS
+    import numpy as np
+    if dp and xe.shape[group_dim] % int(
+            np.prod([mesh.shape[a] for a in dp])) == 0:
+        spec[group_dim] = dp if len(dp) > 1 else dp[0]
+    return constrain(xe, P(*spec))
+
+
+def constrain_heads(x, head_dim: int, batch_dim: int = 0):
+    """(..., H, ...) mamba/attention head-parallel activations."""
+    mesh = active_mesh()
+    if mesh is None or MODEL_AXIS not in mesh.shape:
+        return x
+    if x.shape[head_dim] % mesh.shape[MODEL_AXIS] != 0:
+        return x
+    dp = _dp(mesh)
+    spec = [None] * x.ndim
+    spec[head_dim] = MODEL_AXIS
+    import numpy as np
+    if dp and x.shape[batch_dim] % int(
+            np.prod([mesh.shape[a] for a in dp])) == 0:
+        spec[batch_dim] = dp if len(dp) > 1 else dp[0]
+    return constrain(x, P(*spec))

@@ -1,0 +1,4 @@
+from . import checkpoint, compression, data, elastic, optimizer, train_step
+
+__all__ = ["checkpoint", "compression", "data", "elastic", "optimizer",
+           "train_step"]

@@ -1,0 +1,181 @@
+"""Sharded, manifest-driven checkpointing with atomic commit and async write.
+
+Layout:
+  <dir>/step_000123.tmp/...   (written)
+  <dir>/step_000123/          (atomic rename on success)
+      manifest.json           tree structure, shapes, dtypes, step, mesh,
+                              config fingerprint
+      leaf_00000.npy ...      one file per leaf (host-local shard on a real
+                              multi-host cluster; full array here)
+
+Elastic restore: ``restore(..., mesh=new_mesh, specs=new_specs)`` re-shards
+onto a *different* mesh via device_put — the recovery path used by
+launch/train.py after a simulated host failure.
+
+Failure atomicity: a crash mid-write leaves only a ``.tmp`` dir, which
+``latest_step`` ignores and ``clean_tmp`` removes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    paths = [jax.tree_util.keystr(p) for p, _ in
+             jax.tree_util.tree_flatten_with_path(tree)[0]]
+    return flat, paths, treedef
+
+
+def save(ckpt_dir: str, step: int, tree, extra: Optional[Dict] = None,
+         fingerprint: str = "") -> str:
+    """Synchronous atomic save.  Returns the committed directory."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat, paths, _ = _tree_paths(tree)
+    manifest = {
+        "step": int(step),
+        "fingerprint": fingerprint,
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, (leaf, path) in enumerate(zip(flat, paths)):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"leaf_{i:05d}.npy"
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind not in "fiub":  # ml_dtypes (bf16/f8): store raw
+            arr = arr.view(f"u{arr.dtype.itemsize}")
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"path": path, "file": fname, "shape": list(arr.shape),
+             "dtype": logical_dtype})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp") \
+                and os.path.exists(os.path.join(ckpt_dir, name,
+                                                "manifest.json")):
+            steps.append(int(name[5:]))
+    return max(steps) if steps else None
+
+
+def clean_tmp(ckpt_dir: str) -> int:
+    """Remove crash leftovers; returns count removed."""
+    n = 0
+    if not os.path.isdir(ckpt_dir):
+        return 0
+    for name in os.listdir(ckpt_dir):
+        if name.endswith(".tmp"):
+            shutil.rmtree(os.path.join(ckpt_dir, name))
+            n += 1
+    return n
+
+
+def restore(ckpt_dir: str, step: int, like_tree,
+            shardings=None, fingerprint: Optional[str] = None):
+    """Restore into the structure of ``like_tree`` (arrays or
+    ShapeDtypeStructs).  ``shardings``: optional matching pytree of
+    NamedShardings for elastic re-shard-on-load."""
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(final, "manifest.json")) as f:
+        manifest = json.load(f)
+    if fingerprint is not None and manifest["fingerprint"] != fingerprint:
+        raise ValueError(
+            f"checkpoint fingerprint {manifest['fingerprint']!r} != expected "
+            f"{fingerprint!r} — refusing to restore a different config")
+    flat_like, paths, treedef = _tree_paths(like_tree)
+    by_path = {l["path"]: l for l in manifest["leaves"]}
+    sh_flat = (jax.tree_util.tree_leaves(shardings)
+               if shardings is not None else [None] * len(flat_like))
+    out = []
+    for like, path, sh in zip(flat_like, paths, sh_flat):
+        entry = by_path.get(path)
+        if entry is None:
+            raise KeyError(f"checkpoint missing leaf {path}")
+        arr = np.load(os.path.join(final, entry["file"]))
+        if arr.dtype.kind == "u" and str(arr.dtype) != entry["dtype"]:
+            import ml_dtypes  # raw-stored ml_dtypes leaf: view back
+            arr = arr.view(np.dtype(getattr(ml_dtypes, entry["dtype"])))
+        if tuple(arr.shape) != tuple(like.shape):
+            raise ValueError(
+                f"{path}: shape {arr.shape} != expected {like.shape}")
+        if sh is not None:
+            out.append(jax.device_put(arr, sh))
+        else:
+            out.append(jax.numpy.asarray(arr, dtype=like.dtype))
+    return treedef.unflatten(out), manifest
+
+
+class AsyncCheckpointer:
+    """Background writer thread: ``submit`` returns immediately after
+    device_get; commits happen in order.  ``wait()`` drains the queue."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._q: "queue.Queue" = queue.Queue()
+        self._err: Optional[BaseException] = None
+        self._t = threading.Thread(target=self._worker, daemon=True)
+        self._t.start()
+
+    def _worker(self):
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree, extra, fingerprint = item
+            try:
+                save(self.ckpt_dir, step, host_tree, extra, fingerprint)
+                self._gc()
+            except BaseException as e:  # surfaced on wait()
+                self._err = e
+            finally:
+                self._q.task_done()
+
+    def _gc(self):
+        steps = sorted(
+            int(n[5:]) for n in os.listdir(self.ckpt_dir)
+            if n.startswith("step_") and not n.endswith(".tmp"))
+        for s in steps[:-self.keep]:
+            shutil.rmtree(os.path.join(self.ckpt_dir,
+                                       f"step_{s:08d}"), ignore_errors=True)
+
+    def submit(self, step: int, tree, extra=None, fingerprint: str = ""):
+        # device_get on the caller thread (cheap on CPU, contiguous on TPU)
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        self._q.put((int(step), host_tree, extra, fingerprint))
+
+    def wait(self):
+        self._q.join()
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def close(self):
+        self.wait()
+        self._q.put(None)
+        self._t.join()

@@ -1,0 +1,82 @@
+"""Baselines (US/MV/MVB), online continuation, non-iid extension."""
+import numpy as np
+import pytest
+
+from conftest import normal_samplers
+from repro.core import baselines
+from repro.core.boundaries import make_boundaries
+from repro.core.noniid import aggregate_noniid, block_leverages
+from repro.core.online import OnlineBlockState, continue_block
+from repro.core.types import IslaParams
+
+
+def test_mvb_paper_example():
+    """§VIII-C: 5 samples, L = {30, 35}: prob of 30 is (2/5)*(30/65)."""
+    samples = np.array([10.0, 12.0, 13.0, 30.0, 35.0])
+    b = make_boundaries(15.0, 5.0, IslaParams(p1=1.0, p2=5.0))
+    # L region = (20, 40): contains 30, 35.  region probs = n_r/m
+    got = baselines.mvb_avg(samples, b)
+    # hand computation: region masses * within-region value weighting
+    from repro.core.types import classify_np
+    codes = classify_np(samples, b)
+    want = 0.0
+    for r in np.unique(codes):
+        vals = samples[codes == r]
+        want += (len(vals) / 5) * float(np.sum(vals ** 2) / np.sum(vals))
+    assert got == pytest.approx(want)
+    # the L pair contributes (2/5) * (30^2+35^2)/65
+    assert (2 / 5) * (30 ** 2 + 35 ** 2) / 65 == pytest.approx(
+        sum((2 / 5) * v * (v / 65) for v in (30.0, 35.0)))
+
+
+def test_mv_converges_to_moment_ratio(rng):
+    """MV -> E[a^2]/E[a] = (sigma^2 + mu^2)/mu = 104 for N(100,20)."""
+    s = rng.normal(100, 20, size=200_000)
+    assert baselines.mv_avg(s) == pytest.approx(104.0, abs=0.5)
+
+
+def test_uniform_avg(rng):
+    s = rng.normal(100, 20, size=100_000)
+    assert baselines.uniform_avg(s) == pytest.approx(100.0, abs=0.5)
+
+
+def test_online_rounds_refine():
+    """§VII-A: continuation rounds keep only param_S/L and improve."""
+    params = IslaParams(e=0.1)
+    b = make_boundaries(100.3, 20.0, params)
+    state = OnlineBlockState.fresh(0, b, 100.3)
+    sampler = lambda n, rng: rng.normal(100, 20, size=n)
+    rng = np.random.default_rng(0)
+    errs = []
+    for round_ in range(4):
+        state, mod = continue_block(state, sampler, 4000, params, rng,
+                                    mode="calibrated")
+        errs.append(abs(mod.avg - 100.0))
+    assert state.rounds == 4
+    assert state.n_sampled == 16000
+    assert errs[-1] < 1.0
+    # moments really accumulated (no sample storage)
+    assert state.param_s.count + state.param_l.count > 4000
+
+
+def test_block_leverages_sum_to_one():
+    blev = block_leverages([10.0, 20.0, 30.0, 60.0, 40.0])
+    assert np.sum(blev) == pytest.approx(1.0)
+    # higher sigma -> higher leverage
+    assert blev[3] == np.max(blev)
+
+
+def test_noniid_aggregate():
+    """§VIII-D setup: 5 blocks N(100,20), N(50,10), N(80,30), N(150,60),
+    N(120,40) — accurate answer 100, e = 0.5."""
+    params = IslaParams(e=0.5)
+    dists = [(100, 20), (50, 10), (80, 30), (150, 60), (120, 40)]
+    samplers = [(lambda n, rng, m=m, s=s: rng.normal(m, s, size=n))
+                for m, s in dists]
+    sizes = [10 ** 8] * 5
+    errs = []
+    for seed in range(5):
+        r = aggregate_noniid(samplers, sizes, params,
+                             np.random.default_rng(seed), mode="calibrated")
+        errs.append(abs(r.answer - 100.0))
+    assert np.mean(errs) < 0.5

@@ -1,0 +1,105 @@
+"""Block engine end-to-end + paper-claim validation."""
+import numpy as np
+import pytest
+
+from conftest import normal_samplers
+from repro.core import baselines
+from repro.core.engine import (aggregate, aggregate_array, baseline_sample,
+                               phase1_sampling, run_block)
+from repro.core.boundaries import make_boundaries
+from repro.core.preestimation import required_sample_size
+from repro.core.types import IslaParams, RegionMoments
+
+M = 10 ** 10
+SIZES = [M // 10] * 10
+
+
+def test_phase1_streaming_equivalence(rng):
+    """Alg. 1 vectorized == per-sample updateParams."""
+    params = IslaParams()
+    b = make_boundaries(100.0, 20.0, params)
+    samples = rng.normal(100, 20, size=2000)
+    ps, pl = phase1_sampling(samples, b)
+    ref_s, ref_l = RegionMoments.zeros_np(), RegionMoments.zeros_np()
+    from repro.core.types import REGION_L, REGION_S, region_of
+    for a in samples:
+        r = region_of(float(a), b)
+        if r == REGION_S:
+            ref_s = ref_s.update(float(a))
+        elif r == REGION_L:
+            ref_l = ref_l.update(float(a))
+    assert ps.count == ref_s.count and pl.count == ref_l.count
+    assert ps.s3 == pytest.approx(ref_s.s3, rel=1e-9)
+
+
+@pytest.mark.parametrize("mode", ["faithful", "faithful_cf", "calibrated"])
+def test_aggregate_meets_relaxed_precision(mode):
+    """All modes land within the relaxed envelope; calibrated within e."""
+    params = IslaParams(e=0.1)
+    errs = []
+    for seed in range(6):
+        r = aggregate(normal_samplers(), SIZES, params,
+                      np.random.default_rng(seed), mode=mode)
+        errs.append(abs(r.answer - 100.0))
+    # everything stays within the sketch's relaxed interval t_e * e
+    assert max(errs) <= params.te * params.e + 0.2
+    if mode == "calibrated":
+        assert np.mean(errs) <= params.e
+
+
+def test_paper_claim_third_sample_size():
+    """Table III: ISLA at r/3 comparable to US at r (e = 0.5)."""
+    params = IslaParams(e=0.5)
+    m = required_sample_size(0.5, 20.0, 0.95)
+    isla_errs, us_errs = [], []
+    for seed in range(8):
+        rng_ = np.random.default_rng(seed)
+        r = aggregate(normal_samplers(), SIZES, params, rng_,
+                      rate_override=m / (3 * M), mode="calibrated")
+        isla_errs.append(abs(r.answer - 100.0))
+        us = baselines.uniform_avg(
+            baseline_sample(normal_samplers(), SIZES, m / M, rng_))
+        us_errs.append(abs(us - 100.0))
+    assert np.mean(isla_errs) <= 0.5          # meets the precision target
+    assert np.mean(isla_errs) <= 2.5 * np.mean(us_errs)  # comparable w/ 1/3
+
+
+def test_paper_claim_vs_mv_mvb():
+    """Table IV: ISLA ~100.03 beats MV (~104) and MVB (~100.5)."""
+    params = IslaParams(e=0.1)
+    rng_ = np.random.default_rng(11)
+    r = aggregate(normal_samplers(), SIZES, params, rng_, mode="calibrated")
+    samp = baseline_sample(normal_samplers(), SIZES, r.sampling_rate,
+                           np.random.default_rng(12))
+    bnd = make_boundaries(r.sketch0, r.sigma, params)
+    mv = baselines.mv_avg(samp)
+    mvb = baselines.mvb_avg(samp, bnd)
+    assert abs(mv - 104.0) < 0.5              # (sigma^2+mu^2)/mu = 104
+    assert 100.2 < mvb < 101.0
+    assert abs(r.answer - 100.0) < abs(mv - 100.0)
+    assert abs(r.answer - 100.0) < abs(mvb - 100.0)
+
+
+def test_shift_invariance_negative_data():
+    """Footnote 1: data translated positive, answer translated back."""
+    params = IslaParams(e=0.1)
+    base = [(lambda n, rng: rng.normal(0.0, 20.0, size=n)) for _ in range(4)]
+    r = aggregate(base, [M // 4] * 4, params, np.random.default_rng(5),
+                  mode="calibrated")
+    assert abs(r.answer - 0.0) < 0.5
+
+
+def test_deadline_truncation():
+    """§VII-F: a capped sample quota still yields a valid (coarser) answer."""
+    params = IslaParams(e=0.1)
+    r = aggregate(normal_samplers(), SIZES, params,
+                  np.random.default_rng(6), deadline_samples=500,
+                  mode="calibrated")
+    assert abs(r.answer - 100.0) < 2.0
+    assert all(b.n_sampled <= 500 for b in r.blocks)
+
+
+def test_aggregate_array_api(rng):
+    data = rng.normal(50.0, 5.0, size=200_000)
+    r = aggregate_array(data, 8, IslaParams(e=0.5), rng, mode="calibrated")
+    assert abs(r.answer - 50.0) < 0.5

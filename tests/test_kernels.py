@@ -1,0 +1,77 @@
+"""Pallas kernel sweeps: shapes x dtypes vs the pure-jnp oracles
+(interpret=True executes the kernel body on CPU)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.isla_moments import isla_moments_pallas, pilot_stats_pallas
+
+BOUNDS = (60.0, 90.0, 110.0, 140.0)
+BOUNDS_ARR = jnp.asarray(BOUNDS, jnp.float32)
+
+
+@pytest.mark.parametrize("shape", [(64, 128), (256, 128), (64 * 7, 128),
+                                   (512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_moments_kernel_sweep(shape, dtype, rng):
+    x = jnp.asarray(rng.normal(100, 20, size=shape), dtype)
+    got = isla_moments_pallas(x, BOUNDS_ARR, tm=64, interpret=True)
+    want = ref.isla_moments_ref(x, *BOUNDS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=5e-3 if dtype == jnp.bfloat16 else 1e-5)
+
+
+@pytest.mark.parametrize("stride", [1, 2, 4])
+def test_moments_kernel_strided(stride, rng):
+    x = jnp.asarray(rng.normal(100, 20, size=(64 * 8, 128)), jnp.float32)
+    got = isla_moments_pallas(x, BOUNDS_ARR, tm=64, stride=stride,
+                              interpret=True)
+    sel = x.reshape(8, 64, 128)[::stride].reshape(-1, 128)
+    want = ref.isla_moments_ref(sel, *BOUNDS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [100, 8192, 64 * 128 + 17, 200_000])
+def test_ops_isla_moments_any_shape(n, rng):
+    """ops wrapper: arbitrary sizes via N-region padding; == oracle."""
+    x = jnp.asarray(rng.normal(100, 20, size=(n,)), jnp.float32)
+    got = ops.isla_moments(x, BOUNDS_ARR, tm=64)
+    want = ref.isla_moments_ref(x, *BOUNDS)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4)
+
+
+def test_pilot_stats_kernel(rng):
+    x = jnp.asarray(rng.normal(100, 20, size=(256, 128)), jnp.float32)
+    got = pilot_stats_pallas(x, tm=64, interpret=True)
+    want = ref.pilot_stats_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [500, 64 * 128 * 3 + 5])
+def test_ops_pilot_stats_padding_correction(n, rng):
+    x = jnp.asarray(rng.normal(-5, 3, size=(n,)), jnp.float32)
+    got = ops.pilot_stats(x, tm=64)
+    want = ref.pilot_stats_ref(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-2)
+
+
+def test_kernel_feeds_phase2(rng):
+    """Kernel moments plug into the distributed phase 2 and give the same
+    answer as the host engine on the same data."""
+    from repro.core.distributed import phase2
+    from repro.core.engine import phase2_iteration
+    from repro.core.types import Boundaries, IslaParams, RegionMoments
+    params = IslaParams()
+    vals = rng.normal(100, 20, size=(64 * 128 * 4,))
+    x = jnp.asarray(vals, jnp.float32)
+    mom = ops.isla_moments(x, BOUNDS_ARR, tm=64)
+    dev_avg = float(phase2(mom[0], mom[1], jnp.float32(100.0), params,
+                           mode="calibrated"))
+    b = Boundaries(*BOUNDS)
+    from repro.core.engine import phase1_sampling
+    ps, pl = phase1_sampling(vals, b)
+    host = phase2_iteration(ps, pl, 100.0, params, mode="calibrated")
+    assert dev_avg == pytest.approx(host.avg, rel=1e-4)

@@ -1,0 +1,46 @@
+"""Flash-attention Pallas kernel: shape/dtype sweep vs the jnp oracle
+(interpret mode), including the bq != bk causal-boundary cases."""
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import flash_attention_ref
+
+
+@pytest.mark.parametrize("shape", [(4, 1024, 64, 256, 256),
+                                   (2, 2048, 128, 512, 512),
+                                   (3, 512, 32, 128, 256),
+                                   (2, 1024, 64, 512, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_kernel_sweep(shape, dtype, rng):
+    BH, S, hd, bq, bk = shape
+    q = jnp.asarray(rng.normal(size=(BH, S, hd)), dtype) * 0.3
+    k = jnp.asarray(rng.normal(size=(BH, S, hd)), dtype) * 0.3
+    v = jnp.asarray(rng.normal(size=(BH, S, hd)), dtype)
+    got = flash_attention_pallas(q, k, v, bq=bq, bk=bk, interpret=True)
+    want = flash_attention_ref(q, k, v)
+    tol = 1e-4 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32),
+        atol=tol)
+
+
+def test_flash_matches_blocked_model_path(rng):
+    """Kernel == the model stack's blocked attention (same contract)."""
+    from repro.models.attention import _blocked_attention
+    B, S, H, hd = 1, 1024, 2, 32
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32) * 0.3
+    k = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32) * 0.3
+    v = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    blocked = _blocked_attention(q, k, v, pos, block=256).reshape(
+        B, S, H, hd)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    flash = flash_attention_pallas(qf, kf, vf, bq=256, bk=256,
+                                   interpret=True)
+    flash = flash.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(flash), np.asarray(blocked),
+                               atol=2e-5)

@@ -1,0 +1,83 @@
+"""Leverage strategy: pinned against the paper's own Example 1 / Table II."""
+import numpy as np
+import pytest
+from fractions import Fraction
+
+from repro.core import leverage
+from repro.core.estimator import (l_estimator, l_estimator_direct,
+                                  moments_from_values, theorem3_kc)
+
+
+XS = [4.0, 5.0]   # S samples of Example 1
+YS = [8.0]        # L samples
+Q = 1.0
+
+
+def test_table2_orilev():
+    sx, sy = leverage.leverage_scores(XS, YS)
+    assert sx[0] == pytest.approx(89 / 105)   # sample 4
+    assert sx[1] == pytest.approx(16 / 21)    # sample 5
+    assert sy[0] == pytest.approx(64 / 105)   # sample 8
+
+
+def test_table2_fac():
+    fx, fy = leverage.normalization_factors(XS, YS, Q)
+    assert fx == pytest.approx(169 / 70)
+    assert fy == pytest.approx(64 / 35)
+
+
+def test_table2_norlev():
+    lx, ly = leverage.normalized_leverages(XS, YS, Q)
+    assert lx[0] == pytest.approx(178 / 507)
+    assert lx[1] == pytest.approx(160 / 507)
+    assert ly[0] == pytest.approx(1 / 3)
+
+
+def test_example1_answer():
+    """alpha=0.1 gives ~5.67 (vs uniform 6.25, accurate 5.8)."""
+    k, c = theorem3_kc(moments_from_values(XS), moments_from_values(YS), Q)
+    assert l_estimator(0.1, k, c) == pytest.approx(5.6649, abs=1e-3)
+    assert c == pytest.approx(17 / 3)
+
+
+def test_constraint1_sum_of_leverages_is_one():
+    """Theorem 2: normalized leverages sum to 1 (for any q)."""
+    rng = np.random.default_rng(1)
+    for q in [0.2, 1.0, 5.0]:
+        xs = rng.uniform(60, 90, size=37)
+        ys = rng.uniform(110, 140, size=21)
+        lx, ly = leverage.normalized_leverages(xs, ys, q)
+        assert np.sum(lx) + np.sum(ly) == pytest.approx(1.0)
+
+
+def test_constraint2_region_mass_ratio():
+    """levSum_S / levSum_L == q * u / v."""
+    rng = np.random.default_rng(2)
+    xs = rng.uniform(60, 90, size=40)
+    ys = rng.uniform(110, 140, size=25)
+    for q in [0.1, 1.0, 10.0]:
+        lx, ly = leverage.normalized_leverages(xs, ys, q)
+        assert np.sum(lx) / np.sum(ly) == pytest.approx(q * 40 / 25)
+
+
+def test_probabilities_sum_to_one():
+    rng = np.random.default_rng(3)
+    xs = rng.uniform(60, 90, size=12)
+    ys = rng.uniform(110, 140, size=9)
+    for alpha in [0.0, 0.1, 0.9]:
+        px, py = leverage.probabilities(xs, ys, 1.0, alpha)
+        assert np.sum(px) + np.sum(py) == pytest.approx(1.0)
+
+
+def test_theorem3_equals_direct():
+    """k*alpha + c == sum(prob_i * a_i) for random inputs."""
+    rng = np.random.default_rng(4)
+    for trial in range(20):
+        u, v = rng.integers(2, 50), rng.integers(2, 50)
+        xs = rng.uniform(50, 95, size=u)
+        ys = rng.uniform(105, 150, size=v)
+        q = rng.choice([0.1, 0.2, 1.0, 5.0, 10.0])
+        alpha = rng.uniform(-1.0, 1.0)
+        k, c = theorem3_kc(moments_from_values(xs), moments_from_values(ys), q)
+        direct = l_estimator_direct(xs, ys, q, alpha)
+        assert l_estimator(alpha, k, c) == pytest.approx(direct, rel=1e-10)

@@ -1,0 +1,124 @@
+"""Decode-vs-full-forward parity: prefill + N decode steps must reproduce the
+full-sequence logits (attention KV cache + mamba state correctness)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model
+from repro.models.attention import attention_decode, attention_train, \
+    init_attention
+from repro.models import moe as moe_lib
+
+
+@pytest.mark.parametrize("arch", ["olmo-1b", "mamba2-130m",
+                                  "jamba-1.5-large-398b"])
+def test_prefill_then_decode_matches_full(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.moe is not None:
+        # routing is batch-size sensitive (grouped capacity); parity holds
+        # only for the dense archs — covered by olmo/mamba2 here.
+        pytest.skip("MoE routing differs between prefill and chunked decode")
+    key = jax.random.key(0)
+    B, S, S_dec = 1, 24, 4
+    params = model.init_params(cfg, key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+
+    # full forward logits at every position via train path
+    from repro.models.layers import apply_norm, lm_logits
+    from repro.models import transformer
+    x = params["embedding"][toks]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    cfg_nr = cfg.replace(remat=False)
+    h, _ = transformer.forward_train(cfg_nr, params, x, positions)
+    h = apply_norm(cfg, params.get("final_norm", {}), h)
+    full_logits = lm_logits(cfg, params, h)
+
+    # prefill on the first S - S_dec tokens, then decode the rest
+    S0 = S - S_dec
+    cache = model.init_cache(cfg, B, S)
+    logits, cache = model.serve_prefill(
+        cfg, params, {"tokens": toks[:, :S0]}, cache)
+    np.testing.assert_allclose(np.asarray(logits[:, 0]),
+                               np.asarray(full_logits[:, S0 - 1]),
+                               rtol=2e-2, atol=2e-2)
+    for t in range(S0, S):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, cache = model.serve_decode(
+            cfg, params, toks[:, t:t + 1], pos, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits[:, 0]), np.asarray(full_logits[:, t]),
+            rtol=2e-2, atol=2e-2,
+            err_msg=f"{arch}: decode step {t} diverges from full forward")
+
+
+def test_gqa_equals_mha_oracle():
+    """GQA with kv groups == full MHA with repeated kv heads."""
+    from repro.configs.base import ArchConfig
+    cfg = ArchConfig(name="t", family="dense", n_layers=1, d_model=64,
+                     n_heads=8, n_kv_heads=2, d_ff=128, vocab=64,
+                     head_dim=16)
+    key = jax.random.key(0)
+    p = init_attention(cfg, key)
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.key(1), (B, S, 64), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    out = attention_train(cfg, p, x, pos)
+
+    # oracle: repeat kv weights to 8 heads, run as MHA
+    cfg_mha = cfg.replace(n_kv_heads=8)
+    wk = p["wk"].reshape(64, 2, 16)
+    wv = p["wv"].reshape(64, 2, 16)
+    p_mha = dict(p)
+    p_mha["wk"] = jnp.repeat(wk, 4, axis=1).reshape(64, 128)
+    p_mha["wv"] = jnp.repeat(wv, 4, axis=1).reshape(64, 128)
+    out_mha = attention_train(cfg_mha, p_mha, x, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out_mha),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_causality():
+    """Changing future tokens cannot change past logits."""
+    cfg = get_config("olmo-1b", reduced=True)
+    key = jax.random.key(0)
+    params = model.init_params(cfg, key)
+    toks = jax.random.randint(key, (1, 16), 0, cfg.vocab)
+    toks2 = toks.at[0, -1].set((toks[0, -1] + 1) % cfg.vocab)
+
+    def logits_at(t):
+        l, aux = model.train_loss(cfg, params, {"tokens": t, "labels": t})
+        return aux["per_token_loss"]
+
+    l1, l2 = logits_at(toks), logits_at(toks2)
+    np.testing.assert_allclose(np.asarray(l1[:, :-1]),
+                               np.asarray(l2[:, :-1]), rtol=1e-5, atol=1e-6)
+
+
+def test_moe_capacity_and_combine():
+    cfg = get_config("grok-1-314b", reduced=True)
+    key = jax.random.key(3)
+    p = moe_lib.init_moe(cfg, key)
+    x = jax.random.normal(jax.random.key(4), (2, 32, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe_lib.apply_moe(cfg, p, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux["moe_lb_loss"]) >= 1.0 - 1e-3  # >= 1 by Cauchy-Schwarz
+    assert float(aux["moe_z_loss"]) >= 0.0
+
+
+def test_mamba_ssd_vs_reference():
+    from repro.models.mamba2 import ssd_chunked, ssd_reference
+    rng = np.random.default_rng(0)
+    B, S, H, P, G, N = 2, 48, 4, 8, 2, 16
+    x = jnp.asarray(rng.normal(size=(B, S, H, P)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, size=(B, S, H)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2.0, size=(H,)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(B, S, G, N)), jnp.float32)
+    want = ssd_reference(x, dt * A, dt, Bm, Cm)
+    for chunk in (8, 24, 48):
+        got, _ = ssd_chunked(x, dt * A, dt, Bm, Cm, chunk)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-5)

@@ -1,0 +1,103 @@
+"""Modulation scheme invariants (§V + Alg. 2), incl. hypothesis properties."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.modulation import (CASE_BALANCED, classify_case, lambda_star,
+                                   n_iterations, run_modulation,
+                                   solve_calibrated, solve_closed_form)
+from repro.core.types import IslaParams
+
+P = IslaParams()
+
+
+def test_case_table():
+    # D0<0, |S|<|L| -> 1 ; D0<0, |S|>|L| -> 2 ; D0>0,|S|<|L| -> 3 ; else 4
+    assert classify_case(-1.0, 10, 20, P) == 1
+    assert classify_case(-1.0, 20, 10, P) == 2
+    assert classify_case(+1.0, 10, 20, P) == 3
+    assert classify_case(+1.0, 20, 10, P) == 4
+    assert classify_case(0.5, 100, 100, P) == CASE_BALANCED
+
+
+def test_iteration_count_bound():
+    # t = ceil(log2(|D0|/thr))
+    assert n_iterations(0.8, 1e-4, 0.5) == math.ceil(math.log2(0.8 / 1e-4))
+    assert n_iterations(5e-5, 1e-4, 0.5) == 0
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    k=st.floats(-20, 20).filter(lambda x: abs(x) > 1e-6),
+    c=st.floats(50, 150),
+    delta=st.floats(-5, 5).filter(lambda x: abs(x) > 1e-6),
+    u=st.integers(5, 2000),
+    v=st.integers(5, 2000),
+)
+def test_loop_equals_closed_form(k, c, delta, u, v):
+    sketch0 = c - delta
+    loop = run_modulation(k, c, sketch0, u, v, P)
+    cf = solve_closed_form(k, c, sketch0, u, v, P)
+    assert loop.case == cf.case
+    assert loop.avg == pytest.approx(cf.avg, rel=1e-9, abs=1e-9)
+    assert loop.alpha == pytest.approx(cf.alpha, rel=1e-9, abs=1e-9)
+    assert loop.n_iter == cf.n_iter
+
+
+@settings(max_examples=100, deadline=None)
+@given(
+    k=st.floats(-20, 20).filter(lambda x: abs(x) > 1e-6),
+    c=st.floats(50, 150),
+    delta=st.floats(-5, 5).filter(lambda x: abs(x) > 1e-3),
+    u=st.integers(5, 2000),
+    v=st.integers(5, 2000),
+)
+def test_objective_invariant_and_termination(k, c, delta, u, v):
+    """After the loop: d == k*alpha + c - sketch (the state IS the
+    objective), |d| <= thr, and the alg-2 bound on iterations holds."""
+    sketch0 = c - delta
+    r = run_modulation(k, c, sketch0, u, v, P)
+    if r.case == CASE_BALANCED:
+        return
+    assert r.d == pytest.approx(k * r.alpha + c - r.sketch, abs=1e-6)
+    assert abs(r.d) <= P.thr * (1 + 1e-9)
+    assert r.n_iter <= n_iterations(c - sketch0, P.thr, P.eta)
+
+
+def test_case5_returns_sketch0():
+    r = run_modulation(1.0, 100.5, 100.0, 1000, 1000, P)
+    assert r.case == CASE_BALANCED
+    assert r.avg == 100.0
+
+
+def test_lambda_star_value():
+    # kappa for (p1, p2) = (0.5, 2.0) — truncated-normal geometry
+    assert lambda_star(0.5, 2.0) == pytest.approx(0.23812, abs=1e-4)
+    # kappa may be negative (same-side geometry, e.g. p1=0.25) — the fixed
+    # point (c + k*s0)/(1 + k) only needs k > -1
+    for p1, p2 in [(0.25, 2.0), (0.75, 2.0), (0.5, 1.5)]:
+        assert -1.0 < lambda_star(p1, p2) < 1.0
+
+
+def test_calibrated_fixed_point():
+    """thr -> 0: calibrated answer -> (c + kappa*sketch0) / (1 + kappa)."""
+    params = P.replace(thr=1e-12)
+    kappa = lambda_star(P.p1, P.p2)
+    for c, s0 in [(101.0, 100.0), (99.2, 100.4)]:
+        r = solve_calibrated(1.0, c, s0, 900, 1100, params)
+        assert r.avg == pytest.approx((c + kappa * s0) / (1 + kappa),
+                                      abs=1e-6)
+
+
+def test_calibrated_unbiased_on_model_geometry():
+    """If c sits exactly at mu + kappa*(mu - sketch0) on the opposite side
+    (the truncated-normal first-order geometry), the calibrated answer
+    recovers mu."""
+    kappa = lambda_star(P.p1, P.p2)
+    mu, delta = 100.0, 0.37
+    sketch0 = mu - delta
+    c = mu + kappa * delta
+    r = solve_calibrated(0.5, c, sketch0, 1100, 900, P.replace(thr=1e-12))
+    assert r.avg == pytest.approx(mu, abs=1e-9)

@@ -1,0 +1,126 @@
+"""Sharding rule divisibility on the production meshes (AbstractMesh — no
+devices needed) + roofline HLO parser unit tests."""
+import numpy as np
+import pytest
+import jax
+from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, list_archs, shape_applicable
+from repro.models import model
+from repro.roofline.hlo_parse import (parse_and_cost, parse_module,
+                                      shape_bytes)
+from repro.sharding import batch_specs, cache_specs, opt_state_specs, \
+    param_specs
+
+
+def _abstract_mesh(multi):
+    if multi:
+        return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
+                            axis_types=(AxisType.Auto,) * 3)
+    return AbstractMesh((16, 16), ("data", "model"),
+                        axis_types=(AxisType.Auto,) * 2)
+
+
+def _check_divisible(tree, specs, mesh, label):
+    flat_t = jax.tree_util.tree_leaves(tree)
+    flat_s = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_t) == len(flat_s)
+    for leaf, spec in zip(flat_t, flat_s):
+        for dim, axes in enumerate(spec):
+            if axes is None:
+                continue
+            names = axes if isinstance(axes, tuple) else (axes,)
+            size = int(np.prod([mesh.shape[n] for n in names]))
+            assert leaf.shape[dim] % size == 0, \
+                (f"{label}: dim {dim} of {leaf.shape} not divisible by "
+                 f"{names} ({size})")
+
+
+@pytest.mark.parametrize("multi", [False, True])
+@pytest.mark.parametrize("arch", list_archs())
+def test_param_and_opt_specs_divisible(arch, multi):
+    cfg = get_config(arch)
+    mesh = _abstract_mesh(multi)
+    ap = model.abstract_params(cfg)
+    _check_divisible(ap, param_specs(cfg, mesh, ap), mesh, f"{arch} params")
+    _check_divisible(ap, opt_state_specs(cfg, mesh, ap), mesh,
+                     f"{arch} opt")
+
+
+@pytest.mark.parametrize("multi", [False, True])
+@pytest.mark.parametrize("arch", list_archs())
+def test_batch_and_cache_specs_divisible(arch, multi):
+    cfg = get_config(arch)
+    mesh = _abstract_mesh(multi)
+    from repro.launch.specs_io import input_specs
+    for shape_name, shape in SHAPES.items():
+        if not shape_applicable(cfg, shape)[0]:
+            continue
+        spec = input_specs(cfg, shape_name)
+        _check_divisible(spec["batch"],
+                         batch_specs(cfg, mesh, spec["batch"]), mesh,
+                         f"{arch} {shape_name} batch")
+        if "cache" in spec:
+            _check_divisible(spec["cache"],
+                             cache_specs(cfg, mesh, spec["cache"]), mesh,
+                             f"{arch} {shape_name} cache")
+
+
+# ---------------- roofline parser ----------------
+
+SAMPLE_HLO = """
+HloModule test
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%d), replica_groups=[4,16]<=[64], to_apply=%add
+  ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  ROOT %lt = pred[] constant(false)
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"12"}}
+  %ag = f32[32,8] all-gather(%a), replica_groups=[16,4]<=[64], dimensions={0}
+  ROOT %r = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_shape_bytes():
+    assert shape_bytes("f32[8,8]") == 256
+    assert shape_bytes("bf16[2,3,4]") == 48
+    assert shape_bytes("(s32[], f32[8,8])") == 4 + 256
+    assert shape_bytes("pred[16]") == 16
+
+
+def test_parser_while_scaling_and_collectives():
+    cost = parse_and_cost(SAMPLE_HLO)
+    # dot: 2*8*8*8 = 1024 flops, x12 trips
+    assert cost.flops == pytest.approx(1024 * 12)
+    # all-reduce inside while: 2*256*(15/16) wire bytes, x12
+    ar = 2 * 256 * (15 / 16) * 12
+    assert cost.coll_bytes["all-reduce"] == pytest.approx(ar)
+    # all-gather in entry: out 32*8*4 = 1024 bytes * (3/4)
+    assert cost.coll_bytes["all-gather"] == pytest.approx(1024 * 0.75)
+    assert cost.unknown_trip_whiles == 0
+
+
+def test_parser_on_real_dryrun_artifact():
+    import glob, gzip, json, os
+    files = glob.glob("dryrun_out/*__train_4k__single.hlo.gz")
+    if not files:
+        pytest.skip("no dry-run artifacts present")
+    txt = gzip.open(files[0], "rt").read()
+    cost = parse_and_cost(txt)
+    assert cost.flops > 1e9
+    assert cost.hbm_bytes > 1e9
+    assert cost.unknown_trip_whiles == 0

@@ -1,0 +1,89 @@
+"""End-to-end behaviour of the paper's system (Fig. 2 pipeline) — the
+headline claims, one test per claim."""
+import numpy as np
+import pytest
+
+from conftest import normal_samplers
+from repro.core import IslaParams, aggregate
+from repro.core.engine import baseline_sample
+from repro.core import baselines
+
+
+M = 10 ** 10
+SIZES = [M // 10] * 10
+
+
+def test_answers_carry_provenance():
+    r = aggregate(normal_samplers(), SIZES, IslaParams(e=0.5),
+                  np.random.default_rng(0), mode="calibrated")
+    assert r.sample_size > 0 and 0 < r.sampling_rate < 1
+    assert len(r.blocks) == 10
+    assert r.boundaries.s_lo < r.boundaries.s_hi < r.boundaries.l_lo \
+        < r.boundaries.l_hi
+    assert float(r) == r.answer
+
+
+def test_no_sample_storage():
+    """The per-block state is 8 moments + counters — nothing else."""
+    r = aggregate(normal_samplers(), SIZES, IslaParams(e=0.5),
+                  np.random.default_rng(1))
+    b = r.blocks[0]
+    # the block result holds only scalars/moments (paper's core claim)
+    for field in ("param_s", "param_l"):
+        mom = getattr(b, field)
+        assert isinstance(mom.s3, float)
+
+
+def test_data_size_independence():
+    """§VIII-B: answers do not depend on M (sample size only depends on
+    sigma, e, beta)."""
+    params = IslaParams(e=0.5)
+    answers = []
+    for M_ in (10 ** 8, 10 ** 12, 10 ** 16):
+        r = aggregate(normal_samplers(), [M_ // 10] * 10, params,
+                      np.random.default_rng(2), mode="calibrated")
+        answers.append(r.answer)
+    assert np.ptp(answers) < 1.0
+
+
+def test_higher_confidence_tightens():
+    """§VIII-B: higher beta -> larger sample -> tighter answers."""
+    spreads = {}
+    for beta in (0.8, 0.99):
+        errs = [abs(aggregate(normal_samplers(), SIZES,
+                              IslaParams(e=0.5, beta=beta),
+                              np.random.default_rng(s),
+                              mode="calibrated").answer - 100.0)
+                for s in range(8)]
+        spreads[beta] = np.mean(errs)
+    assert spreads[0.99] <= spreads[0.8] * 1.5  # allow noise, expect <=
+
+
+def test_exponential_distribution():
+    """§VIII-E Table VI: ISLA handles exponential data; MV fails by ~2x."""
+    params = IslaParams(e=0.5)
+    for gamma in (0.05, 0.2):
+        samplers = [(lambda n, rng, g=gamma: rng.exponential(1 / g, size=n))
+                    for _ in range(10)]
+        r = aggregate(samplers, SIZES, params, np.random.default_rng(3),
+                      mode="calibrated")
+        acc = 1 / gamma
+        mv = baselines.mv_avg(
+            baseline_sample(samplers, SIZES, r.sampling_rate,
+                            np.random.default_rng(4)))
+        assert abs(r.answer - acc) < 0.2 * acc      # ISLA close
+        assert abs(mv - acc) > 0.5 * acc            # MV ~ 2/gamma
+
+
+def test_uniform_distribution():
+    """§VIII-E Table VII: uniform [1,199]; ISLA ~100, MV ~132."""
+    params = IslaParams(e=0.5)
+    samplers = [(lambda n, rng: rng.uniform(1, 199, size=n))
+                for _ in range(10)]
+    r = aggregate(samplers, SIZES, params, np.random.default_rng(5),
+                  mode="calibrated")
+    mv = baselines.mv_avg(
+        baseline_sample(samplers, SIZES, r.sampling_rate,
+                        np.random.default_rng(6)))
+    assert abs(r.answer - 100.0) < 2.0
+    assert abs(mv - 132.0) < 2.0

@@ -1,0 +1,83 @@
+"""Region classification + moments: completeness, merge, scale properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.boundaries import choose_q, deviation_degree, make_boundaries
+from repro.core.types import (REGION_L, REGION_N, REGION_S, REGION_TL,
+                              REGION_TS, Boundaries, IslaParams, RegionMoments,
+                              classify_np, region_of)
+
+P = IslaParams()
+B = make_boundaries(100.0, 20.0, P)  # s in (60, 90), l in (110, 140)
+
+
+def test_boundary_edges():
+    # §IV-A1: TS (-inf,60]; S (60,90); N [90,110]; L (110,140); TL [140,inf)
+    assert region_of(60.0, B) == REGION_TS
+    assert region_of(60.0001, B) == REGION_S
+    assert region_of(90.0, B) == REGION_N
+    assert region_of(110.0, B) == REGION_N
+    assert region_of(110.0001, B) == REGION_L
+    assert region_of(140.0, B) == REGION_TL
+
+
+@settings(max_examples=100, deadline=None)
+@given(v=st.floats(-1e6, 1e6))
+def test_classification_total(v):
+    """Every value falls in exactly one region; vectorized == scalar."""
+    r = region_of(v, B)
+    assert r in (REGION_TS, REGION_S, REGION_N, REGION_L, REGION_TL)
+    assert classify_np(np.array([v]), B)[0] == r
+
+
+def test_moments_merge_additive(rng):
+    a = rng.normal(100, 20, size=500)
+    b = rng.normal(100, 20, size=300)
+    from repro.core.estimator import moments_from_values
+    m_ab = moments_from_values(np.concatenate([a, b]))
+    m = moments_from_values(a).merge(moments_from_values(b))
+    for f in ("count", "s1", "s2", "s3"):
+        assert getattr(m, f) == pytest.approx(getattr(m_ab, f), rel=1e-12)
+
+
+@settings(max_examples=50, deadline=None)
+@given(scale=st.floats(0.01, 100.0))
+def test_moments_scale_equivariance(scale):
+    from repro.core.estimator import moments_from_values
+    vals = np.linspace(1.0, 9.0, 11)
+    m = moments_from_values(vals).scaled(scale)
+    ms = moments_from_values(vals * scale)
+    assert m.s1 == pytest.approx(ms.s1, rel=1e-12)
+    assert m.s2 == pytest.approx(ms.s2, rel=1e-12)
+    assert m.s3 == pytest.approx(ms.s3, rel=1e-12)
+
+
+def test_isla_scale_equivariance():
+    """The whole estimator is scale-equivariant: isla(s*a) == s*isla(a) —
+    the fp32-safety lever of the distributed path."""
+    from repro.core.estimator import moments_from_values, theorem3_kc
+    rng = np.random.default_rng(0)
+    xs = rng.uniform(60, 90, size=30)
+    ys = rng.uniform(110, 140, size=33)
+    k1, c1 = theorem3_kc(moments_from_values(xs), moments_from_values(ys), 1.0)
+    s = 37.5
+    k2, c2 = theorem3_kc(moments_from_values(xs * s),
+                         moments_from_values(ys * s), 1.0)
+    assert k2 == pytest.approx(k1 * s, rel=1e-9)
+    assert c2 == pytest.approx(c1 * s, rel=1e-9)
+
+
+def test_choose_q_schedule():
+    # §IV-A4 + §VIII defaults: q' = 5 mild, 10 strong; 1/q' when |S|>|L|
+    assert choose_q(1.0, P) == 1.0
+    assert choose_q(0.98, P) == 1.0
+    assert choose_q(0.95, P) == 5.0
+    assert choose_q(1.05, P) == pytest.approx(1 / 5)
+    assert choose_q(0.5, P) == 10.0
+    assert choose_q(2.0, P) == pytest.approx(1 / 10)
+
+
+def test_deviation_degree():
+    assert deviation_degree(10, 20) == 0.5
+    assert deviation_degree(10, 0) == float("inf")
