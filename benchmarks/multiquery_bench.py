@@ -1,0 +1,104 @@
+"""Batched engine + multi-query benchmarks.
+
+Headline: the vectorized Calculation phase (one stacked Phase 1 + Phase 2)
+vs the per-block Python loop at 1000 blocks — the tentpole acceptance is
+>= 5x.  Both sides draw the identical RNG stream and produce bit-identical
+block answers (asserted), so the speedup is pure engine overhead removal.
+
+Contract: each bench yields ``(name, us_per_call, derived)`` rows like the
+paper_tables benches; ``derived`` carries the headline ratio/answer.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.boundaries import make_boundaries
+from repro.core.engine import (IslaQuery, run_block, run_blocks_batched)
+from repro.core.multiquery import MultiQueryExecutor
+from repro.core.types import IslaParams
+
+MU, SIGMA = 100.0, 20.0
+
+
+def _samplers(b):
+    return [(lambda n, rng, m=MU, s=SIGMA: rng.normal(m, s, size=n))
+            for _ in range(b)]
+
+
+def _time(fn, repeat=3):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+    return out, best * 1e6
+
+
+def batched_vs_sequential_calculation():
+    """Per-block loop vs stacked arrays on the identical sample stream."""
+    params = IslaParams()
+    boundaries = make_boundaries(MU, SIGMA, params)
+    rows = []
+    for n_blocks in (100, 1000):
+        sizes = [10 ** 7] * n_blocks
+        rate = 64 / 10 ** 7          # 64 samples per block
+        samplers = _samplers(n_blocks)
+
+        def sequential():
+            rng = np.random.default_rng(0)
+            return [run_block(j, s, bs, rate, boundaries, MU, params, rng,
+                              mode="faithful_cf")
+                    for j, (s, bs) in enumerate(zip(samplers, sizes))]
+
+        def batched():
+            rng = np.random.default_rng(0)
+            blocks, _, _ = run_blocks_batched(
+                samplers, sizes, rate, boundaries, MU, params, rng,
+                mode="faithful_cf")
+            return blocks
+
+        seq, seq_us = _time(sequential)
+        bat, bat_us = _time(batched)
+        if not np.array_equal(np.array([b.avg for b in seq]),
+                              np.asarray(bat.avg)):
+            raise AssertionError("batched != sequential — benchmark invalid")
+        speedup = seq_us / bat_us
+        rows.append((f"engine_sequential/b{n_blocks}", seq_us, 0.0))
+        rows.append((f"engine_batched/b{n_blocks}", bat_us, speedup))
+    return rows
+
+
+def multiquery_shared_pass():
+    """N concurrent queries from one pass vs one pipeline per query."""
+    n_blocks = 1000
+    sizes = [10 ** 7] * n_blocks
+    samplers = _samplers(n_blocks)
+    queries = [IslaQuery(e=0.1, agg="AVG"), IslaQuery(e=0.2, agg="SUM"),
+               IslaQuery(e=0.1, agg="VAR"), IslaQuery(e=0.5, agg="COUNT")]
+    ex = MultiQueryExecutor(samplers, sizes, params=IslaParams())
+
+    def shared():
+        return ex.run(queries, np.random.default_rng(0))
+
+    def per_query():
+        return [ex.run([q], np.random.default_rng(0)) for q in queries]
+
+    ans, shared_us = _time(shared)
+    _, naive_us = _time(per_query)
+    err = abs(ans[0].value - MU)
+    return [("multiquery_shared_4q/b1000", shared_us, naive_us / shared_us),
+            ("multiquery_avg_abs_err", shared_us, err)]
+
+
+def main():
+    print("name,us_per_call,derived")
+    for bench in (batched_vs_sequential_calculation, multiquery_shared_pass):
+        for name, us, derived in bench():
+            print(f"{name},{us:.1f},{derived:.6g}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

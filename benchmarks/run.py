@@ -7,9 +7,11 @@ import sys
 
 
 def main() -> None:
-    from . import paper_tables, telemetry_bench
+    from . import multiquery_bench, paper_tables, telemetry_bench
 
     benches = [
+        multiquery_bench.batched_vs_sequential_calculation,
+        multiquery_bench.multiquery_shared_pass,
         paper_tables.table3_leverage_effects,
         paper_tables.table4_accuracy,
         paper_tables.table5_modulation,

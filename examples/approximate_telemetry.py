@@ -19,6 +19,7 @@ import jax.numpy as jnp                                      # noqa: E402
 import numpy as np                                           # noqa: E402
 from jax.sharding import PartitionSpec as P                  # noqa: E402
 
+from repro.compat import shard_map                           # noqa: E402
 from repro.core.distributed import exact_mean, isla_mean     # noqa: E402
 from repro.core.types import IslaParams                      # noqa: E402
 from repro.launch.mesh import make_host_mesh                 # noqa: E402
@@ -38,7 +39,7 @@ def telemetry(x):
     def inner(xs):
         return (isla_mean(xs, params, axis_names=("data",), rate=0.02),
                 exact_mean(xs, ("data",)))
-    return jax.shard_map(inner, mesh=mesh, in_specs=P("data", None),
+    return shard_map(inner, mesh=mesh, in_specs=P("data", None),
                          out_specs=(P(), P()))(x)
 
 
@@ -63,7 +64,7 @@ def compressed_dp(g, e):
         out, e2 = dp_allreduce_grads({"w": gw}, {"w": ew}, "data",
                                      compress=True)
         return out["w"], e2["w"]
-    return jax.shard_map(inner, mesh=mesh, in_specs=(P(None), P(None)),
+    return shard_map(inner, mesh=mesh, in_specs=(P(None), P(None)),
                          out_specs=(P(None), P(None)))(g["w"], e["w"])
 
 

@@ -3,8 +3,14 @@
 The boundaries divide the value axis into TS/S/N/L/TL using the *sketch
 estimator* ``sketch0`` (not the true mean — that is the point: the later
 iteration corrects sketch0's deviation) and the pilot sigma.
+
+The ``*_batch`` variants are the host-side vectorized mirrors used by the
+batched engine: same comparisons, same constants, elementwise over stacked
+blocks, bit-identical per lane to the scalar versions.
 """
 from __future__ import annotations
+
+import numpy as np
 
 from .types import Boundaries, IslaParams
 
@@ -54,3 +60,30 @@ def choose_q(dev: float, params: IslaParams) -> float:
 def is_balanced(dev: float, params: IslaParams) -> bool:
     """Case 5 trigger (§V-C): |S| ≈ |L|."""
     return params.balanced_lo < dev < params.balanced_hi
+
+
+def deviation_degree_batch(u: np.ndarray, v: np.ndarray) -> np.ndarray:
+    """Vectorized ``deviation_degree``: u/v with +inf where v == 0."""
+    u = np.asarray(u, dtype=np.float64)
+    v = np.asarray(v, dtype=np.float64)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        dev = u / v
+    return np.where(v > 0, dev, np.inf)
+
+
+def choose_q_batch(dev: np.ndarray, params: IslaParams) -> np.ndarray:
+    """Vectorized ``choose_q`` — identical thresholds and constants."""
+    dev = np.asarray(dev, dtype=np.float64)
+    lo_strong, lo_mild = params.mild_lo, 0.97
+    hi_mild, hi_strong = 1.03, params.mild_hi
+    mild = (((lo_strong <= dev) & (dev < lo_mild))
+            | ((hi_mild < dev) & (dev <= hi_strong)))
+    qp = np.where(mild, params.q_mild, params.q_strong)
+    q = np.where(dev > 1.0, 1.0 / qp, qp)
+    return np.where((lo_mild <= dev) & (dev <= hi_mild), 1.0, q)
+
+
+def is_balanced_batch(dev: np.ndarray, params: IslaParams) -> np.ndarray:
+    """Vectorized Case 5 trigger."""
+    dev = np.asarray(dev, dtype=np.float64)
+    return (params.balanced_lo < dev) & (dev < params.balanced_hi)

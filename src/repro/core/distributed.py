@@ -73,10 +73,13 @@ def choose_q(dev: jnp.ndarray, params: IslaParams) -> jnp.ndarray:
 
 def theorem3_kc(mom_s: jnp.ndarray, mom_l: jnp.ndarray, q: jnp.ndarray
                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Closed-form (k, c) from 4-vector moments; safe for u=0 / v=0 (the
-    caller masks those out)."""
-    u, sx, sx2, sx3 = mom_s[0], mom_s[1], mom_s[2], mom_s[3]
-    v, sy, sy2, sy3 = mom_l[0], mom_l[1], mom_l[2], mom_l[3]
+    """Closed-form (k, c) from moment vectors; safe for u=0 / v=0 (the
+    caller masks those out).  Accepts a single (4,) vector or any stack of
+    them (..., 4) — the batched multi-query route feeds (n_blocks, 4)."""
+    u, sx, sx2, sx3 = (mom_s[..., 0], mom_s[..., 1], mom_s[..., 2],
+                       mom_s[..., 3])
+    v, sy, sy2, sy3 = (mom_l[..., 0], mom_l[..., 1], mom_l[..., 2],
+                       mom_l[..., 3])
     eps = jnp.float32(1e-30)
     t2 = sx2 + sy2
     denom_s = (1.0 + v / (q * jnp.maximum(u, 1.0))) * (u * t2 - sx2)
@@ -103,13 +106,17 @@ def phase2(mom_s: jnp.ndarray, mom_l: jnp.ndarray, sketch0: jnp.ndarray,
            geometry=None) -> jnp.ndarray:
     """Branchless Phase 2.  Returns the block's partial answer.
 
+    Fully elementwise: feed one (4,) moment pair for a scalar answer, or
+    stacked (n_blocks, 4) pairs for n partial answers in one call — the
+    device route of ``multiquery.MultiQueryExecutor``.
+
     mode="calibrated" — ISLA-C fixed point (geometry-correct lambda*).
     mode="empirical"  — ISLA-E: geometry=(kappa, b0) measured from the pilot.
     mode="faithful"   — §V-C case table, algebraic form (== host closed form).
     Falls back to sketch0 when u or v is 0, to c when k ~ 0.
     """
     eta, lam, thr = params.eta, params.lam, params.thr
-    u, v = mom_s[0], mom_l[0]
+    u, v = mom_s[..., 0], mom_l[..., 0]
     q = choose_q(u / jnp.maximum(v, 1.0), params)
     k, c = theorem3_kc(mom_s, mom_l, q)
     d0 = c - sketch0

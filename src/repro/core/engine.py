@@ -3,6 +3,23 @@ Pre-estimation -> Calculation -> Summarization pipeline (paper Fig. 2).
 
 Host path: float64 numpy.  The device path lives in ``distributed.py`` and is
 bit-validated against this one in tests.
+
+Two execution engines share the pipeline:
+
+ * ``engine="sequential"`` — the per-block scalar loop (``run_block`` per
+   block), the bit-validated reference oracle.  Its Phase 2 logic is kept
+   verbatim; Phase 1 routes through the same ``np.bincount`` accumulator as
+   the batched path (stream order == Alg. 1's ``updateParams``) — that shared
+   summation order is what makes the two engines bit-identical, at the cost
+   of sequential-accumulation rounding (O(n*eps) vs pairwise O(log n * eps))
+   on per-block moment sums.
+ * ``engine="batched"`` (default) — Theorem 3 collapses each block to 8
+   streaming moments, so n blocks stack into (n, 4)+(n, 4) arrays and both
+   phases evaluate as one vectorized computation (``phase1_sampling_batch``
+   + ``phase2_iteration_batch``).  Bit-identical to the sequential path per
+   block (float64, same operation order; see ``modulation.n_iterations_batch``
+   for the two libm-exactness details), ~an order of magnitude faster at
+   1000+ blocks (see benchmarks/multiquery_bench.py).
 """
 from __future__ import annotations
 
@@ -13,16 +30,20 @@ from typing import Callable, Optional, Sequence, Tuple
 import numpy as np
 
 from . import baselines
-from .boundaries import choose_q, deviation_degree, make_boundaries
-from .estimator import theorem3_kc
-from .modulation import (CASE_BALANCED, ModulationResult, empirical_geometry,
-                         run_modulation, solve_calibrated, solve_closed_form,
-                         solve_empirical)
+from .boundaries import (choose_q, choose_q_batch, deviation_degree,
+                         deviation_degree_batch, make_boundaries)
+from .estimator import theorem3_kc, theorem3_kc_batch
+from .modulation import (CASE_BALANCED, ModulationBatchResult,
+                         ModulationResult, empirical_geometry, run_modulation,
+                         solve_calibrated, solve_calibrated_batch,
+                         solve_closed_form, solve_closed_form_batch,
+                         solve_empirical, solve_empirical_batch)
 from .preestimation import (PilotResult, array_sampler, required_sample_size,
                             run_pilot, sampling_rate)
 from .summarize import summarize
-from .types import (AggregateResult, BlockResult, Boundaries, IslaParams,
-                    REGION_L, REGION_S, RegionMoments, classify_np)
+from .types import (AggregateResult, BlockResult, BlockResultsBatch,
+                    Boundaries, IslaParams, REGION_L, REGION_S, RegionMoments,
+                    classify_np)
 
 Sampler = Callable[[int, np.random.Generator], np.ndarray]
 
@@ -30,24 +51,76 @@ Sampler = Callable[[int, np.random.Generator], np.ndarray]
 _K_EPS = 1e-12
 
 
+def _region_moment_rows(values: np.ndarray, block_ids: np.ndarray,
+                        n_blocks: int, boundaries: Boundaries
+                        ) -> Tuple[np.ndarray, np.ndarray]:
+    """Alg. 1 over a stream tagged with block ids: (n_blocks, 4) moment rows
+    ``(count, s1, s2, s3)`` for S and for L.
+
+    ``np.bincount`` accumulates weights in stream order — exactly the
+    sequential ``updateParams`` of Alg. 1 — which is what makes the scalar
+    and batched engines bit-identical (both route through here).
+    """
+    codes = classify_np(values, boundaries)
+
+    def rows(region: int) -> np.ndarray:
+        m = codes == region
+        ids = block_ids[m]
+        vals = values[m]
+        cnt = np.bincount(ids, minlength=n_blocks).astype(np.float64)
+        s1 = np.bincount(ids, weights=vals, minlength=n_blocks)
+        s2 = np.bincount(ids, weights=vals * vals, minlength=n_blocks)
+        # vals * vals * vals, not vals ** 3: numpy pow differs from repeated
+        # multiplication by an ulp, and updateParams uses a * a * a.
+        s3 = np.bincount(ids, weights=vals * vals * vals,
+                         minlength=n_blocks)
+        return np.stack([cnt, s1, s2, s3], axis=1)
+
+    return rows(REGION_S), rows(REGION_L)
+
+
 def phase1_sampling(samples: np.ndarray, boundaries: Boundaries
                     ) -> Tuple[RegionMoments, RegionMoments]:
     """Alg. 1: classify samples, accumulate S/L moments, drop the samples.
 
-    Vectorized host version of the scalar loop; the Pallas kernel
+    Vectorized host version of the scalar loop (single-block case of
+    ``phase1_sampling_batch``); the Pallas kernel
     (``repro.kernels.isla_moments``) implements the same contract on TPU.
     """
-    s = np.asarray(samples, dtype=np.float64)
-    codes = classify_np(s, boundaries)
-    xs = s[codes == REGION_S]
-    ys = s[codes == REGION_L]
+    s = np.asarray(samples, dtype=np.float64).reshape(-1)
+    rows_s, rows_l = _region_moment_rows(
+        s, np.zeros(s.size, dtype=np.intp), 1, boundaries)
+    return (RegionMoments(*(float(x) for x in rows_s[0])),
+            RegionMoments(*(float(x) for x in rows_l[0])))
 
-    def mom(vals: np.ndarray) -> RegionMoments:
-        return RegionMoments(
-            count=float(vals.size), s1=float(np.sum(vals)),
-            s2=float(np.sum(vals * vals)), s3=float(np.sum(vals ** 3)))
 
-    return mom(xs), mom(ys)
+def phase1_sampling_batch(values: np.ndarray, block_ids: np.ndarray,
+                          n_blocks: int, boundaries: Boundaries
+                          ) -> Tuple[np.ndarray, np.ndarray]:
+    """Alg. 1 over all blocks at once.
+
+    ``values`` is the concatenation of every block's samples and
+    ``block_ids`` tags each sample with its block; returns (n_blocks, 4)
+    S and L moment rows.  Per block bit-identical to ``phase1_sampling``.
+    """
+    values = np.asarray(values, dtype=np.float64).reshape(-1)
+    block_ids = np.asarray(block_ids, dtype=np.intp).reshape(-1)
+    if values.shape != block_ids.shape:
+        raise ValueError("values and block_ids must align")
+    return _region_moment_rows(values, block_ids, n_blocks, boundaries)
+
+
+def sample_moments_batch(values: np.ndarray, block_ids: np.ndarray,
+                         n_blocks: int) -> np.ndarray:
+    """(n_blocks, 3) plain moments ``(count, s1, s2)`` of *all* samples per
+    block (no region mask) — the extra accumulators VAR/COUNT estimators
+    compose with the leverage-based mean (see ``multiquery``)."""
+    values = np.asarray(values, dtype=np.float64).reshape(-1)
+    block_ids = np.asarray(block_ids, dtype=np.intp).reshape(-1)
+    cnt = np.bincount(block_ids, minlength=n_blocks).astype(np.float64)
+    s1 = np.bincount(block_ids, weights=values, minlength=n_blocks)
+    s2 = np.bincount(block_ids, weights=values * values, minlength=n_blocks)
+    return np.stack([cnt, s1, s2], axis=1)
 
 
 _SOLVERS = {
@@ -56,6 +129,9 @@ _SOLVERS = {
     "calibrated": solve_calibrated,    # beyond-paper: lambda* geometry (ISLA-C)
     # "empirical" (ISLA-E) needs the pilot geometry — handled explicitly.
 }
+
+# Every Phase 2 mode the pipeline accepts ("auto" resolves from pilot skew).
+MODES = ("faithful", "faithful_cf", "calibrated", "empirical", "auto")
 
 
 def phase2_iteration(param_s: RegionMoments, param_l: RegionMoments,
@@ -86,6 +162,171 @@ def phase2_iteration(param_s: RegionMoments, param_l: RegionMoments,
     return _SOLVERS[mode](k, c, sketch0, u, v, params)
 
 
+_BATCH_SOLVERS = {
+    "faithful": solve_closed_form_batch,     # Alg. 2 recursion, algebraic form
+    "faithful_cf": solve_closed_form_batch,
+    "calibrated": solve_calibrated_batch,
+    # "empirical" needs the pilot geometry — handled explicitly.
+}
+
+
+def phase2_iteration_batch(mom_s: np.ndarray, mom_l: np.ndarray,
+                           sketch0: float, params: IslaParams,
+                           mode: str = "faithful",
+                           geometry=None) -> ModulationBatchResult:
+    """Alg. 2 over all blocks at once: (n, 4) S/L moment rows in, per-block
+    modulation results out.
+
+    Per block bit-identical to ``phase2_iteration`` for the closed-form
+    modes ("faithful_cf", "calibrated", "empirical"), including the
+    empty-region and k~=0 fallbacks.  mode="faithful" maps to the closed
+    form — the batched engine never runs a data-dependent loop.  The loop
+    and its algebraic evaluation agree to 1e-12 whenever the iteration
+    count t = ceil(log_{1/eta}(|D0|/thr)) fits the loop's max_iter cap of
+    200 (always true at the paper's eta=0.5; an eta pushed toward 1 can
+    exceed it, where the loop stops early and only the closed form
+    converges fully).
+    """
+    mom_s = np.asarray(mom_s, dtype=np.float64)
+    mom_l = np.asarray(mom_l, dtype=np.float64)
+    u, v = mom_s[:, 0], mom_l[:, 0]
+    empty = (u < params.min_region_count) | (v < params.min_region_count)
+    # Mirror the scalar theorem3_kc contract: lanes that pass the
+    # min_region_count gate but violate Theorem 3's preconditions are a
+    # caller bug, and the sequential engine raises — a silent NaN answer
+    # must not differ.  Order matches the scalar checks (u/v first).
+    degenerate = ~empty & ((u <= 0) | (v <= 0))  # min_region_count == 0
+    if np.any(degenerate):
+        raise ValueError("Theorem 3 needs samples in S and L; offending "
+                         f"blocks: {np.nonzero(degenerate)[0].tolist()[:8]}")
+    bad = ~empty & ((mom_s[:, 2] + mom_l[:, 2] <= 0) | (mom_l[:, 2] <= 0))
+    if np.any(bad):
+        raise ValueError("square sums must be positive (positive data "
+                         f"assumed); offending blocks: "
+                         f"{np.nonzero(bad)[0].tolist()[:8]}")
+    dev = deviation_degree_batch(u, v)
+    q = choose_q_batch(dev, params)
+    k, c = theorem3_kc_batch(mom_s, mom_l, q)  # garbage on empty lanes
+
+    if mode == "empirical":
+        if geometry is None:
+            raise ValueError("mode='empirical' needs the pilot geometry")
+        kappa, b0 = geometry
+        res = solve_empirical_batch(k, c, sketch0, u, v, params, kappa, b0)
+    else:
+        res = _BATCH_SOLVERS[mode](k, c, sketch0, u, v, params)
+
+    sk0 = np.broadcast_to(np.asarray(sketch0, dtype=np.float64), k.shape)
+    # k ~= 0: the l-estimator cannot move; c is the uniform S∪L answer.
+    knull = np.abs(k) < _K_EPS
+    avg = np.where(knull, c, res.avg)
+    alpha = np.where(knull, 0.0, res.alpha)
+    sketch = np.where(knull, sk0, res.sketch)
+    d = np.where(knull, c - sk0, res.d)
+    n_iter = np.where(knull, 0.0, res.n_iter)
+    case = np.where(knull, CASE_BALANCED, res.case)
+    # Empty region: Theorem 3 needs u, v > 0 — fall back to sketch0 (checked
+    # first in the scalar path, so it wins over the k guard here).
+    avg = np.where(empty, sk0, avg)
+    alpha = np.where(empty, 0.0, alpha)
+    sketch = np.where(empty, sk0, sketch)
+    d = np.where(empty, 0.0, d)
+    n_iter = np.where(empty, 0.0, n_iter)
+    case = np.where(empty, CASE_BALANCED, case)
+    return ModulationBatchResult(avg=avg, alpha=alpha, sketch=sketch, d=d,
+                                 n_iter=n_iter, case=case.astype(np.int64))
+
+
+def resolve_mode_and_geometry(pilot: PilotResult, params: IslaParams,
+                              mode: str):
+    """Shared pre-estimation tail: resolve mode="auto" from pilot skew
+    (calibrated for near-symmetric data — the analytic geometry is
+    lowest-variance — empirical for real skew) and fit the ISLA-E band
+    geometry when empirical.  Used by ``aggregate`` and the multi-query
+    executor so the heuristic lives in exactly one place."""
+    shifted_sketch0 = pilot.sketch0 + pilot.shift
+    if mode == "auto":
+        pv = pilot.values
+        skew = float(np.mean(((pv - np.mean(pv)) / (np.std(pv) + 1e-12))
+                             ** 3))
+        mode = "empirical" if abs(skew) > 0.5 else "calibrated"
+    geometry = None
+    if mode == "empirical":
+        geometry = empirical_geometry(pilot.values + pilot.shift,
+                                      shifted_sketch0, pilot.sigma, params)
+    return mode, geometry
+
+
+def block_quotas(block_sizes: Sequence[int], rate: float,
+                 max_samples: Optional[int] = None) -> "list[int]":
+    """Per-block sample quotas — the same formula ``run_block`` applies."""
+    quotas = []
+    for bs in block_sizes:
+        m = int(math.ceil(rate * bs))
+        if max_samples is not None:
+            m = min(m, int(max_samples))
+        quotas.append(max(m, 1))
+    return quotas
+
+
+def sample_blocks_batched(block_samplers: Sequence[Sampler],
+                          block_sizes: Sequence[int], rate: float,
+                          boundaries: Boundaries, rng: np.random.Generator,
+                          shift: float = 0.0,
+                          max_samples: Optional[int] = None
+                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                     np.ndarray, np.ndarray]:
+    """Sampling + Phase 1 for every block, stacked.
+
+    Samples are drawn per block in block order — the identical RNG stream the
+    sequential path consumes.  Returns ``(values, block_ids, mom_s, mom_l,
+    quotas)``; callers pick the Phase 2 executor (host vectorized solvers,
+    or the jnp/device path in ``distributed.phase2``).
+
+    Memory: the whole tagged stream is materialized at once (sum of quotas
+    floats) — negligible at ISLA's Eq. 1 rates, but a deliberate departure
+    from the sequential engine's O(one-block) profile; callers with huge
+    per-block quotas should use ``engine="sequential"`` (or the chunked
+    accumulation noted in ROADMAP.md).
+    """
+    n = len(block_samplers)
+    quotas = block_quotas(block_sizes, rate, max_samples)
+    raws = [np.asarray(sampler(m, rng), dtype=np.float64)
+            for sampler, m in zip(block_samplers, quotas)]
+    values = np.concatenate(raws) + shift if n else np.zeros(0)
+    block_ids = np.repeat(np.arange(n, dtype=np.intp), quotas)
+    mom_s, mom_l = phase1_sampling_batch(values, block_ids, n, boundaries)
+    return values, block_ids, mom_s, mom_l, np.asarray(quotas,
+                                                       dtype=np.int64)
+
+
+def run_blocks_batched(block_samplers: Sequence[Sampler],
+                       block_sizes: Sequence[int], rate: float,
+                       boundaries: Boundaries, sketch0: float,
+                       params: IslaParams, rng: np.random.Generator,
+                       shift: float = 0.0,
+                       max_samples: Optional[int] = None,
+                       mode: str = "faithful", geometry=None
+                       ) -> Tuple[BlockResultsBatch, np.ndarray, np.ndarray]:
+    """All blocks' partial answers as one stacked computation (both phases
+    vectorized on the host).
+
+    Returns ``(blocks, values, block_ids)``; the tagged sample stream is
+    returned so multi-query executors can derive further estimators (VAR
+    second moments, predicate COUNTs) from the same pass without
+    re-sampling.
+    """
+    values, block_ids, mom_s, mom_l, quotas = sample_blocks_batched(
+        block_samplers, block_sizes, rate, boundaries, rng, shift=shift,
+        max_samples=max_samples)
+    res = phase2_iteration_batch(mom_s, mom_l, sketch0, params, mode=mode,
+                                 geometry=geometry)
+    blocks = BlockResultsBatch(
+        avg=res.avg, alpha=res.alpha, sketch=res.sketch, case=res.case,
+        n_iter=res.n_iter, mom_s=mom_s, mom_l=mom_l, n_sampled=quotas)
+    return blocks, values, block_ids
+
+
 def run_block(block_id: int, sampler: Sampler, block_size: int, rate: float,
               boundaries: Boundaries, sketch0: float, params: IslaParams,
               rng: np.random.Generator, shift: float = 0.0,
@@ -101,10 +342,7 @@ def run_block(block_id: int, sampler: Sampler, block_size: int, rate: float,
     ``max_samples`` — the time-constraint extension (§VII-F) / straggler
     mitigation: truncate this block's quota; moments are valid at any prefix.
     """
-    m = int(math.ceil(rate * block_size))
-    if max_samples is not None:
-        m = min(m, int(max_samples))
-    m = max(m, 1)
+    m = block_quotas([block_size], rate, max_samples)[0]
     raw = np.asarray(sampler(m, rng), dtype=np.float64) + shift
     p_s, p_l = phase1_sampling(raw, boundaries)
     if carry is not None:
@@ -118,11 +356,20 @@ def run_block(block_id: int, sampler: Sampler, block_size: int, rate: float,
         n_sampled=m, param_s=p_s, param_l=p_l)
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(frozen=True)
 class IslaQuery:
-    """SELECT AVG(column) FROM data WHERE precision=e (paper §II-B)."""
+    """SELECT <agg>(column) FROM data WHERE precision=e (paper §II-B,
+    extended to the BlinkDB-style multi-aggregate workload).
+
+    ``e`` is the precision target on the *mean* scale for every aggregate
+    (a SUM answer therefore carries an absolute bound of M * e); ``agg`` is
+    one of AVG / SUM / COUNT / VAR — see ``repro.core.multiquery`` for how
+    non-AVG aggregates compose from the leverage-based mean and the shared
+    block moments.
+    """
     e: float = 0.1
     beta: float = 0.95
+    agg: str = "AVG"
 
 
 def aggregate(block_samplers: Sequence[Sampler],
@@ -132,15 +379,25 @@ def aggregate(block_samplers: Sequence[Sampler],
               rate_override: Optional[float] = None,
               sigma_guess: Optional[float] = None,
               mode: str = "faithful",
-              deadline_samples: Optional[int] = None) -> AggregateResult:
-    """Full pipeline: Pre-estimation -> per-block Calculation -> Summarization.
+              deadline_samples: Optional[int] = None,
+              engine: str = "batched") -> AggregateResult:
+    """Full pipeline: Pre-estimation -> Calculation -> Summarization.
 
     ``rate_override`` lets experiments set the sampling rate directly (e.g.
     Table III uses r/3).  ``deadline_samples`` caps every block's quota
-    (time-constraint extension).
+    (time-constraint extension).  ``engine`` picks the Calculation executor:
+    "batched" (default) stacks every block into one vectorized Phase 1 +
+    Phase 2 evaluation; "sequential" is the per-block reference loop the
+    batched path is bit-validated against (for the closed-form modes; the
+    loop-based mode="faithful" maps onto its algebraic closed form when
+    batched, which agrees to 1e-12).
     """
     if len(block_samplers) != len(block_sizes):
         raise ValueError("one sampler per block required")
+    if engine not in ("batched", "sequential"):
+        raise ValueError(f"unknown engine {engine!r}")
+    if mode not in MODES:
+        raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
     data_size = int(sum(block_sizes))
 
     # --- Pre-estimation: pilot -> sigma, sketch0, shift; rate from Eq. 1.
@@ -153,30 +410,26 @@ def aggregate(block_samplers: Sequence[Sampler],
     shifted_sketch0 = pilot.sketch0 + pilot.shift
     boundaries = make_boundaries(shifted_sketch0, pilot.sigma, params)
 
-    # mode="auto": calibrated for near-symmetric data (analytic geometry is
-    # lowest-variance), empirical when the pilot shows real skew.
-    if mode == "auto":
-        pv = pilot.values
-        skew = float(np.mean(((pv - np.mean(pv)) / (np.std(pv) + 1e-12))
-                             ** 3))
-        mode = "empirical" if abs(skew) > 0.5 else "calibrated"
+    mode, geometry = resolve_mode_and_geometry(pilot, params, mode)
 
-    # ISLA-E: fit the band geometry (kappa, b0) on the pilot distribution.
-    geometry = None
-    if mode == "empirical":
-        geometry = empirical_geometry(pilot.values + pilot.shift,
-                                      shifted_sketch0, pilot.sigma, params)
-
-    # --- Calculation: per-block Alg. 1 + Alg. 2.
-    blocks = []
-    for j, (sampler, bs) in enumerate(zip(block_samplers, block_sizes)):
-        blocks.append(run_block(
-            j, sampler, bs, rate, boundaries, shifted_sketch0, params, rng,
-            shift=pilot.shift, max_samples=deadline_samples, mode=mode,
-            geometry=geometry))
+    # --- Calculation: Alg. 1 + Alg. 2, stacked or per block.
+    if engine == "batched":
+        blocks, _, _ = run_blocks_batched(
+            block_samplers, block_sizes, rate, boundaries, shifted_sketch0,
+            params, rng, shift=pilot.shift, max_samples=deadline_samples,
+            mode=mode, geometry=geometry)
+        partials = blocks.avg
+    else:
+        blocks = []
+        for j, (sampler, bs) in enumerate(zip(block_samplers, block_sizes)):
+            blocks.append(run_block(
+                j, sampler, bs, rate, boundaries, shifted_sketch0, params,
+                rng, shift=pilot.shift, max_samples=deadline_samples,
+                mode=mode, geometry=geometry))
+        partials = [b.avg for b in blocks]
 
     # --- Summarization: final = sum avg_j * |B_j| / M, then un-shift.
-    answer = summarize([b.avg for b in blocks], list(block_sizes)) - pilot.shift
+    answer = summarize(partials, list(block_sizes)) - pilot.shift
     return AggregateResult(
         answer=answer, sketch0=pilot.sketch0, sigma=pilot.sigma,
         sampling_rate=rate, sample_size=sample_size, blocks=blocks,

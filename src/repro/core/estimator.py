@@ -45,6 +45,32 @@ def theorem3_kc(param_s: RegionMoments, param_l: RegionMoments, q: float
     return k, c
 
 
+def theorem3_kc_batch(mom_s: np.ndarray, mom_l: np.ndarray, q: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+    """Vectorized Theorem 3 over stacked blocks: (n, 4) S/L moment rows
+    ``(count, s1, s2, s3)`` and per-block q -> per-block (k, c).
+
+    The arithmetic mirrors ``theorem3_kc`` expression-for-expression so each
+    lane is bit-identical to the scalar path (float64, same operation order).
+    Lanes with an empty region or non-positive square sums produce garbage
+    (inf/nan) instead of raising — callers mask them out, exactly like the
+    jnp path in ``distributed.py``.
+    """
+    mom_s = np.asarray(mom_s, dtype=np.float64)
+    mom_l = np.asarray(mom_l, dtype=np.float64)
+    q = np.asarray(q, dtype=np.float64)
+    u, sx, sx2, sx3 = (mom_s[:, 0], mom_s[:, 1], mom_s[:, 2], mom_s[:, 3])
+    v, sy, sy2, sy3 = (mom_l[:, 0], mom_l[:, 1], mom_l[:, 2], mom_l[:, 3])
+    with np.errstate(divide="ignore", invalid="ignore"):
+        t2 = sx2 + sy2
+        denom_s = (1.0 + v / (q * u)) * (u * t2 - sx2)
+        term_s = (t2 * sx - sx3) / denom_s
+        term_l = v * sy3 / ((q * u + v) * sy2)
+        c = (sx + sy) / (u + v)
+        k = term_s + term_l - c
+    return k, c
+
+
 def l_estimator(alpha: float, k: float, c: float) -> float:
     """mu_hat = f(alpha) = k * alpha + c (Theorem 3)."""
     return k * alpha + c

@@ -32,7 +32,9 @@ import dataclasses
 import math
 from typing import Tuple
 
-from .boundaries import is_balanced
+import numpy as np
+
+from .boundaries import is_balanced, is_balanced_batch, deviation_degree_batch
 from .types import IslaParams
 
 CASE_BALANCED = 5
@@ -239,6 +241,187 @@ def solve_empirical(k: float, c: float, sketch0: float, u: float, v: float,
     alpha = (avg - c) / k if k != 0.0 else 0.0
     return ModulationResult(avg=avg, alpha=alpha, sketch=sketch,
                             d=(eta ** t) * d0, n_iter=t, case=case)
+
+
+# ---------------------------------------------------------------------------
+# Vectorized (batched) solvers — the host mirror of the per-block scalar path,
+# evaluated over stacked blocks as one array computation.  Each lane is
+# bit-identical (float64) to the corresponding scalar solver: same expression
+# order, and the two spots where numpy's SIMD transcendentals can drift an
+# ulp from libm (log in the iteration count, pow in the eta-contraction) are
+# routed through the exact scalar functions.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ModulationBatchResult:
+    """Struct-of-arrays ``ModulationResult`` over n blocks."""
+
+    avg: np.ndarray
+    alpha: np.ndarray
+    sketch: np.ndarray
+    d: np.ndarray
+    n_iter: np.ndarray   # integral-valued float64
+    case: np.ndarray     # int64
+
+    def __len__(self) -> int:
+        return self.avg.shape[0]
+
+    def row(self, i: int) -> ModulationResult:
+        return ModulationResult(
+            avg=float(self.avg[i]), alpha=float(self.alpha[i]),
+            sketch=float(self.sketch[i]), d=float(self.d[i]),
+            n_iter=int(self.n_iter[i]), case=int(self.case[i]))
+
+
+def classify_case_batch(d0: np.ndarray, u: np.ndarray, v: np.ndarray,
+                        params: IslaParams) -> np.ndarray:
+    """Vectorized ``classify_case`` (same §V-C table)."""
+    d0 = np.asarray(d0, dtype=np.float64)
+    dev = deviation_degree_batch(u, v)
+    case = np.where(d0 < 0, np.where(u < v, 1, 2), np.where(u < v, 3, 4))
+    return np.where(is_balanced_batch(dev, params), CASE_BALANCED, case)
+
+
+def _directions_batch(case: np.ndarray, k: np.ndarray
+                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized ``_directions``; balanced lanes get placeholder directions
+    (they are overlaid with the sketch0 fallback by the caller)."""
+    sk = np.where(k >= 0, 1.0, -1.0)
+    dir_mu = np.where(case == 1, 1.0, np.where(case == 4, -1.0, sk))
+    dir_sk = np.where((case == 1) | (case == 3), 1.0, -1.0)
+    mu_dom = (case == 1) | (case == 4)
+    return dir_mu, dir_sk, mu_dom
+
+
+def n_iterations_batch(d0: np.ndarray, thr: float, eta: float) -> np.ndarray:
+    """Vectorized ``n_iterations``; bit-identical per lane.
+
+    Fast path uses ``np.log``; numpy's SIMD log can differ from libm's by an
+    ulp, which only matters when the ratio lands within rounding distance of
+    an integer — those rare lanes are recomputed with ``math.log`` so the
+    ceil agrees with the scalar path exactly.
+    """
+    ad = np.abs(np.asarray(d0, dtype=np.float64))
+    zeros = np.zeros(ad.shape, dtype=np.float64)
+    if thr <= 0:
+        return zeros
+    active = ad > thr
+    if not np.any(active):
+        return zeros
+    denom = math.log(1.0 / eta)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        r = np.log(ad / thr) / denom
+    t = np.ceil(r)
+    risky = active & (np.abs(r - np.rint(r)) < 1e-9)
+    for i in np.nonzero(risky)[0]:
+        t[i] = math.ceil(math.log(ad[i] / thr) / denom)
+    return np.where(active, t, 0.0)
+
+
+def _eta_pow(eta: float, t: np.ndarray) -> np.ndarray:
+    """``eta ** t`` per lane via CPython pow (numpy's vectorized pow drifts
+    an ulp from it for non-dyadic eta).  t is integral-valued with few
+    distinct values — ceil(log2(|D0|/thr)) — so a small unique-table pass."""
+    out = np.empty(t.shape, dtype=np.float64)
+    for tv in np.unique(t):
+        out[t == tv] = eta ** int(tv)
+    return out
+
+
+def solve_closed_form_batch(k: np.ndarray, c: np.ndarray, sketch0,
+                            u: np.ndarray, v: np.ndarray,
+                            params: IslaParams) -> ModulationBatchResult:
+    """Vectorized ``solve_closed_form`` over stacked blocks.
+
+    This is also the batched stand-in for mode="faithful": the closed form
+    evaluates Alg. 2's recursion algebraically (tests pin loop == closed form
+    to 1e-12), so the batched engine never runs a data-dependent loop.
+    """
+    eta, lam, thr = params.eta, params.lam, params.thr
+    k = np.asarray(k, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    sketch0 = np.broadcast_to(
+        np.asarray(sketch0, dtype=np.float64), k.shape)
+    d0 = c - sketch0
+    case = classify_case_batch(d0, u, v, params)
+    t = n_iterations_batch(d0, thr, eta)
+    eta_t = _eta_pow(eta, t)
+    total_shrink = (1.0 - eta_t) * np.abs(d0)
+    dir_mu, dir_sk, mu_dom = _directions_batch(case, k)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        s_mu_mudom = total_shrink / (1.0 - lam)
+        gain = np.abs(dir_mu * lam - dir_sk)
+        s_sk_skdom = total_shrink / gain
+        s_mu_total = np.where(mu_dom, s_mu_mudom, lam * s_sk_skdom)
+        s_sk_total = np.where(mu_dom, lam * s_mu_mudom, s_sk_skdom)
+        alpha = np.where(k != 0.0, (dir_mu * s_mu_total) / k, 0.0)
+    sketch = sketch0 + dir_sk * s_sk_total
+    avg = k * alpha + c
+    d = eta_t * d0
+    balanced = case == CASE_BALANCED
+    return ModulationBatchResult(
+        avg=np.where(balanced, sketch0, avg),
+        alpha=np.where(balanced, 0.0, alpha),
+        sketch=np.where(balanced, sketch0, sketch),
+        d=np.where(balanced, d0, d),
+        n_iter=np.where(balanced, 0.0, t),
+        case=case.astype(np.int64))
+
+
+def solve_calibrated_batch(k: np.ndarray, c: np.ndarray, sketch0,
+                           u: np.ndarray, v: np.ndarray,
+                           params: IslaParams) -> ModulationBatchResult:
+    """Vectorized ``solve_calibrated`` (ISLA-C); modulates every lane."""
+    eta, thr = params.eta, params.thr
+    lam = lambda_star(params.p1, params.p2)
+    k = np.asarray(k, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    sketch0 = np.broadcast_to(
+        np.asarray(sketch0, dtype=np.float64), k.shape)
+    d0 = c - sketch0
+    case = classify_case_batch(d0, u, v, params)
+    t = n_iterations_batch(d0, thr, eta)
+    eta_t = _eta_pow(eta, t)
+    total_shrink = (1.0 - eta_t) * np.abs(d0)
+    s_sk_total = total_shrink / (1.0 + lam)
+    s_mu_total = lam * s_sk_total
+    sgn = np.where(d0 > 0, 1.0, -1.0)
+    mu_move = -sgn * s_mu_total
+    sketch = sketch0 + sgn * s_sk_total
+    with np.errstate(divide="ignore", invalid="ignore"):
+        alpha = np.where(k != 0.0, mu_move / k, 0.0)
+    avg = k * alpha + c
+    return ModulationBatchResult(avg=avg, alpha=alpha, sketch=sketch,
+                                 d=eta_t * d0, n_iter=t,
+                                 case=case.astype(np.int64))
+
+
+def solve_empirical_batch(k: np.ndarray, c: np.ndarray, sketch0,
+                          u: np.ndarray, v: np.ndarray, params: IslaParams,
+                          kappa: float, b0: float) -> ModulationBatchResult:
+    """Vectorized ``solve_empirical`` (ISLA-E) with shared pilot geometry."""
+    eta, thr = params.eta, params.thr
+    k = np.asarray(k, dtype=np.float64)
+    c = np.asarray(c, dtype=np.float64)
+    sketch0 = np.broadcast_to(
+        np.asarray(sketch0, dtype=np.float64), k.shape)
+    c_adj = c - b0
+    d0 = c_adj - sketch0
+    case = classify_case_batch(d0, u, v, params)
+    t = n_iterations_batch(d0, thr, eta)
+    eta_t = _eta_pow(eta, t)
+    shrink = (1.0 - eta_t) * np.abs(d0)
+    s_sk_total = shrink / (1.0 + kappa)
+    s_mu_total = kappa * s_sk_total
+    sgn = np.where(d0 > 0, 1.0, -1.0)
+    avg = c_adj - sgn * s_mu_total
+    sketch = sketch0 + sgn * s_sk_total
+    with np.errstate(divide="ignore", invalid="ignore"):
+        alpha = np.where(k != 0.0, (avg - c) / k, 0.0)
+    return ModulationBatchResult(avg=avg, alpha=alpha, sketch=sketch,
+                                 d=eta_t * d0, n_iter=t,
+                                 case=case.astype(np.int64))
 
 
 def solve_closed_form(k: float, c: float, sketch0: float, u: float, v: float,

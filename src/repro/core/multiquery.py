@@ -1,0 +1,267 @@
+"""Multi-query ISLA: N concurrent bounded-error aggregates, one sample pass.
+
+BlinkDB-style serving answers many simultaneous ``(e, beta, agg)`` queries
+over shared samples.  ISLA makes that cheap: Theorem 3 collapses a block to 8
+streaming moments, so ONE pilot + ONE tagged sampling pass + ONE vectorized
+Phase 2 (``engine.run_blocks_batched``) yields the leverage-based mean, and
+every requested aggregate composes from that mean plus the same pass's plain
+sample moments:
+
+  AVG    mean itself                                    (paper §II-B)
+  SUM    M * mean                  (absolute bound M * e — ``e`` is always
+                                    stated on the mean scale, see IslaQuery)
+  COUNT  M (block sizes are catalog metadata, so exact; kept as a query type
+         so mixed BlinkDB workloads route through one API)
+  VAR    E[X^2] - mean^2 with E[X^2] block-weighted from the shared pass's
+         second moments and the *leverage-corrected* mean — best-effort
+         precision (the paper's (e, beta) guarantee covers the mean term).
+
+Routes: "host" keeps everything float64 numpy; "device" ships the stacked
+(n, 4) moment rows through the branchless jnp Phase 2 in
+``distributed.phase2`` (fp32, scale-normalized) — the same code path
+shard_map uses, so a serving tier can run Phase 2 on-accelerator next to the
+model it instruments.
+
+The scalar per-block engine (``engine.run_block``) stays the bit-validated
+reference oracle for everything here.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .engine import (MODES, IslaQuery, Sampler, phase2_iteration_batch,
+                     resolve_mode_and_geometry, sample_blocks_batched,
+                     sample_moments_batch)
+from .preestimation import required_sample_size, run_pilot, sampling_rate
+from .boundaries import make_boundaries
+from .summarize import summarize
+from .types import AggregateResult, BlockResultsBatch, IslaParams
+
+AGGREGATES = ("AVG", "SUM", "COUNT", "VAR")
+# Aggregates answered exactly from catalog metadata — they never constrain
+# the shared sampling rate.
+EXACT_AGGREGATES = ("COUNT",)
+ROUTES = ("host", "device")
+
+
+@dataclasses.dataclass
+class QueryAnswer:
+    """One query's answer + provenance shared with its batch-mates."""
+
+    query: IslaQuery
+    value: float          # on the aggregate's own scale
+    mean: float           # the underlying leverage-based mean estimate
+    error_bound: Optional[float]  # e on the aggregate scale; None = best-effort
+    sampling_rate: float
+    sample_size: int
+
+    def __float__(self) -> float:
+        return float(self.value)
+
+
+@dataclasses.dataclass
+class SharedPass:
+    """What one sampling pass produced — everything query composition needs."""
+
+    result: AggregateResult       # mean-query provenance (blocks, boundaries)
+    mean: float                   # un-shifted leverage-based mean
+    ex2: Optional[float]          # E[X^2] of the shifted stream (VAR only)
+    mean_shifted: float           # mean on the shifted stream
+    data_size: int
+    rate: float
+    sample_size: int
+
+
+class MultiQueryExecutor:
+    """Shares one pilot + one pass of block moments across N queries.
+
+    The sampling rate is driven by the *strictest* query (max of the per-query
+    Eq. 1 rates), so every answer carries at least its requested confidence.
+    """
+
+    def __init__(self, block_samplers: Sequence[Sampler],
+                 block_sizes: Sequence[int],
+                 params: Optional[IslaParams] = None):
+        if len(block_samplers) != len(block_sizes):
+            raise ValueError("one sampler per block required")
+        self.block_samplers = list(block_samplers)
+        self.block_sizes = [int(b) for b in block_sizes]
+        self.params = params if params is not None else IslaParams()
+        self.data_size = int(sum(self.block_sizes))
+
+    # -- planning ----------------------------------------------------------
+
+    @staticmethod
+    def sampled_queries(queries: Sequence[IslaQuery]
+                        ) -> "list[IslaQuery]":
+        """Queries whose answers actually consume samples (COUNT is exact
+        from catalog metadata, so its (e, beta) never drives the rate)."""
+        return [q for q in queries if q.agg not in EXACT_AGGREGATES]
+
+    def plan_rate(self, queries: Sequence[IslaQuery], sigma: float) -> float:
+        """max over the sample-consuming queries of Eq. 1's rate — the
+        shared sample must satisfy the strictest (e, beta) among them."""
+        sampled = self.sampled_queries(queries)
+        if not sampled:  # all-exact batch: one minimal probe pass
+            return sampling_rate(self.params.e, sigma, self.params.beta,
+                                 self.data_size)
+        return max(sampling_rate(q.e, sigma, q.beta, self.data_size)
+                   for q in sampled)
+
+    @staticmethod
+    def validate(queries: Sequence[IslaQuery]) -> None:
+        if not queries:
+            raise ValueError("need at least one query")
+        for q in queries:
+            if q.agg not in AGGREGATES:
+                raise ValueError(
+                    f"unknown aggregate {q.agg!r}; expected one of "
+                    f"{AGGREGATES}")
+            if q.e <= 0:
+                raise ValueError(f"precision must be positive, got {q.e}")
+
+    # -- execution ---------------------------------------------------------
+
+    def _shared_pass(self, queries: Sequence[IslaQuery],
+                     rng: np.random.Generator, mode: str, route: str,
+                     rate_override: Optional[float],
+                     sigma_guess: Optional[float],
+                     deadline_samples: Optional[int]) -> SharedPass:
+        sampled = self.sampled_queries(queries) or [
+            IslaQuery(e=self.params.e, beta=self.params.beta)]
+        params = self.params.replace(e=min(q.e for q in sampled),
+                                     beta=max(q.beta for q in sampled))
+        pilot = run_pilot(self.block_samplers, self.block_sizes, params, rng,
+                          sigma_guess=sigma_guess)
+        rate = (rate_override if rate_override is not None
+                else self.plan_rate(queries, pilot.sigma))
+        shifted_sketch0 = pilot.sketch0 + pilot.shift
+        boundaries = make_boundaries(shifted_sketch0, pilot.sigma, params)
+
+        mode, geometry = resolve_mode_and_geometry(pilot, params, mode)
+
+        values, block_ids, mom_s, mom_l, quotas = sample_blocks_batched(
+            self.block_samplers, self.block_sizes, rate, boundaries, rng,
+            shift=pilot.shift, max_samples=deadline_samples)
+
+        # Phase 2 runs on the chosen route only; blocks.avg always carries
+        # the partials the answer was summarized from.
+        n = len(self.block_sizes)
+        if route == "device":
+            partials = self._device_partials(mom_s, mom_l, shifted_sketch0,
+                                             pilot.sigma, params, mode,
+                                             geometry)
+            # avg-only provenance: the jnp Phase 2 returns partial answers,
+            # not the (alpha, sketch, case) diagnostics of the host solvers.
+            blocks = BlockResultsBatch(
+                avg=partials, alpha=np.zeros(n), sketch=np.zeros(n),
+                case=np.zeros(n, dtype=np.int64), n_iter=np.zeros(n),
+                mom_s=mom_s, mom_l=mom_l, n_sampled=quotas)
+        else:
+            res = phase2_iteration_batch(mom_s, mom_l, shifted_sketch0,
+                                         params, mode=mode,
+                                         geometry=geometry)
+            partials = res.avg
+            blocks = BlockResultsBatch(
+                avg=res.avg, alpha=res.alpha, sketch=res.sketch,
+                case=res.case, n_iter=res.n_iter, mom_s=mom_s, mom_l=mom_l,
+                n_sampled=quotas)
+
+        mean_shifted = summarize(partials, self.block_sizes)
+        sample_size = int(quotas.sum())  # actually drawn (deadline-aware)
+        ex2 = None
+        if any(q.agg == "VAR" for q in queries):
+            # Block-weighted second moment of the shifted stream (only VAR
+            # reads it; quota >= 1, so every count is positive).
+            totals = sample_moments_batch(values, block_ids,
+                                          len(self.block_sizes))
+            ex2 = summarize(totals[:, 2] / totals[:, 0], self.block_sizes)
+        result = AggregateResult(
+            answer=mean_shifted - pilot.shift, sketch0=pilot.sketch0,
+            sigma=pilot.sigma, sampling_rate=rate, sample_size=sample_size,
+            blocks=blocks, boundaries=boundaries)
+        return SharedPass(result=result, mean=result.answer, ex2=ex2,
+                          mean_shifted=mean_shifted,
+                          data_size=self.data_size, rate=rate,
+                          sample_size=sample_size)
+
+    def _device_partials(self, mom_s_host: np.ndarray,
+                         mom_l_host: np.ndarray, sketch0: float,
+                         sigma: float, params: IslaParams, mode: str,
+                         geometry) -> np.ndarray:
+        """Device route: stacked (n, 4) moments through the branchless jnp
+        Phase 2 (fp32, scale-normalized — ISLA is exactly scale-equivariant,
+        the same lever ``distributed.isla_mean`` uses)."""
+        import jax.numpy as jnp
+
+        from .distributed import phase2
+
+        scale = max(abs(sketch0), sigma, 1e-12)
+        pows = np.array([1.0, scale, scale * scale, scale ** 3])
+        mom_s = jnp.asarray(mom_s_host / pows, jnp.float32)
+        mom_l = jnp.asarray(mom_l_host / pows, jnp.float32)
+        dev_mode = "faithful" if mode == "faithful_cf" else mode
+        dev_geometry = None
+        if geometry is not None:
+            kappa, b0 = geometry
+            dev_geometry = (jnp.float32(kappa), jnp.float32(b0 / scale))
+        avg = phase2(mom_s, mom_l, jnp.float32(sketch0 / scale), params,
+                     mode=dev_mode, geometry=dev_geometry)
+        return np.asarray(avg, dtype=np.float64) * scale
+
+    def run(self, queries: Sequence[IslaQuery], rng: np.random.Generator,
+            mode: str = "calibrated", route: str = "host",
+            rate_override: Optional[float] = None,
+            sigma_guess: Optional[float] = None,
+            deadline_samples: Optional[int] = None) -> "list[QueryAnswer]":
+        """Answer every query from one shared pass.
+
+        ``mode``/``route`` select the Phase 2 solver and where it runs; the
+        per-query (e, beta) only drive the shared sampling rate and each
+        answer's reported bound.
+        """
+        self.validate(queries)
+        # before any sampling cost is paid:
+        if route not in ROUTES:
+            raise ValueError(f"unknown route {route!r}; expected one of "
+                             f"{ROUTES}")
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; expected one of "
+                             f"{MODES}")
+        sp = self._shared_pass(queries, rng, mode, route, rate_override,
+                               sigma_guess, deadline_samples)
+        answers = []
+        for q in queries:
+            # The (e, beta) guarantee requires Eq. 1's sample size; when a
+            # deadline cap or a rate_override truncated the draw below it,
+            # report best-effort (None) instead of an unearned bound.
+            met = sp.sample_size >= required_sample_size(
+                q.e, sp.result.sigma, q.beta)
+            if q.agg == "AVG":
+                value, bound = sp.mean, (q.e if met else None)
+            elif q.agg == "SUM":
+                value = sp.data_size * sp.mean
+                bound = sp.data_size * q.e if met else None
+            elif q.agg == "COUNT":
+                value, bound = float(sp.data_size), 0.0
+            else:  # VAR — shift-invariant: both terms are on the shifted stream
+                value = max(sp.ex2 - sp.mean_shifted * sp.mean_shifted, 0.0)
+                bound = None
+            answers.append(QueryAnswer(
+                query=q, value=float(value), mean=sp.mean, error_bound=bound,
+                sampling_rate=sp.rate, sample_size=sp.sample_size))
+        return answers
+
+
+def multi_aggregate(block_samplers: Sequence[Sampler],
+                    block_sizes: Sequence[int],
+                    queries: Sequence[IslaQuery],
+                    rng: np.random.Generator,
+                    params: Optional[IslaParams] = None,
+                    **kw) -> "list[QueryAnswer]":
+    """One-shot convenience: build an executor and run the query batch."""
+    return MultiQueryExecutor(block_samplers, block_sizes,
+                              params=params).run(queries, rng, **kw)

@@ -116,6 +116,7 @@ class RegionMoments:
             s2=float(self.s2), s3=float(self.s3))
 
 
+
 @dataclasses.dataclass(frozen=True)
 class IslaParams:
     """All tunables of the scheme, defaults per the paper's §VIII setup."""
@@ -171,6 +172,50 @@ class BlockResult:
     n_sampled: int
     param_s: RegionMoments
     param_l: RegionMoments
+
+
+@dataclasses.dataclass
+class BlockResultsBatch:
+    """Columnar (struct-of-arrays) view of n blocks' partial answers.
+
+    The batched engine produces this instead of n ``BlockResult`` objects —
+    building tens of thousands of dataclasses would reintroduce the per-block
+    Python cost the batched path exists to remove.  It satisfies the sequence
+    protocol, materializing ``BlockResult`` rows on demand, so existing
+    consumers (``for b in result.blocks``) keep working unchanged.
+    """
+
+    avg: np.ndarray        # (n,) float64 partial answers
+    alpha: np.ndarray      # (n,)
+    sketch: np.ndarray     # (n,)
+    case: np.ndarray       # (n,) int64
+    n_iter: np.ndarray     # (n,) integral
+    mom_s: np.ndarray      # (n, 4) S-region moments (count, s1, s2, s3)
+    mom_l: np.ndarray      # (n, 4) L-region moments
+    n_sampled: np.ndarray  # (n,) samples drawn per block
+
+    def __len__(self) -> int:
+        return self.avg.shape[0]
+
+    def __getitem__(self, i):
+        if isinstance(i, slice):
+            return [self[j] for j in range(*i.indices(len(self)))]
+        i = int(i)
+        if i < 0:
+            i += len(self)
+        if not 0 <= i < len(self):
+            raise IndexError(i)
+        return BlockResult(
+            block_id=i, avg=float(self.avg[i]), alpha=float(self.alpha[i]),
+            sketch=float(self.sketch[i]), case=int(self.case[i]),
+            n_iter=int(self.n_iter[i]), u=int(self.mom_s[i, 0]),
+            v=int(self.mom_l[i, 0]), n_sampled=int(self.n_sampled[i]),
+            param_s=RegionMoments(*(float(x) for x in self.mom_s[i])),
+            param_l=RegionMoments(*(float(x) for x in self.mom_l[i])))
+
+    def __iter__(self):
+        for i in range(len(self)):
+            yield self[i]
 
 
 @dataclasses.dataclass

@@ -88,6 +88,71 @@ def isla_moments_pallas(values2d: jnp.ndarray, bounds: jnp.ndarray,
     )(bounds.astype(jnp.float32), values2d)
 
 
+def _moments_batched_kernel(bounds_ref, x_ref, o_ref):
+    """Grid (block, tile): accumulate one block's tile into o_ref (1, 2, 4).
+
+    Same body as ``_moments_kernel`` with a leading block axis: the output
+    block is indexed by grid dim 0, so each block owns its (2, 4) moment
+    cell and the tile axis accumulates sequentially within it.
+    """
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    s_lo, s_hi = bounds_ref[0], bounds_ref[1]
+    l_lo, l_hi = bounds_ref[2], bounds_ref[3]
+
+    ms = ((x > s_lo) & (x < s_hi)).astype(jnp.float32)
+    ml = ((x > l_lo) & (x < l_hi)).astype(jnp.float32)
+    xs = x * ms
+    xl = x * ml
+    tile = jnp.stack([
+        jnp.stack([jnp.sum(ms), jnp.sum(xs), jnp.sum(xs * x),
+                   jnp.sum(xs * x * x)]),
+        jnp.stack([jnp.sum(ml), jnp.sum(xl), jnp.sum(xl * x),
+                   jnp.sum(xl * x * x)]),
+    ])
+    o_ref[...] += tile[None]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tm", "stride", "interpret"))
+def isla_moments_batched_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
+                                tm: int = DEFAULT_TM, stride: int = 1,
+                                interpret: bool = False) -> jnp.ndarray:
+    """Batched multi-block ISLA moments — Phase 1 for the batched engine.
+
+    values3d: (n_blocks, rows, 128), rows % tm == 0; bounds: (4,) fp32.
+    Returns (n_blocks, 2, 4) fp32 moments — one launch feeds every block's
+    8 scalars straight into the vectorized Phase 2
+    (``repro.core.distributed.phase2`` on stacked rows).  ``stride`` is the
+    fused sample-while-reducing path, per block.
+    """
+    n_blocks, rows, lane = values3d.shape
+    if lane != LANE:
+        raise ValueError(f"last dim must be {LANE}, got {lane}")
+    if rows % tm != 0:
+        raise ValueError(f"rows {rows} not a multiple of tile rows {tm}")
+    n_tiles = rows // tm
+    n_sel = max(1, n_tiles // stride) if stride > 1 else n_tiles
+
+    grid_spec = pl.GridSpec(
+        grid=(n_blocks, n_sel),
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),  # bounds: tiny, replicated
+            pl.BlockSpec((1, tm, LANE), lambda b, i: (b, i * stride, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2, 4), lambda b, i: (b, 0, 0)),
+    )
+    return pl.pallas_call(
+        _moments_batched_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_blocks, 2, 4), jnp.float32),
+        interpret=interpret,
+    )(bounds.astype(jnp.float32), values3d)
+
+
 def _pilot_kernel(x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)
 

@@ -4,13 +4,16 @@ Functions (never module-level constants) so importing this module never
 touches jax device state.  The dry-run entry point (dryrun.py) sets
 XLA_FLAGS=--xla_force_host_platform_device_count=512 BEFORE importing jax;
 everything here just consumes whatever devices exist.
+
+``AxisType`` is imported defensively via ``repro.compat`` — older
+``jax.sharding`` modules don't expose it, in which case meshes are built
+without explicit axis types (the default is equivalent).
 """
 from __future__ import annotations
 
 from typing import Tuple
 
-import jax
-from jax.sharding import AxisType
+from ..compat import AxisType, make_mesh  # noqa: F401  (AxisType re-exported)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -18,14 +21,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     Multi-pod: (2, 16, 16) pod x data x model = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh over host devices (tests / elastic drills)."""
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def mesh_devices(mesh) -> int:

@@ -103,3 +103,65 @@ def test_aggregate_array_api(rng):
     data = rng.normal(50.0, 5.0, size=200_000)
     r = aggregate_array(data, 8, IslaParams(e=0.5), rng, mode="calibrated")
     assert abs(r.answer - 50.0) < 0.5
+
+
+def test_run_block_max_samples_truncates_quota(rng):
+    """§VII-F: max_samples caps the quota; moments stay valid at any prefix."""
+    params = IslaParams()
+    b = make_boundaries(100.0, 20.0, params)
+    sampler = normal_samplers(b=1)[0]
+    full = run_block(0, sampler, 10_000, 0.1, b, 100.0, params,
+                     np.random.default_rng(0))
+    assert full.n_sampled == 1000
+    capped = run_block(0, sampler, 10_000, 0.1, b, 100.0, params,
+                       np.random.default_rng(0), max_samples=64)
+    assert capped.n_sampled == 64
+    # same RNG stream: the capped draw is a prefix of the full draw, so the
+    # capped region counts can't exceed the full ones
+    assert capped.u <= full.u and capped.v <= full.v
+    assert abs(capped.avg - 100.0) < 5.0
+    # a cap above the quota is a no-op
+    loose = run_block(0, sampler, 10_000, 0.1, b, 100.0, params,
+                      np.random.default_rng(0), max_samples=10_000)
+    assert loose.n_sampled == 1000
+    assert loose.avg == full.avg
+
+
+def test_run_block_carry_merges_moments(rng):
+    """§VII-A online extension: carry = previous round's (param_S, param_L);
+    the new round's answer equals Phase 2 on the merged moments."""
+    from repro.core.engine import phase2_iteration
+    params = IslaParams()
+    b = make_boundaries(100.0, 20.0, params)
+    sampler = normal_samplers(b=1)[0]
+    r1 = run_block(0, sampler, 10_000, 0.05, b, 100.0, params,
+                   np.random.default_rng(1))
+    rng2 = np.random.default_rng(2)
+    r2 = run_block(0, sampler, 10_000, 0.05, b, 100.0, params, rng2,
+                   carry=(r1.param_s, r1.param_l))
+    # moments accumulated: round-2 counts include round 1's
+    assert r2.u >= r1.u and r2.v >= r1.v
+    assert r2.n_sampled == 500  # only the NEW quota is drawn this round
+    # reference: draw the same round-2 samples and merge by hand
+    fresh = run_block(0, sampler, 10_000, 0.05, b, 100.0, params,
+                      np.random.default_rng(2))
+    merged_s = r1.param_s.merge(fresh.param_s)
+    merged_l = r1.param_l.merge(fresh.param_l)
+    assert r2.param_s.count == merged_s.count
+    assert r2.param_s.s3 == pytest.approx(merged_s.s3, rel=1e-12)
+    ref = phase2_iteration(merged_s, merged_l, 100.0, params)
+    assert r2.avg == ref.avg
+
+
+def test_run_block_carry_with_max_samples(rng):
+    """carry and max_samples compose: capped new draw merged onto carry."""
+    params = IslaParams()
+    b = make_boundaries(100.0, 20.0, params)
+    sampler = normal_samplers(b=1)[0]
+    r1 = run_block(0, sampler, 10_000, 0.05, b, 100.0, params,
+                   np.random.default_rng(1))
+    r2 = run_block(0, sampler, 10_000, 0.05, b, 100.0, params,
+                   np.random.default_rng(2), carry=(r1.param_s, r1.param_l),
+                   max_samples=32)
+    assert r2.n_sampled == 32
+    assert r2.u + r2.v >= r1.u + r1.v  # carry is never dropped

@@ -1,0 +1,200 @@
+"""Batched engine vs the sequential per-block reference: bit-for-bit parity
+on the float64 host path (same RNG stream, same operation order)."""
+import numpy as np
+import pytest
+
+from conftest import normal_samplers
+from repro.core.boundaries import make_boundaries
+from repro.core.engine import (aggregate, phase1_sampling,
+                               phase1_sampling_batch, phase2_iteration,
+                               phase2_iteration_batch, run_blocks_batched,
+                               sample_moments_batch)
+from repro.core.types import IslaParams, RegionMoments
+
+M = 10 ** 10
+
+
+def _per_block_samples(rng, n_blocks=12, m=400):
+    vals = rng.normal(100.0, 20.0, size=(n_blocks, m))
+    values = vals.reshape(-1)
+    ids = np.repeat(np.arange(n_blocks), m)
+    return vals, values, ids
+
+
+def test_phase1_batch_matches_scalar_bitwise(rng):
+    params = IslaParams()
+    b = make_boundaries(100.0, 20.0, params)
+    vals, values, ids = _per_block_samples(rng)
+    mom_s, mom_l = phase1_sampling_batch(values, ids, vals.shape[0], b)
+    for j in range(vals.shape[0]):
+        ps, pl_ = phase1_sampling(vals[j], b)
+        assert mom_s[j].tolist() == [ps.count, ps.s1, ps.s2, ps.s3]
+        assert mom_l[j].tolist() == [pl_.count, pl_.s1, pl_.s2, pl_.s3]
+
+
+def test_phase1_matches_streaming_updateparams(rng):
+    """bincount accumulates in stream order == Alg. 1's updateParams exactly."""
+    from repro.core.types import REGION_L, REGION_S, region_of
+    params = IslaParams()
+    b = make_boundaries(100.0, 20.0, params)
+    samples = rng.normal(100, 20, size=1500)
+    ps, pl_ = phase1_sampling(samples, b)
+    ref_s, ref_l = RegionMoments.zeros_np(), RegionMoments.zeros_np()
+    for a in samples:
+        r = region_of(float(a), b)
+        if r == REGION_S:
+            ref_s = ref_s.update(float(a))
+        elif r == REGION_L:
+            ref_l = ref_l.update(float(a))
+    assert (ps.count, ps.s1, ps.s2, ps.s3) == \
+        (ref_s.count, ref_s.s1, ref_s.s2, ref_s.s3)
+    assert (pl_.count, pl_.s1, pl_.s2, pl_.s3) == \
+        (ref_l.count, ref_l.s1, ref_l.s2, ref_l.s3)
+
+
+@pytest.mark.parametrize("mode", ["faithful_cf", "calibrated", "empirical"])
+def test_phase2_batch_matches_scalar_bitwise(mode, rng):
+    params = IslaParams()
+    b = make_boundaries(100.0, 20.0, params)
+    vals, values, ids = _per_block_samples(rng, n_blocks=30)
+    mom_s, mom_l = phase1_sampling_batch(values, ids, vals.shape[0], b)
+    geometry = (0.3, 0.05) if mode == "empirical" else None
+    res = phase2_iteration_batch(mom_s, mom_l, 100.0, params, mode=mode,
+                                 geometry=geometry)
+    for j in range(vals.shape[0]):
+        ps, pl_ = phase1_sampling(vals[j], b)
+        ref = phase2_iteration(ps, pl_, 100.0, params, mode=mode,
+                               geometry=geometry)
+        assert float(res.avg[j]) == ref.avg, f"block {j}"
+        assert float(res.alpha[j]) == ref.alpha
+        assert float(res.sketch[j]) == ref.sketch
+        assert int(res.n_iter[j]) == ref.n_iter
+        assert int(res.case[j]) == ref.case
+
+
+def test_phase2_batch_fallbacks_match_scalar():
+    """Empty region, k ~= 0, and balanced lanes mirror the scalar guards."""
+    params = IslaParams()
+    # lane 0: empty L; lane 1: balanced |S|/|L|; lane 2: regular;
+    # lane 3: k == 0 (point-mass regions with dev in the q=1 band make
+    # Theorem 3's mu_hat == c exactly — no leverage capability).
+    mom_s = np.array([[50.0, 40.0, 35.0, 30.0],
+                      [100.0, 80.0, 66.0, 56.0],
+                      [120.0, 90.0, 70.0, 58.0],
+                      [98.0, 98 * 0.8, 98 * 0.64, 98 * 0.512]])
+    mom_l = np.array([[0.0, 0.0, 0.0, 0.0],
+                      [100.0, 130.0, 170.0, 225.0],
+                      [60.0, 80.0, 108.0, 148.0],
+                      [100.0, 130.0, 169.0, 219.7]])
+    res = phase2_iteration_batch(mom_s, mom_l, 1.1, params,
+                                 mode="faithful_cf")
+    for j in range(4):
+        ps = RegionMoments(*mom_s[j])
+        pl_ = RegionMoments(*mom_l[j])
+        ref = phase2_iteration(ps, pl_, 1.1, params, mode="faithful_cf")
+        assert float(res.avg[j]) == ref.avg, f"lane {j}"
+        assert int(res.case[j]) == ref.case
+
+
+def test_phase2_batch_raises_like_scalar_on_nonpositive_squares():
+    """A populated lane with zero square sums violates the positive-data
+    contract: the scalar theorem3_kc raises, so the batched path must raise
+    too rather than return a silent NaN answer."""
+    params = IslaParams()
+    mom_s = np.array([[3.0, 2.0, 1.5, 1.2]])
+    mom_l = np.array([[2.0, 0.0, 0.0, 0.0]])  # point mass at 0.0 in L
+    with pytest.raises(ValueError, match="square sums must be positive"):
+        phase2_iteration_batch(mom_s, mom_l, 1.0, params,
+                               mode="faithful_cf")
+
+
+@pytest.mark.parametrize("mode", ["faithful_cf", "calibrated", "empirical"])
+def test_aggregate_batched_equals_sequential_bitwise(mode):
+    """Tentpole acceptance: same RNG stream -> bit-for-bit equal answers."""
+    params = IslaParams(e=0.1)
+    for seed in (0, 3, 11):
+        r_seq = aggregate(normal_samplers(b=25), [M // 25] * 25, params,
+                          np.random.default_rng(seed), mode=mode,
+                          engine="sequential")
+        r_bat = aggregate(normal_samplers(b=25), [M // 25] * 25, params,
+                          np.random.default_rng(seed), mode=mode,
+                          engine="batched")
+        seq = np.array([b.avg for b in r_seq.blocks])
+        bat = np.asarray(r_bat.blocks.avg)
+        assert np.array_equal(seq, bat), f"seed {seed}: block avgs differ"
+        assert r_seq.answer == r_bat.answer
+        assert r_seq.sampling_rate == r_bat.sampling_rate
+        assert [b.n_sampled for b in r_seq.blocks] == \
+            [b.n_sampled for b in r_bat.blocks]
+
+
+def test_aggregate_batched_faithful_close_to_loop():
+    """mode='faithful' batches via the closed form; loop == closed form to
+    1e-12 per block, so the answers agree tightly (not bit-for-bit)."""
+    params = IslaParams(e=0.1)
+    r_seq = aggregate(normal_samplers(), [M // 10] * 10, params,
+                      np.random.default_rng(2), mode="faithful",
+                      engine="sequential")
+    r_bat = aggregate(normal_samplers(), [M // 10] * 10, params,
+                      np.random.default_rng(2), mode="faithful",
+                      engine="batched")
+    assert r_bat.answer == pytest.approx(r_seq.answer, abs=1e-9)
+
+
+def test_aggregate_batched_deadline_parity():
+    params = IslaParams(e=0.1)
+    r_seq = aggregate(normal_samplers(), [M // 10] * 10, params,
+                      np.random.default_rng(6), deadline_samples=500,
+                      mode="calibrated", engine="sequential")
+    r_bat = aggregate(normal_samplers(), [M // 10] * 10, params,
+                      np.random.default_rng(6), deadline_samples=500,
+                      mode="calibrated", engine="batched")
+    assert r_seq.answer == r_bat.answer
+    assert all(b.n_sampled <= 500 for b in r_bat.blocks)
+
+
+def test_aggregate_rejects_unknown_engine():
+    with pytest.raises(ValueError):
+        aggregate(normal_samplers(b=2), [10, 10], IslaParams(),
+                  np.random.default_rng(0), engine="warp")
+
+
+def test_aggregate_rejects_unknown_mode_early():
+    calls = []
+
+    def counting_sampler(n, rng):
+        calls.append(n)
+        return rng.normal(100, 20, size=n)
+
+    with pytest.raises(ValueError, match="unknown mode"):
+        aggregate([counting_sampler] * 2, [10, 10], IslaParams(),
+                  np.random.default_rng(0), mode="calibratd")
+    assert calls == []  # validated before any sampling
+
+
+def test_blocks_batch_sequence_protocol(rng):
+    params = IslaParams()
+    b = make_boundaries(100.0, 20.0, params)
+    samplers = normal_samplers(b=5)
+    blocks, values, ids = run_blocks_batched(
+        samplers, [1000] * 5, 0.1, b, 100.0, params, rng)
+    assert len(blocks) == 5
+    rows = list(blocks)
+    assert [r.block_id for r in rows] == [0, 1, 2, 3, 4]
+    assert rows[2].avg == float(blocks.avg[2])
+    assert rows[2].u == int(blocks.mom_s[2, 0])
+    assert blocks[-1].block_id == 4
+    with pytest.raises(IndexError):
+        blocks[5]
+    # the tagged stream aligns with the per-block quotas
+    assert values.shape == ids.shape
+    assert np.array_equal(np.bincount(ids, minlength=5), blocks.n_sampled)
+
+
+def test_sample_moments_batch(rng):
+    vals, values, ids = _per_block_samples(rng, n_blocks=4, m=100)
+    tot = sample_moments_batch(values, ids, 4)
+    assert np.array_equal(tot[:, 0], np.full(4, 100.0))
+    for j in range(4):
+        assert tot[j, 1] == pytest.approx(np.sum(vals[j]), rel=1e-12)
+        assert tot[j, 2] == pytest.approx(np.sum(vals[j] ** 2), rel=1e-12)

@@ -6,7 +6,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
-from repro.kernels.isla_moments import isla_moments_pallas, pilot_stats_pallas
+from repro.kernels.isla_moments import (isla_moments_batched_pallas,
+                                        isla_moments_pallas,
+                                        pilot_stats_pallas)
 
 BOUNDS = (60.0, 90.0, 110.0, 140.0)
 BOUNDS_ARR = jnp.asarray(BOUNDS, jnp.float32)
@@ -40,6 +42,48 @@ def test_ops_isla_moments_any_shape(n, rng):
     got = ops.isla_moments(x, BOUNDS_ARR, tm=64)
     want = ref.isla_moments_ref(x, *BOUNDS)
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4)
+
+
+@pytest.mark.parametrize("n_blocks", [1, 3, 8])
+def test_moments_batched_kernel(n_blocks, rng):
+    """Batched multi-block kernel == per-block kernel == oracle."""
+    x = jnp.asarray(rng.normal(100, 20, size=(n_blocks, 64 * 3, 128)),
+                    jnp.float32)
+    got = isla_moments_batched_pallas(x, BOUNDS_ARR, tm=64, interpret=True)
+    assert got.shape == (n_blocks, 2, 4)
+    for b in range(n_blocks):
+        want = ref.isla_moments_ref(x[b], *BOUNDS)
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(want),
+                                   rtol=1e-5)
+
+
+@pytest.mark.parametrize("stride", [2, 4])
+def test_moments_batched_kernel_strided(stride, rng):
+    x = jnp.asarray(rng.normal(100, 20, size=(4, 64 * 8, 128)), jnp.float32)
+    got = isla_moments_batched_pallas(x, BOUNDS_ARR, tm=64, stride=stride,
+                                      interpret=True)
+    for b in range(4):
+        sel = x[b].reshape(8, 64, 128)[::stride].reshape(-1, 128)
+        want = ref.isla_moments_ref(sel, *BOUNDS)
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(want),
+                                   rtol=1e-5)
+
+
+def test_batched_kernel_feeds_batched_phase2(rng):
+    """(n, 2, 4) kernel moments flow straight into the stacked jnp Phase 2 —
+    the device route of the multi-query executor."""
+    from repro.core.distributed import phase2
+    from repro.core.types import IslaParams
+    params = IslaParams()
+    x = jnp.asarray(rng.normal(100, 20, size=(5, 64 * 4, 128)), jnp.float32)
+    mom = isla_moments_batched_pallas(x, BOUNDS_ARR, tm=64, interpret=True)
+    avgs = phase2(mom[:, 0], mom[:, 1], jnp.float32(100.0), params,
+                  mode="calibrated")
+    assert avgs.shape == (5,)
+    for b in range(5):
+        one = phase2(mom[b, 0], mom[b, 1], jnp.float32(100.0), params,
+                     mode="calibrated")
+        assert float(avgs[b]) == pytest.approx(float(one), rel=1e-6)
 
 
 def test_pilot_stats_kernel(rng):

@@ -22,6 +22,38 @@ def test_scheduler_generates_and_recycles():
         assert all(0 <= t < cfg.padded_vocab for t in req.generated)
 
 
+def test_scheduler_slot_recycling_under_oversubscription():
+    """3x more requests than slots: every slot is reused, admissions follow
+    queue order, and the scheduler fully drains."""
+    cfg = get_config("olmo-1b", reduced=True)
+    params = model.init_params(cfg, jax.random.key(2))
+    sched = BatchScheduler(cfg, params, batch_slots=2, max_seq=48, eos_id=-1)
+    for rid in range(6):
+        sched.submit(Request(rid=rid, prompt=[3, 4], max_new=2 + rid % 3))
+    ticks = 0
+    admitted_order = []
+    seen = set()
+    while sched.queue or any(s is not None for s in sched.slots):
+        for s in sched.slots:
+            if s is not None and s.rid not in seen:
+                seen.add(s.rid)
+                admitted_order.append(s.rid)
+        sched.tick()
+        ticks += 1
+        assert ticks < 64
+    # first two admissions are rids 0,1 (queue order); all six finish
+    for s in sched.slots:
+        if s is not None and s.rid not in seen:
+            admitted_order.append(s.rid)
+    assert sorted(r.rid for r in sched.finished) == list(range(6))
+    assert admitted_order[:2] == [0, 1]
+    # slots were recycled: 6 requests through 2 slots
+    assert all(s is None for s in sched.slots)
+    assert not sched.queue
+    for req in sched.finished:
+        assert req.done and len(req.generated) >= 2
+
+
 def test_scheduler_tick_counts():
     cfg = get_config("olmo-1b", reduced=True)
     params = model.init_params(cfg, jax.random.key(1))

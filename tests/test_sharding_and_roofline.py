@@ -3,8 +3,9 @@ devices needed) + roofline HLO parser unit tests."""
 import numpy as np
 import pytest
 import jax
-from jax.sharding import AbstractMesh, AxisType, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
+from repro.compat import make_abstract_mesh
 from repro.configs import SHAPES, get_config, list_archs, shape_applicable
 from repro.models import model
 from repro.roofline.hlo_parse import (parse_and_cost, parse_module,
@@ -15,10 +16,8 @@ from repro.sharding import batch_specs, cache_specs, opt_state_specs, \
 
 def _abstract_mesh(multi):
     if multi:
-        return AbstractMesh((2, 16, 16), ("pod", "data", "model"),
-                            axis_types=(AxisType.Auto,) * 3)
-    return AbstractMesh((16, 16), ("data", "model"),
-                        axis_types=(AxisType.Auto,) * 2)
+        return make_abstract_mesh((2, 16, 16), ("pod", "data", "model"))
+    return make_abstract_mesh((16, 16), ("data", "model"))
 
 
 def _check_divisible(tree, specs, mesh, label):

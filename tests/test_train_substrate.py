@@ -7,6 +7,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from repro.compat import shard_map
 from repro.configs import get_config
 from repro.train import checkpoint as ckpt
 from repro.train.compression import (dequantize_int8, init_error_feedback,
@@ -150,7 +151,7 @@ def test_compressed_allreduce_with_error_feedback():
                                           compress=True)
             return out["w"], ef2["w"]
 
-        out, ef_w = jax.jit(jax.shard_map(
+        out, ef_w = jax.jit(shard_map(
             run, mesh=mesh, in_specs=(P(), P()), out_specs=(P(), P()),
         ))(g["w"], ef["w"])
         ef = {"w": ef_w}

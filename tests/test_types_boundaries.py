@@ -1,7 +1,7 @@
 """Region classification + moments: completeness, merge, scale properties."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core.boundaries import choose_q, deviation_degree, make_boundaries
 from repro.core.types import (REGION_L, REGION_N, REGION_S, REGION_TL,
