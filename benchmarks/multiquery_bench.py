@@ -1,23 +1,33 @@
-"""Batched engine + multi-query benchmarks.
+"""Batched engine + relational multi-query benchmarks.
 
-Headline: the vectorized Calculation phase (one stacked Phase 1 + Phase 2)
-vs the per-block Python loop at 1000 blocks — the tentpole acceptance is
->= 5x.  Both sides draw the identical RNG stream and produce bit-identical
-block answers (asserted), so the speedup is pure engine overhead removal.
+Headlines:
+ * the vectorized Calculation phase (one stacked Phase 1 + Phase 2) vs the
+   per-block Python loop at 1000 blocks — both sides draw the identical RNG
+   stream and produce bit-identical block answers (asserted), so the speedup
+   is pure engine overhead removal;
+ * the relational (group, block) moments axis vs a per-group Python loop
+   over ``aggregate()`` at 16 groups x 1000 blocks with mixed predicates —
+   the GROUP BY acceptance is >= 3x, recorded in ``BENCH_groupby.json``.
 
 Contract: each bench yields ``(name, us_per_call, derived)`` rows like the
 paper_tables benches; ``derived`` carries the headline ratio/answer.
+
+``--smoke`` runs everything at tiny sizes (CI keeps the entrypoints alive);
+``--out DIR`` picks where BENCH_groupby.json lands (default: CWD).
 """
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import numpy as np
 
 from repro.core.boundaries import make_boundaries
-from repro.core.engine import (IslaQuery, run_block, run_blocks_batched)
-from repro.core.multiquery import MultiQueryExecutor
-from repro.core.types import IslaParams
+from repro.core.engine import IslaQuery, run_block, run_blocks_batched
+from repro.core.multiquery import MultiQueryExecutor, table_sampler
+from repro.core.types import IslaParams, Predicate
 
 MU, SIGMA = 100.0, 20.0
 
@@ -37,12 +47,12 @@ def _time(fn, repeat=3):
     return out, best * 1e6
 
 
-def batched_vs_sequential_calculation():
+def batched_vs_sequential_calculation(smoke=False):
     """Per-block loop vs stacked arrays on the identical sample stream."""
     params = IslaParams()
     boundaries = make_boundaries(MU, SIGMA, params)
     rows = []
-    for n_blocks in (100, 1000):
+    for n_blocks in ((20,) if smoke else (100, 1000)):
         sizes = [10 ** 7] * n_blocks
         rate = 64 / 10 ** 7          # 64 samples per block
         samplers = _samplers(n_blocks)
@@ -71,9 +81,9 @@ def batched_vs_sequential_calculation():
     return rows
 
 
-def multiquery_shared_pass():
+def multiquery_shared_pass(smoke=False):
     """N concurrent queries from one pass vs one pipeline per query."""
-    n_blocks = 1000
+    n_blocks = 20 if smoke else 1000
     sizes = [10 ** 7] * n_blocks
     samplers = _samplers(n_blocks)
     queries = [IslaQuery(e=0.1, agg="AVG"), IslaQuery(e=0.2, agg="SUM"),
@@ -89,15 +99,124 @@ def multiquery_shared_pass():
     ans, shared_us = _time(shared)
     _, naive_us = _time(per_query)
     err = abs(ans[0].value - MU)
-    return [("multiquery_shared_4q/b1000", shared_us, naive_us / shared_us),
+    return [(f"multiquery_shared_4q/b{n_blocks}", shared_us,
+             naive_us / shared_us),
             ("multiquery_avg_abs_err", shared_us, err)]
 
 
+def _grouped_tables(n_blocks, n_groups, rows, seed=0):
+    """Relational blocks: group-dependent measure means + a flag column."""
+    rng = np.random.default_rng(seed)
+    tables = []
+    for _ in range(n_blocks):
+        g = rng.integers(0, n_groups, size=rows)
+        tables.append({
+            "value": rng.normal(MU - 10.0 + (20.0 / n_groups) * g, SIGMA),
+            "region": g.astype(np.float64),
+            "flag": rng.integers(0, 2, size=rows).astype(np.float64),
+        })
+    return tables
+
+
+def groupby_vectorized_vs_loop(smoke=False, repeat=3):
+    """The tentpole: one (group, block) moments axis vs a per-group Python
+    loop of full ``aggregate()`` pipelines.
+
+    Both sides answer per-group AVGs at the same (e, beta); the naive loop
+    gets pre-partitioned per-group samplers (no rejection overhead — a
+    *generous* baseline), yet still pays G pilots + G pipelines where the
+    group axis pays one.  Emits the speedup; acceptance is >= 3x at 16
+    groups x 1000 blocks.
+    """
+    from repro.core.engine import aggregate
+    from repro.core.preestimation import array_sampler
+
+    n_blocks = 20 if smoke else 1000
+    n_groups = 4 if smoke else 16
+    rows = 512 if smoke else 4096
+    e = 0.5
+    sizes = [10 ** 7] * n_blocks
+    tables = _grouped_tables(n_blocks, n_groups, rows)
+    samplers = [table_sampler(t) for t in tables]
+    ex = MultiQueryExecutor(samplers, sizes, params=IslaParams(e=e),
+                            group_domains={"region": n_groups})
+    queries = [
+        IslaQuery(e=e, agg="AVG", group_by="region"),
+        IslaQuery(e=e, agg="SUM", group_by="region",
+                  where=Predicate(column="flag", eq=1.0)),
+        IslaQuery(e=e, agg="COUNT", where=Predicate(column="value",
+                                                    lo=MU)),
+        IslaQuery(e=e, agg="VAR", group_by="region"),
+    ]
+
+    def grouped():
+        return ex.run(queries, np.random.default_rng(0))
+
+    # The naive competitor answers the headline GROUP BY AVG with one full
+    # pipeline per group over that group's pre-extracted sub-blocks.
+    group_samplers = [
+        [array_sampler(t["value"][t["region"] == g]) for t in tables]
+        for g in range(n_groups)]
+    group_sizes = [
+        [max(1, int(sizes[j] * np.mean(tables[j]["region"] == g)))
+         for j in range(n_blocks)]
+        for g in range(n_groups)]
+
+    def per_group_loop():
+        out = []
+        for g in range(n_groups):
+            out.append(aggregate(group_samplers[g], group_sizes[g],
+                                 IslaParams(e=e), np.random.default_rng(0),
+                                 mode="calibrated"))
+        return out
+
+    grouped()         # warmup both sides (allocator, lazy imports, caches)
+    per_group_loop()
+    ans, grouped_us = _time(grouped, repeat=repeat)
+    naive, naive_us = _time(per_group_loop, repeat=repeat)
+    speedup = naive_us / grouped_us
+    # sanity: the vectorized group means agree with the per-group pipelines
+    ga = next(a for a in ans if a.query.agg == "AVG" and a.query.group_by)
+    max_gap = max(abs(row.value - float(naive[g]))
+                  for g, row in enumerate(ga.groups))
+    report = {
+        "n_blocks": n_blocks,
+        "n_groups": n_groups,
+        "queries": len(queries),
+        "grouped_us": grouped_us,
+        "per_group_loop_us": naive_us,
+        "speedup": speedup,
+        "max_group_avg_gap_vs_loop": max_gap,
+        "e": e,
+        "smoke": bool(smoke),
+    }
+    return [(f"groupby_vectorized/b{n_blocks}g{n_groups}", grouped_us,
+             speedup),
+            (f"groupby_per_group_loop/b{n_blocks}g{n_groups}", naive_us,
+             0.0),
+            ("groupby_max_avg_gap", grouped_us, max_gap)], report
+
+
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes so CI can keep the entrypoints alive")
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_groupby.json")
+    args = ap.parse_args()
+
     print("name,us_per_call,derived")
     for bench in (batched_vs_sequential_calculation, multiquery_shared_pass):
-        for name, us, derived in bench():
+        for name, us, derived in bench(smoke=args.smoke):
             print(f"{name},{us:.1f},{derived:.6g}", flush=True)
+    rows, report = groupby_vectorized_vs_loop(smoke=args.smoke)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived:.6g}", flush=True)
+    path = os.path.join(args.out, "BENCH_groupby.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} (speedup {report['speedup']:.2f}x)", flush=True)
 
 
 if __name__ == "__main__":

@@ -5,9 +5,9 @@ Device path (fp32, jit/shard_map-safe): distributed.isla_mean.
 Telemetry API for training loops: metrics.loss_stats etc.
 """
 from .types import (AggregateResult, BlockResult, BlockResultsBatch,
-                    Boundaries, IslaParams, RegionMoments, REGION_TS,
-                    REGION_S, REGION_N, REGION_L, REGION_TL, classify,
-                    classify_np, region_of)
+                    Boundaries, IslaParams, Predicate, RegionMoments,
+                    REGION_TS, REGION_S, REGION_N, REGION_L, REGION_TL,
+                    classify, classify_np, region_of)
 from .boundaries import (choose_q, choose_q_batch, deviation_degree,
                          deviation_degree_batch, is_balanced,
                          is_balanced_batch, make_boundaries)
@@ -22,7 +22,7 @@ from .modulation import (lambda_star, run_modulation, solve_calibrated,
 from .preestimation import (array_sampler, distribution_sampler, run_pilot,
                             required_sample_size, sampling_rate, z_score)
 from .engine import (IslaQuery, aggregate, aggregate_array, baseline_sample,
-                     phase1_sampling, phase1_sampling_batch,
+                     flat_segments, phase1_sampling, phase1_sampling_batch,
                      phase2_iteration, phase2_iteration_batch, run_block,
                      run_blocks_batched, sample_blocks_batched,
                      sample_moments_batch)
@@ -31,12 +31,13 @@ from .baselines import mv_avg, mvb_avg, uniform_avg
 from .noniid import aggregate_noniid, block_leverages
 from .online import OnlineBlockState, continue_block
 from .extremes import aggregate_extreme, block_rate_leverages
-from .multiquery import MultiQueryExecutor, QueryAnswer, multi_aggregate
+from .multiquery import (GroupAnswer, MultiQueryExecutor, QueryAnswer,
+                         QueryPlan, multi_aggregate, table_sampler)
 from . import distributed, metrics
 
 __all__ = [
     "AggregateResult", "BlockResult", "BlockResultsBatch", "Boundaries",
-    "IslaParams", "IslaQuery",
+    "IslaParams", "IslaQuery", "Predicate", "flat_segments",
     "RegionMoments", "REGION_TS", "REGION_S", "REGION_N", "REGION_L",
     "REGION_TL", "classify", "classify_np", "region_of", "choose_q",
     "choose_q_batch", "deviation_degree", "deviation_degree_batch",
@@ -55,6 +56,7 @@ __all__ = [
     "mv_avg", "mvb_avg", "uniform_avg", "aggregate_noniid",
     "block_leverages", "OnlineBlockState", "continue_block",
     "aggregate_extreme", "block_rate_leverages",
-    "MultiQueryExecutor", "QueryAnswer", "multi_aggregate",
+    "GroupAnswer", "MultiQueryExecutor", "QueryAnswer", "QueryPlan",
+    "multi_aggregate", "table_sampler",
     "distributed", "metrics",
 ]

@@ -22,6 +22,7 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .types import IslaParams
 
@@ -107,8 +108,13 @@ def phase2(mom_s: jnp.ndarray, mom_l: jnp.ndarray, sketch0: jnp.ndarray,
     """Branchless Phase 2.  Returns the block's partial answer.
 
     Fully elementwise: feed one (4,) moment pair for a scalar answer, or
-    stacked (n_blocks, 4) pairs for n partial answers in one call — the
-    device route of ``multiquery.MultiQueryExecutor``.
+    any stacked (..., 4) pairs for a batch of partial answers in one call —
+    the device route of ``multiquery.MultiQueryExecutor``.  The relational
+    (group, block) moments axis rides this unchanged: segment id =
+    ``group * n_blocks + block`` (``engine.flat_segments``) flattens onto
+    the batch dim, so grouped/predicated cells cost the same one launch as
+    plain blocks — feed (n_groups * n_blocks, 4) or (n_groups, n_blocks, 4)
+    stacks, both work.
 
     mode="calibrated" — ISLA-C fixed point (geometry-correct lambda*).
     mode="empirical"  — ISLA-E: geometry=(kappa, b0) measured from the pilot.
@@ -170,6 +176,29 @@ def phase2(mom_s: jnp.ndarray, mom_l: jnp.ndarray, sketch0: jnp.ndarray,
 # ---------------------------------------------------------------------------
 # Pilot + end-to-end distributed mean.
 # ---------------------------------------------------------------------------
+
+
+def pilot_stats_device(values) -> Tuple[float, float, float]:
+    """Pre-estimation moment accumulation on device: ``(sketch0, sigma,
+    min)`` of a host pilot array via the same jnp reduction path Phase 2
+    runs on (``run_pilot``'s ``stats_fn`` hook for ``route="device"``).
+
+    fp32-safe by the usual lever: values are pre-scaled by a host-side
+    normalizer (the pilot's max |value|) so the device sums are O(n), and
+    the three statistics are exactly scale-equivariant.  sigma uses ddof=1
+    to match the host pilot.
+    """
+    v_host = np.asarray(values, dtype=np.float64).reshape(-1)
+    if v_host.size == 0:
+        raise ValueError("pilot must be non-empty")
+    scale = float(max(np.max(np.abs(v_host)), 1e-12))
+    v = jnp.asarray(v_host / scale, jnp.float32)
+    n = v.shape[0]
+    mean = jnp.sum(v) / n
+    var = jnp.sum(jnp.square(v - mean)) / max(n - 1, 1)
+    sigma = jnp.sqrt(jnp.maximum(var, 0.0))
+    lo = jnp.min(v)
+    return float(mean) * scale, float(sigma) * scale, float(lo) * scale
 
 
 def local_pilot(values: jnp.ndarray, pilot_size: int = 256

@@ -20,6 +20,24 @@ Two execution engines share the pipeline:
    block (float64, same operation order; see ``modulation.n_iterations_batch``
    for the two libm-exactness details), ~an order of magnitude faster at
    1000+ blocks (see benchmarks/multiquery_bench.py).
+
+Relational axis: Phase 1 is a segmented reduction, and the segment id is not
+limited to the block index.  ``phase1_sampling_batch`` /
+``sample_moments_batch`` accept per-sample ``group_ids`` (GROUP BY keys,
+integer-coded) and a boolean predicate ``mask`` (WHERE clause); the segment
+id becomes ``group * n_blocks + block`` (``flat_segments``), so a
+(n_groups, n_blocks) moments axis flattens onto the exact batch dim every
+vectorized stage — host Phase 2, the jnp ``distributed.phase2``, and the
+batched Pallas kernel — already handles.  Masked samples are dropped from
+the stream *before* accumulation, so each (group, block) cell's moments are
+bit-identical to running the scalar Alg. 1 over that cell's sub-stream in
+stream order; ``repro.core.multiquery`` builds grouped/predicated SQL-shaped
+answers on top of this.
+
+Memory: ``chunk_size`` (Phase 1) accumulates ``np.bincount`` over stream
+prefixes with a carry that preserves the per-segment summation order
+bit-for-bit, and ``chunk_blocks`` (sampling) draws + folds block chunks so
+the tagged sample stream is never materialized whole.
 """
 from __future__ import annotations
 
@@ -42,8 +60,8 @@ from .preestimation import (PilotResult, array_sampler, required_sample_size,
                             run_pilot, sampling_rate)
 from .summarize import summarize
 from .types import (AggregateResult, BlockResult, BlockResultsBatch,
-                    Boundaries, IslaParams, REGION_L, REGION_S, RegionMoments,
-                    classify_np)
+                    Boundaries, IslaParams, Predicate, REGION_L, REGION_S,
+                    RegionMoments, classify_np)
 
 Sampler = Callable[[int, np.random.Generator], np.ndarray]
 
@@ -51,32 +69,102 @@ Sampler = Callable[[int, np.random.Generator], np.ndarray]
 _K_EPS = 1e-12
 
 
-def _region_moment_rows(values: np.ndarray, block_ids: np.ndarray,
-                        n_blocks: int, boundaries: Boundaries
-                        ) -> Tuple[np.ndarray, np.ndarray]:
-    """Alg. 1 over a stream tagged with block ids: (n_blocks, 4) moment rows
+def flat_segments(block_ids: np.ndarray, n_blocks: int,
+                  group_ids: Optional[np.ndarray] = None,
+                  n_groups: int = 1) -> Tuple[np.ndarray, int]:
+    """Flatten a (group, block) tag pair onto one segment axis.
+
+    segment id = ``group * n_blocks + block`` — groups are the slow axis, so
+    a (n_groups * n_blocks, ...) stack reshapes to (n_groups, n_blocks, ...)
+    with ``.reshape(n_groups, n_blocks, -1)``.  With ``group_ids=None`` the
+    segment axis is the plain block axis (the pre-relational layout).
+    """
+    if n_groups < 1:
+        raise ValueError(f"n_groups must be >= 1, got {n_groups}")
+    if group_ids is None:
+        if n_groups != 1:
+            raise ValueError("n_groups > 1 requires per-sample group_ids")
+        return block_ids, n_blocks
+    group_ids = np.asarray(group_ids, dtype=np.intp).reshape(-1)
+    if group_ids.shape != block_ids.shape:
+        raise ValueError("group_ids and block_ids must align")
+    if group_ids.size and (group_ids.min() < 0
+                           or group_ids.max() >= n_groups):
+        raise ValueError(
+            f"group ids must lie in [0, {n_groups}); got range "
+            f"[{group_ids.min()}, {group_ids.max()}]")
+    return group_ids * n_blocks + block_ids, n_groups * n_blocks
+
+
+def _tagged_segments(values: np.ndarray, block_ids: np.ndarray,
+                     n_blocks: int, group_ids: Optional[np.ndarray],
+                     n_groups: int, mask: Optional[np.ndarray]
+                     ) -> Tuple[np.ndarray, np.ndarray, int]:
+    """Shared tag plumbing of the segmented accumulators: align the stream
+    with its (group, block) tags, flatten the segment axis, and drop
+    masked-out samples (stream order preserved, so per-cell accumulation
+    stays bit-identical to the scalar sweep)."""
+    values = np.asarray(values, dtype=np.float64).reshape(-1)
+    block_ids = np.asarray(block_ids, dtype=np.intp).reshape(-1)
+    if values.shape != block_ids.shape:
+        raise ValueError("values and block_ids must align")
+    seg_ids, n_segments = flat_segments(block_ids, n_blocks, group_ids,
+                                        n_groups)
+    if mask is not None:
+        mask = np.asarray(mask, dtype=bool).reshape(-1)
+        if mask.shape != values.shape:
+            raise ValueError("mask and values must align")
+        values, seg_ids = values[mask], seg_ids[mask]
+    return values, seg_ids, n_segments
+
+
+def _segment_moment_rows(values: np.ndarray, seg_ids: np.ndarray,
+                         n_segments: int, boundaries: Boundaries,
+                         carry: Optional[Tuple[np.ndarray, np.ndarray]] = None
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Alg. 1 over a tagged stream: (n_segments, 4) moment rows
     ``(count, s1, s2, s3)`` for S and for L.
 
     ``np.bincount`` accumulates weights in stream order — exactly the
     sequential ``updateParams`` of Alg. 1 — which is what makes the scalar
     and batched engines bit-identical (both route through here).
+
+    ``carry`` continues accumulation from previous (rows_s, rows_l): each
+    segment's running total is prepended to the bincount input as a single
+    weight, so the addition order is ``((carry + a1) + a2) + ...`` — the
+    identical left fold a single whole-stream bincount performs.  That is
+    what keeps chunked accumulation bit-for-bit equal to unchunked.
     """
     codes = classify_np(values, boundaries)
 
-    def rows(region: int) -> np.ndarray:
+    def rows(region: int, prev: Optional[np.ndarray]) -> np.ndarray:
         m = codes == region
-        ids = block_ids[m]
+        ids = seg_ids[m]
         vals = values[m]
-        cnt = np.bincount(ids, minlength=n_blocks).astype(np.float64)
-        s1 = np.bincount(ids, weights=vals, minlength=n_blocks)
-        s2 = np.bincount(ids, weights=vals * vals, minlength=n_blocks)
         # vals * vals * vals, not vals ** 3: numpy pow differs from repeated
         # multiplication by an ulp, and updateParams uses a * a * a.
-        s3 = np.bincount(ids, weights=vals * vals * vals,
-                         minlength=n_blocks)
+        if prev is None:
+            cnt = np.bincount(ids, minlength=n_segments).astype(np.float64)
+            s1 = np.bincount(ids, weights=vals, minlength=n_segments)
+            s2 = np.bincount(ids, weights=vals * vals, minlength=n_segments)
+            s3 = np.bincount(ids, weights=vals * vals * vals,
+                             minlength=n_segments)
+            return np.stack([cnt, s1, s2, s3], axis=1)
+        pre = np.arange(n_segments, dtype=np.intp)
+        ids2 = np.concatenate([pre, ids])
+
+        def acc(col: int, w: np.ndarray) -> np.ndarray:
+            return np.bincount(ids2, weights=np.concatenate([prev[:, col], w]),
+                               minlength=n_segments)
+
+        cnt = acc(0, np.ones(vals.size, dtype=np.float64))
+        s1 = acc(1, vals)
+        s2 = acc(2, vals * vals)
+        s3 = acc(3, vals * vals * vals)
         return np.stack([cnt, s1, s2, s3], axis=1)
 
-    return rows(REGION_S), rows(REGION_L)
+    return (rows(REGION_S, None if carry is None else carry[0]),
+            rows(REGION_L, None if carry is None else carry[1]))
 
 
 def phase1_sampling(samples: np.ndarray, boundaries: Boundaries
@@ -88,38 +176,64 @@ def phase1_sampling(samples: np.ndarray, boundaries: Boundaries
     (``repro.kernels.isla_moments``) implements the same contract on TPU.
     """
     s = np.asarray(samples, dtype=np.float64).reshape(-1)
-    rows_s, rows_l = _region_moment_rows(
+    rows_s, rows_l = _segment_moment_rows(
         s, np.zeros(s.size, dtype=np.intp), 1, boundaries)
     return (RegionMoments(*(float(x) for x in rows_s[0])),
             RegionMoments(*(float(x) for x in rows_l[0])))
 
 
 def phase1_sampling_batch(values: np.ndarray, block_ids: np.ndarray,
-                          n_blocks: int, boundaries: Boundaries
+                          n_blocks: int, boundaries: Boundaries, *,
+                          group_ids: Optional[np.ndarray] = None,
+                          n_groups: int = 1,
+                          mask: Optional[np.ndarray] = None,
+                          chunk_size: Optional[int] = None
                           ) -> Tuple[np.ndarray, np.ndarray]:
-    """Alg. 1 over all blocks at once.
+    """Alg. 1 over every (group, block) cell at once.
 
     ``values`` is the concatenation of every block's samples and
-    ``block_ids`` tags each sample with its block; returns (n_blocks, 4)
-    S and L moment rows.  Per block bit-identical to ``phase1_sampling``.
+    ``block_ids`` tags each sample with its block.  Optionally each sample
+    carries a ``group_ids`` tag (GROUP BY key, in [0, n_groups)) and a
+    boolean ``mask`` (WHERE clause) — masked-out samples are dropped from
+    the stream before accumulation.  Returns (n_groups * n_blocks, 4) S and
+    L moment rows on the flattened ``flat_segments`` axis (plain
+    (n_blocks, 4) when ungrouped).  Per cell bit-identical to running
+    ``phase1_sampling`` over that cell's sub-stream in stream order.
+
+    ``chunk_size`` accumulates over stream prefixes of at most that many
+    samples (bit-identical to whole-stream accumulation — see
+    ``_segment_moment_rows``'s carry contract), bounding the bincount
+    working set for callers that stream huge tagged samples.
     """
-    values = np.asarray(values, dtype=np.float64).reshape(-1)
-    block_ids = np.asarray(block_ids, dtype=np.intp).reshape(-1)
-    if values.shape != block_ids.shape:
-        raise ValueError("values and block_ids must align")
-    return _region_moment_rows(values, block_ids, n_blocks, boundaries)
+    values, seg_ids, n_segments = _tagged_segments(
+        values, block_ids, n_blocks, group_ids, n_groups, mask)
+    if chunk_size is None or values.size <= chunk_size:
+        return _segment_moment_rows(values, seg_ids, n_segments, boundaries)
+    if chunk_size < 1:
+        raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
+    carry = (np.zeros((n_segments, 4)), np.zeros((n_segments, 4)))
+    for start in range(0, values.size, chunk_size):
+        sl = slice(start, start + chunk_size)
+        carry = _segment_moment_rows(values[sl], seg_ids[sl], n_segments,
+                                     boundaries, carry=carry)
+    return carry
 
 
 def sample_moments_batch(values: np.ndarray, block_ids: np.ndarray,
-                         n_blocks: int) -> np.ndarray:
-    """(n_blocks, 3) plain moments ``(count, s1, s2)`` of *all* samples per
-    block (no region mask) — the extra accumulators VAR/COUNT estimators
-    compose with the leverage-based mean (see ``multiquery``)."""
-    values = np.asarray(values, dtype=np.float64).reshape(-1)
-    block_ids = np.asarray(block_ids, dtype=np.intp).reshape(-1)
-    cnt = np.bincount(block_ids, minlength=n_blocks).astype(np.float64)
-    s1 = np.bincount(block_ids, weights=values, minlength=n_blocks)
-    s2 = np.bincount(block_ids, weights=values * values, minlength=n_blocks)
+                         n_blocks: int, *,
+                         group_ids: Optional[np.ndarray] = None,
+                         n_groups: int = 1,
+                         mask: Optional[np.ndarray] = None) -> np.ndarray:
+    """(n_groups * n_blocks, 3) plain moments ``(count, s1, s2)`` of *all*
+    stream samples per (group, block) cell (no region mask) — the extra
+    accumulators VAR/COUNT estimators and per-group weights compose with the
+    leverage-based mean (see ``multiquery``).  Same segment/mask contract as
+    ``phase1_sampling_batch``."""
+    values, seg_ids, n_segments = _tagged_segments(
+        values, block_ids, n_blocks, group_ids, n_groups, mask)
+    cnt = np.bincount(seg_ids, minlength=n_segments).astype(np.float64)
+    s1 = np.bincount(seg_ids, weights=values, minlength=n_segments)
+    s2 = np.bincount(seg_ids, weights=values * values, minlength=n_segments)
     return np.stack([cnt, s1, s2], axis=1)
 
 
@@ -273,8 +387,10 @@ def sample_blocks_batched(block_samplers: Sequence[Sampler],
                           block_sizes: Sequence[int], rate: float,
                           boundaries: Boundaries, rng: np.random.Generator,
                           shift: float = 0.0,
-                          max_samples: Optional[int] = None
-                          ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                          max_samples: Optional[int] = None,
+                          chunk_blocks: Optional[int] = None
+                          ) -> Tuple[Optional[np.ndarray],
+                                     Optional[np.ndarray], np.ndarray,
                                      np.ndarray, np.ndarray]:
     """Sampling + Phase 1 for every block, stacked.
 
@@ -283,21 +399,42 @@ def sample_blocks_batched(block_samplers: Sequence[Sampler],
     quotas)``; callers pick the Phase 2 executor (host vectorized solvers,
     or the jnp/device path in ``distributed.phase2``).
 
-    Memory: the whole tagged stream is materialized at once (sum of quotas
-    floats) — negligible at ISLA's Eq. 1 rates, but a deliberate departure
-    from the sequential engine's O(one-block) profile; callers with huge
-    per-block quotas should use ``engine="sequential"`` (or the chunked
-    accumulation noted in ROADMAP.md).
+    Memory: by default the whole tagged stream is materialized at once (sum
+    of quotas floats) — negligible at ISLA's Eq. 1 rates, but a deliberate
+    departure from the sequential engine's O(one-block) profile.
+    ``chunk_blocks`` restores it: blocks are drawn and folded into the
+    moment rows ``chunk_blocks`` at a time and each chunk's samples are
+    dropped immediately, so peak memory is one chunk's quota.  Block
+    boundaries never split a segment, so chunked moments are bit-identical
+    to unchunked; ``values``/``block_ids`` are returned as ``None`` (the
+    stream no longer exists to hand back).
     """
     n = len(block_samplers)
     quotas = block_quotas(block_sizes, rate, max_samples)
-    raws = [np.asarray(sampler(m, rng), dtype=np.float64)
-            for sampler, m in zip(block_samplers, quotas)]
-    values = np.concatenate(raws) + shift if n else np.zeros(0)
-    block_ids = np.repeat(np.arange(n, dtype=np.intp), quotas)
-    mom_s, mom_l = phase1_sampling_batch(values, block_ids, n, boundaries)
-    return values, block_ids, mom_s, mom_l, np.asarray(quotas,
-                                                       dtype=np.int64)
+    if chunk_blocks is None:
+        raws = [np.asarray(sampler(m, rng), dtype=np.float64)
+                for sampler, m in zip(block_samplers, quotas)]
+        values = np.concatenate(raws) + shift if n else np.zeros(0)
+        block_ids = np.repeat(np.arange(n, dtype=np.intp), quotas)
+        mom_s, mom_l = phase1_sampling_batch(values, block_ids, n,
+                                             boundaries)
+        return values, block_ids, mom_s, mom_l, np.asarray(quotas,
+                                                           dtype=np.int64)
+    if chunk_blocks < 1:
+        raise ValueError(f"chunk_blocks must be >= 1, got {chunk_blocks}")
+    mom_s = np.zeros((n, 4))
+    mom_l = np.zeros((n, 4))
+    for start in range(0, n, chunk_blocks):
+        end = min(start + chunk_blocks, n)
+        raws = [np.asarray(block_samplers[j](quotas[j], rng),
+                           dtype=np.float64) for j in range(start, end)]
+        vals = np.concatenate(raws) + shift
+        ids = np.repeat(np.arange(end - start, dtype=np.intp),
+                        quotas[start:end])
+        ms, ml = phase1_sampling_batch(vals, ids, end - start, boundaries)
+        mom_s[start:end] = ms
+        mom_l[start:end] = ml
+    return None, None, mom_s, mom_l, np.asarray(quotas, dtype=np.int64)
 
 
 def run_blocks_batched(block_samplers: Sequence[Sampler],
@@ -306,19 +443,23 @@ def run_blocks_batched(block_samplers: Sequence[Sampler],
                        params: IslaParams, rng: np.random.Generator,
                        shift: float = 0.0,
                        max_samples: Optional[int] = None,
-                       mode: str = "faithful", geometry=None
-                       ) -> Tuple[BlockResultsBatch, np.ndarray, np.ndarray]:
+                       mode: str = "faithful", geometry=None,
+                       chunk_blocks: Optional[int] = None
+                       ) -> Tuple[BlockResultsBatch, Optional[np.ndarray],
+                                  Optional[np.ndarray]]:
     """All blocks' partial answers as one stacked computation (both phases
     vectorized on the host).
 
     Returns ``(blocks, values, block_ids)``; the tagged sample stream is
     returned so multi-query executors can derive further estimators (VAR
     second moments, predicate COUNTs) from the same pass without
-    re-sampling.
+    re-sampling.  With ``chunk_blocks`` set the stream is folded away chunk
+    by chunk (O(one-chunk) memory, bit-identical moments) and
+    ``values``/``block_ids`` come back as ``None``.
     """
     values, block_ids, mom_s, mom_l, quotas = sample_blocks_batched(
         block_samplers, block_sizes, rate, boundaries, rng, shift=shift,
-        max_samples=max_samples)
+        max_samples=max_samples, chunk_blocks=chunk_blocks)
     res = phase2_iteration_batch(mom_s, mom_l, sketch0, params, mode=mode,
                                  geometry=geometry)
     blocks = BlockResultsBatch(
@@ -358,18 +499,29 @@ def run_block(block_id: int, sampler: Sampler, block_size: int, rate: float,
 
 @dataclasses.dataclass(frozen=True)
 class IslaQuery:
-    """SELECT <agg>(column) FROM data WHERE precision=e (paper §II-B,
-    extended to the BlinkDB-style multi-aggregate workload).
+    """SELECT <agg>(measure) [WHERE ...] [GROUP BY key] with precision=e
+    (paper §II-B, extended to the BlinkDB-style relational workload).
 
     ``e`` is the precision target on the *mean* scale for every aggregate
     (a SUM answer therefore carries an absolute bound of M * e); ``agg`` is
     one of AVG / SUM / COUNT / VAR — see ``repro.core.multiquery`` for how
     non-AVG aggregates compose from the leverage-based mean and the shared
     block moments.
+
+    ``where`` is an optional ``Predicate`` evaluated on the sampled rows;
+    ``group_by`` names an integer-coded column whose cardinality the
+    executor knows (``group_domains``); ``mode`` optionally pins this
+    query's Phase 2 solver (None = the executor default) — the planner
+    groups queries by resolved mode and runs one shared sampling pass per
+    mode-group.  Frozen/hashable so planners can key shared work off
+    ``(where, group_by)``.
     """
     e: float = 0.1
     beta: float = 0.95
     agg: str = "AVG"
+    where: Optional[Predicate] = None
+    group_by: Optional[str] = None
+    mode: Optional[str] = None
 
 
 def aggregate(block_samplers: Sequence[Sampler],
@@ -380,7 +532,8 @@ def aggregate(block_samplers: Sequence[Sampler],
               sigma_guess: Optional[float] = None,
               mode: str = "faithful",
               deadline_samples: Optional[int] = None,
-              engine: str = "batched") -> AggregateResult:
+              engine: str = "batched",
+              chunk_blocks: Optional[int] = None) -> AggregateResult:
     """Full pipeline: Pre-estimation -> Calculation -> Summarization.
 
     ``rate_override`` lets experiments set the sampling rate directly (e.g.
@@ -390,12 +543,16 @@ def aggregate(block_samplers: Sequence[Sampler],
     Phase 2 evaluation; "sequential" is the per-block reference loop the
     batched path is bit-validated against (for the closed-form modes; the
     loop-based mode="faithful" maps onto its algebraic closed form when
-    batched, which agrees to 1e-12).
+    batched, which agrees to 1e-12).  ``chunk_blocks`` (batched engine
+    only) folds the sample stream away that many blocks at a time —
+    O(one-chunk) memory, bit-identical answers.
     """
     if len(block_samplers) != len(block_sizes):
         raise ValueError("one sampler per block required")
     if engine not in ("batched", "sequential"):
         raise ValueError(f"unknown engine {engine!r}")
+    if chunk_blocks is not None and engine != "batched":
+        raise ValueError("chunk_blocks applies to engine='batched' only")
     if mode not in MODES:
         raise ValueError(f"unknown mode {mode!r}; expected one of {MODES}")
     data_size = int(sum(block_sizes))
@@ -417,7 +574,7 @@ def aggregate(block_samplers: Sequence[Sampler],
         blocks, _, _ = run_blocks_batched(
             block_samplers, block_sizes, rate, boundaries, shifted_sketch0,
             params, rng, shift=pilot.shift, max_samples=deadline_samples,
-            mode=mode, geometry=geometry)
+            mode=mode, geometry=geometry, chunk_blocks=chunk_blocks)
         partials = blocks.avg
     else:
         blocks = []

@@ -1,50 +1,125 @@
-"""Multi-query ISLA: N concurrent bounded-error aggregates, one sample pass.
+"""Relational multi-query ISLA: N concurrent bounded-error SQL-shaped
+aggregates — WHERE, GROUP BY, per-query Phase 2 modes — from shared passes.
 
 BlinkDB-style serving answers many simultaneous ``(e, beta, agg)`` queries
-over shared samples.  ISLA makes that cheap: Theorem 3 collapses a block to 8
-streaming moments, so ONE pilot + ONE tagged sampling pass + ONE vectorized
-Phase 2 (``engine.run_blocks_batched``) yields the leverage-based mean, and
-every requested aggregate composes from that mean plus the same pass's plain
-sample moments:
+over shared samples; PS3-style planning uses summary statistics to decide
+how much to sample where.  ISLA makes both cheap: Theorem 3 collapses any
+sub-stream to 8 streaming moments, so a (group, block) cell is exactly as
+summarizable as a block, and the whole relational surface rides the one
+vectorized engine:
 
-  AVG    mean itself                                    (paper §II-B)
-  SUM    M * mean                  (absolute bound M * e — ``e`` is always
-                                    stated on the mean scale, see IslaQuery)
-  COUNT  M (block sizes are catalog metadata, so exact; kept as a query type
-         so mixed BlinkDB workloads route through one API)
-  VAR    E[X^2] - mean^2 with E[X^2] block-weighted from the shared pass's
-         second moments and the *leverage-corrected* mean — best-effort
-         precision (the paper's (e, beta) guarantee covers the mean term).
-
-Routes: "host" keeps everything float64 numpy; "device" ships the stacked
-(n, 4) moment rows through the branchless jnp Phase 2 in
-``distributed.phase2`` (fp32, scale-normalized) — the same code path
-shard_map uses, so a serving tier can run Phase 2 on-accelerator next to the
-model it instruments.
+  planning    ``plan()`` parses each ``IslaQuery`` (``where: Predicate``,
+              ``group_by: key``, ``mode``), resolves per-query Phase 2
+              modes (``auto`` from pilot skew), groups queries by resolved
+              mode, and plans ONE shared sampling rate per mode-group —
+              the strictest Eq. 1 rate among the group's queries, inflated
+              predicate-aware: GROUP BY multiplies by the group-key
+              cardinality, WHERE divides by the predicate's selectivity as
+              estimated on the pilot rows.
+  execution   one pilot for the batch + one tagged sampling pass per
+              mode-group.  Per distinct ``(where, group_by)`` key the pass's
+              stream is re-segmented (segment id = group * n_blocks + block,
+              ``engine.flat_segments``) and the SAME vectorized Phase 1 +
+              Phase 2 machinery runs over the flattened cells — no
+              per-group Python loop, host float64 or the jnp device route
+              (``distributed.phase2``) unchanged.
+  answers     AVG    leverage-based mean per group               (§II-B)
+              SUM    est. group population * mean (plain M * mean when
+                     unpredicated — absolute bound M * e)
+              COUNT  exact from catalog metadata when unpredicated;
+                     estimated (M * match fraction) with a normal-binomial
+                     bound under WHERE / GROUP BY
+              VAR    E[X^2] - mean^2 per group from the pass's plain cell
+                     moments and the leverage-corrected mean (best-effort)
+              Bounds stay honest: a group's ``(e, beta)`` claim is reported
+              only when its own matching-sample count reaches Eq. 1's m for
+              its estimated sigma AND none of its populated cells hit the
+              empty-region fallback; small/starved groups degrade to
+              best-effort (bound None) — reported, never silently wrong.
 
 The scalar per-block engine (``engine.run_block``) stays the bit-validated
-reference oracle for everything here.
+reference oracle: every (group, block) cell's moments and partial answer are
+bit-identical to running it over that cell's sub-stream in stream order.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Sequence
+import math
+from typing import Callable, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .engine import (MODES, IslaQuery, Sampler, phase2_iteration_batch,
-                     resolve_mode_and_geometry, sample_blocks_batched,
-                     sample_moments_batch)
-from .preestimation import required_sample_size, run_pilot, sampling_rate
 from .boundaries import make_boundaries
+from .engine import (MODES, IslaQuery, Sampler, block_quotas,
+                     phase1_sampling_batch, phase2_iteration_batch,
+                     resolve_mode_and_geometry, sample_moments_batch)
+from .preestimation import (required_sample_size, run_pilot, sampling_rate,
+                            z_score)
 from .summarize import summarize
-from .types import AggregateResult, BlockResultsBatch, IslaParams
+from .types import (AggregateResult, BlockResultsBatch, Boundaries,
+                    IslaParams, Predicate)
 
 AGGREGATES = ("AVG", "SUM", "COUNT", "VAR")
 # Aggregates answered exactly from catalog metadata — they never constrain
-# the shared sampling rate.
+# the shared sampling rate.  Only the *unpredicated, ungrouped* form is
+# exact: a WHERE or GROUP BY makes COUNT an estimate that consumes samples.
 EXACT_AGGREGATES = ("COUNT",)
 ROUTES = ("host", "device")
+
+# Predicate-aware planning floors the estimated selectivity so a predicate
+# the pilot barely matched cannot demand a quasi-full scan on its own.
+MIN_PLANNED_SELECTIVITY = 0.01
+
+# Rows are dicts of equal-length columns; bare arrays mean "measure only".
+RowSampler = Callable[[int, np.random.Generator],
+                      Union[np.ndarray, Mapping[str, np.ndarray]]]
+
+
+def table_sampler(columns: Mapping[str, np.ndarray]) -> RowSampler:
+    """Uniform-with-replacement row sampler over an in-memory block table
+    (the relational sibling of ``preestimation.array_sampler``)."""
+    cols = {k: np.asarray(v) for k, v in columns.items()}
+    if not cols:
+        raise ValueError("table needs at least one column")
+    sizes = {v.shape[0] for v in cols.values()}
+    if len(sizes) != 1:
+        raise ValueError(f"columns must share one length, got {sizes}")
+    n_rows = sizes.pop()
+    if n_rows == 0:
+        raise ValueError("table must be non-empty")
+
+    def sample(n: int, rng: np.random.Generator) -> Mapping[str, np.ndarray]:
+        idx = rng.integers(0, n_rows, size=n)
+        return {k: v[idx] for k, v in cols.items()}
+
+    return sample
+
+
+def _is_exact(q: IslaQuery) -> bool:
+    return (q.agg in EXACT_AGGREGATES and q.where is None
+            and q.group_by is None)
+
+
+def _pass_key(q: IslaQuery) -> Tuple[Optional[Predicate], Optional[str]]:
+    """(where, group_by) — the re-segmentation work shared across queries."""
+    return (q.where, q.group_by)
+
+
+@dataclasses.dataclass
+class GroupAnswer:
+    """One group's row of a GROUP BY answer.
+
+    ``value`` is NaN when the group drew no matching samples (reported,
+    never silently substituted); ``est_size`` is the estimated matching
+    population of the group (sample-fraction scaled catalog sizes).
+    """
+
+    group: int
+    value: float
+    mean: float
+    error_bound: Optional[float]   # on the aggregate scale; None=best-effort
+    n_samples: int                 # matching samples observed for the group
+    est_size: float
 
 
 @dataclasses.dataclass
@@ -57,6 +132,11 @@ class QueryAnswer:
     error_bound: Optional[float]  # e on the aggregate scale; None = best-effort
     sampling_rate: float
     sample_size: int
+    mode: Optional[str] = None          # resolved Phase 2 mode (provenance)
+    pass_id: int = 0                    # which shared pass answered it
+    groups: Optional[list] = None       # GroupAnswer rows when group_by
+    n_matched: Optional[int] = None     # matching samples (where/group_by)
+    est_population: Optional[float] = None  # estimated matching rows
 
     def __float__(self) -> float:
         return float(self.value)
@@ -68,51 +148,200 @@ class SharedPass:
 
     result: AggregateResult       # mean-query provenance (blocks, boundaries)
     mean: float                   # un-shifted leverage-based mean
-    ex2: Optional[float]          # E[X^2] of the shifted stream (VAR only)
+    ex2: Optional[float]          # E[X^2] of the shifted stream
     mean_shifted: float           # mean on the shifted stream
     data_size: int
     rate: float
     sample_size: int
 
 
-class MultiQueryExecutor:
-    """Shares one pilot + one pass of block moments across N queries.
+@dataclasses.dataclass
+class KeyedPass:
+    """Per-(group, block) cell statistics for one ``(where, group_by)`` key,
+    all on the flattened ``group * n_blocks + block`` segment axis reshaped
+    to (n_groups, n_blocks).  Shifted-stream quantities throughout; the
+    composer un-shifts."""
 
-    The sampling rate is driven by the *strictest* query (max of the per-query
-    Eq. 1 rates), so every answer carries at least its requested confidence.
+    n_groups: int
+    partials: np.ndarray       # (G, B) per-cell Phase 2 answers
+    cell_counts: np.ndarray    # (G, B) matching samples per cell
+    cell_weights: np.ndarray   # (G, B) estimated matching population
+    mean_g: np.ndarray         # (G,) leverage-weighted group means (NaN=empty)
+    ex2_g: np.ndarray          # (G,) weighted second moments (NaN=empty)
+    sigma_g: np.ndarray        # (G,) per-group sample sigma estimates
+    plain_mean_g: np.ndarray   # (G,) unweighted matching-sample means
+    n_g: np.ndarray            # (G,) matching samples per group
+    w_g: np.ndarray            # (G,) estimated matching population per group
+    degraded_g: np.ndarray     # (G,) bool: some populated cell hit fallback
+    mean_all: float            # grand over matching rows (NaN if none)
+    ex2_all: float
+    sigma_all: float
+    plain_mean_all: float      # unweighted matching-sample mean — always
+    n_all: int                 # computed, even on need_mean=False passes
+    w_all: float
+    degraded_all: bool
+
+
+@dataclasses.dataclass
+class ModeGroup:
+    """One planned shared pass: the queries that resolved to one Phase 2
+    mode, and the rate their strictest (predicate-aware) demand set."""
+
+    mode: str
+    geometry: Optional[tuple]
+    rate: float
+    query_ids: list
+
+    def describe(self) -> str:
+        return (f"mode={self.mode} rate={self.rate:.3g} "
+                f"queries={self.query_ids}")
+
+
+@dataclasses.dataclass
+class QueryPlan:
+    """The planner's output: one pilot, one mode-group per resolved Phase 2
+    mode, each with a shared predicate-aware sampling rate."""
+
+    queries: list
+    pilot: "object"               # PilotResult
+    pilot_columns: Mapping[str, np.ndarray]
+    boundaries: Boundaries
+    shifted_sketch0: float
+    mode_groups: list
+
+    def describe(self) -> str:
+        lines = [f"plan: {len(self.queries)} queries -> "
+                 f"{len(self.mode_groups)} shared pass(es)"]
+        for i, mg in enumerate(self.mode_groups):
+            lines.append(f"  pass {i}: {mg.describe()}")
+        return "\n".join(lines)
+
+
+class MultiQueryExecutor:
+    """Shares one pilot + one tagged pass per mode-group across N queries.
+
+    Each pass's sampling rate is driven by the *strictest* of its queries
+    (max of the per-query predicate-aware Eq. 1 rates), so every answer
+    carries at least its requested confidence wherever the estimated
+    selectivity held.
+
+    ``measure`` names the aggregated column when samplers return row dicts
+    (bare-array samplers are treated as measure-only rows).
+    ``group_domains`` maps each legal ``group_by`` key to its cardinality —
+    catalog metadata, exactly like block sizes.
     """
 
-    def __init__(self, block_samplers: Sequence[Sampler],
+    def __init__(self, block_samplers: Sequence[RowSampler],
                  block_sizes: Sequence[int],
-                 params: Optional[IslaParams] = None):
+                 params: Optional[IslaParams] = None,
+                 measure: str = "value",
+                 group_domains: Optional[Mapping[str, int]] = None):
         if len(block_samplers) != len(block_sizes):
             raise ValueError("one sampler per block required")
         self.block_samplers = list(block_samplers)
         self.block_sizes = [int(b) for b in block_sizes]
         self.params = params if params is not None else IslaParams()
         self.data_size = int(sum(self.block_sizes))
+        self.measure = measure
+        self.group_domains = dict(group_domains or {})
+        for key, card in self.group_domains.items():
+            if int(card) < 1:
+                raise ValueError(f"group domain {key!r} needs cardinality "
+                                 f">= 1, got {card}")
+
+    # -- row plumbing ------------------------------------------------------
+
+    def _as_rows(self, drawn) -> Mapping[str, np.ndarray]:
+        if isinstance(drawn, Mapping):
+            return {k: np.asarray(v) for k, v in drawn.items()}
+        return {self.measure: np.asarray(drawn)}
+
+    def _measure_of(self, rows: Mapping[str, np.ndarray]) -> np.ndarray:
+        if self.measure not in rows:
+            raise KeyError(f"measure column {self.measure!r} not in sampled "
+                           f"rows (have: {sorted(rows)})")
+        return np.asarray(rows[self.measure], dtype=np.float64)
+
+    def _sample_rows(self, rate: float, rng: np.random.Generator,
+                     deadline_samples: Optional[int]
+                     ) -> Tuple[Mapping[str, np.ndarray], np.ndarray,
+                                np.ndarray]:
+        """One tagged pass: per-block draws in block order (the identical
+        RNG stream the plain engine consumes), concatenated per column."""
+        quotas = block_quotas(self.block_sizes, rate, deadline_samples)
+        raws = [self._as_rows(s(m, rng))
+                for s, m in zip(self.block_samplers, quotas)]
+        keys = set(raws[0])
+        for r in raws[1:]:
+            if set(r) != keys:
+                raise ValueError("block samplers must agree on columns; got "
+                                 f"{sorted(keys)} vs {sorted(r)}")
+        columns = {k: np.concatenate([r[k] for r in raws]) for k in keys}
+        block_ids = np.repeat(
+            np.arange(len(self.block_samplers), dtype=np.intp), quotas)
+        return columns, block_ids, np.asarray(quotas, dtype=np.int64)
+
+    def _group_ids(self, key: str, columns: Mapping[str, np.ndarray]
+                   ) -> Tuple[np.ndarray, int]:
+        if key not in columns:
+            raise KeyError(f"group_by column {key!r} not in sampled rows "
+                           f"(have: {sorted(columns)})")
+        col = np.asarray(columns[key])
+        ids = col.astype(np.intp)
+        if not np.array_equal(ids, col):
+            raise ValueError(f"group_by column {key!r} must be integer-coded")
+        return ids, int(self.group_domains[key])
 
     # -- planning ----------------------------------------------------------
 
     @staticmethod
-    def sampled_queries(queries: Sequence[IslaQuery]
-                        ) -> "list[IslaQuery]":
-        """Queries whose answers actually consume samples (COUNT is exact
-        from catalog metadata, so its (e, beta) never drives the rate)."""
-        return [q for q in queries if q.agg not in EXACT_AGGREGATES]
+    def sampled_queries(queries: Sequence[IslaQuery]) -> "list[IslaQuery]":
+        """Queries whose answers actually consume samples (plain COUNT is
+        exact from catalog metadata, so its (e, beta) never drives the
+        rate; predicated/grouped COUNT is an estimate and does)."""
+        return [q for q in queries if not _is_exact(q)]
 
-    def plan_rate(self, queries: Sequence[IslaQuery], sigma: float) -> float:
-        """max over the sample-consuming queries of Eq. 1's rate — the
-        shared sample must satisfy the strictest (e, beta) among them."""
+    def selectivity(self, where: Predicate,
+                    pilot_columns: Mapping[str, np.ndarray]
+                    ) -> Optional[float]:
+        """Predicate match fraction on the pilot rows — PS3-style summary
+        statistics steering the sample budget.  None when the pilot saw no
+        rows (all-exact planning probe)."""
+        if not pilot_columns:
+            return None
+        m = where.mask(pilot_columns)
+        if m.size == 0:
+            return None
+        return float(np.mean(m))
+
+    def _query_rate(self, q: IslaQuery, sigma: float,
+                    pilot_columns: Mapping[str, np.ndarray]) -> float:
+        """Predicate-aware Eq. 1: base rate for (e, beta), times the group
+        cardinality (each group needs its own m), over the estimated
+        selectivity (only matching samples count toward any group's m)."""
+        base = sampling_rate(q.e, sigma, q.beta, self.data_size)
+        factor = 1.0
+        if q.group_by is not None:
+            factor *= float(self.group_domains[q.group_by])
+        if q.where is not None:
+            sel = self.selectivity(q.where, pilot_columns)
+            if sel is not None:
+                factor /= max(sel, MIN_PLANNED_SELECTIVITY)
+        return min(1.0, base * factor)
+
+    def plan_rate(self, queries: Sequence[IslaQuery], sigma: float,
+                  pilot_columns: Optional[Mapping[str, np.ndarray]] = None
+                  ) -> float:
+        """max over the sample-consuming queries of the predicate-aware
+        Eq. 1 rate — the shared sample must satisfy the strictest demand."""
         sampled = self.sampled_queries(queries)
         if not sampled:  # all-exact batch: one minimal probe pass
             return sampling_rate(self.params.e, sigma, self.params.beta,
                                  self.data_size)
-        return max(sampling_rate(q.e, sigma, q.beta, self.data_size)
-                   for q in sampled)
+        cols = pilot_columns if pilot_columns is not None else {}
+        return max(self._query_rate(q, sigma, cols) for q in sampled)
 
-    @staticmethod
-    def validate(queries: Sequence[IslaQuery]) -> None:
+    def validate(self, queries: Sequence[IslaQuery]) -> None:
         if not queries:
             raise ValueError("need at least one query")
         for q in queries:
@@ -122,71 +351,137 @@ class MultiQueryExecutor:
                     f"{AGGREGATES}")
             if q.e <= 0:
                 raise ValueError(f"precision must be positive, got {q.e}")
+            if q.mode is not None and q.mode not in MODES:
+                raise ValueError(f"unknown mode {q.mode!r}; expected one of "
+                                 f"{MODES}")
+            if q.where is not None and not isinstance(q.where, Predicate):
+                raise ValueError(f"where must be a Predicate, got "
+                                 f"{type(q.where).__name__}")
+            if q.group_by is not None and q.group_by not in \
+                    self.group_domains:
+                raise ValueError(
+                    f"unknown group_by key {q.group_by!r}; declare its "
+                    f"cardinality via group_domains (have: "
+                    f"{sorted(self.group_domains)})")
 
-    # -- execution ---------------------------------------------------------
+    # Blocks are i.i.d.-shaped for the bootstrap's purposes (it only seeds
+    # the relaxed pilot size), so the executor bootstraps sigma from a
+    # strided subset of blocks instead of all of them — at 1000+ blocks the
+    # full per-block bootstrap is pure Python-call overhead.
+    _BOOTSTRAP_BLOCKS = 128
+    _BOOTSTRAP_PER_BLOCK = 64
 
-    def _shared_pass(self, queries: Sequence[IslaQuery],
-                     rng: np.random.Generator, mode: str, route: str,
-                     rate_override: Optional[float],
-                     sigma_guess: Optional[float],
-                     deadline_samples: Optional[int]) -> SharedPass:
+    def _run_pilot(self, queries: Sequence[IslaQuery],
+                   rng: np.random.Generator, params: IslaParams,
+                   sigma_guess: Optional[float], stats_fn
+                   ) -> Tuple["object", Mapping[str, np.ndarray]]:
+        """Pilot over the measure column; the full pilot rows are captured
+        so the planner can estimate predicate selectivities from them."""
+        captured = []
+
+        def capture(sampler):
+            def f(n, r):
+                rows = self._as_rows(sampler(n, r))
+                captured.append(rows)
+                return self._measure_of(rows)
+            return f
+
+        if sigma_guess is None:
+            stride = max(len(self.block_samplers)
+                         // self._BOOTSTRAP_BLOCKS, 1)
+            boot = []
+            for s in self.block_samplers[::stride]:
+                rows = self._as_rows(s(self._BOOTSTRAP_PER_BLOCK, rng))
+                captured.append(rows)
+                boot.append(self._measure_of(rows))
+            sigma_guess = float(np.std(np.concatenate(boot)))
+            if sigma_guess <= 0:
+                sigma_guess = 1e-9
+        pilot = run_pilot([capture(s) for s in self.block_samplers],
+                          self.block_sizes, params, rng,
+                          sigma_guess=sigma_guess, stats_fn=stats_fn)
+        if captured:
+            keys = set(captured[0])
+            columns = {k: np.concatenate([r[k] for r in captured if k in r])
+                       for k in keys}
+        else:
+            columns = {}
+        return pilot, columns
+
+    def _pilot_stats_fn(self, route: str):
+        """Device-route pilot: the jnp moment accumulation with a host
+        fallback (returning None keeps run_pilot on the host reduction)."""
+        if route != "device":
+            return None
+
+        def stats(pilot_values):
+            try:
+                from .distributed import pilot_stats_device
+                return pilot_stats_device(pilot_values)
+            except (ImportError, RuntimeError):
+                # jax / the backend is unavailable: fall back to the host
+                # reduction.  Anything else is a real bug and must surface.
+                return None
+        return stats
+
+    def plan(self, queries: Sequence[IslaQuery], rng: np.random.Generator,
+             mode: str = "calibrated", route: str = "host",
+             rate_override: Optional[float] = None,
+             sigma_guess: Optional[float] = None) -> QueryPlan:
+        """Parse + plan a query batch: run the pilot, resolve each query's
+        Phase 2 mode, group queries by resolved mode, and set one shared
+        predicate-aware rate per mode-group."""
+        self.validate(queries)
+        if route not in ROUTES:
+            raise ValueError(f"unknown route {route!r}; expected one of "
+                             f"{ROUTES}")
+        if mode not in MODES:
+            raise ValueError(f"unknown mode {mode!r}; expected one of "
+                             f"{MODES}")
         sampled = self.sampled_queries(queries) or [
             IslaQuery(e=self.params.e, beta=self.params.beta)]
         params = self.params.replace(e=min(q.e for q in sampled),
                                      beta=max(q.beta for q in sampled))
-        pilot = run_pilot(self.block_samplers, self.block_sizes, params, rng,
-                          sigma_guess=sigma_guess)
-        rate = (rate_override if rate_override is not None
-                else self.plan_rate(queries, pilot.sigma))
+        pilot, pilot_columns = self._run_pilot(
+            queries, rng, params, sigma_guess, self._pilot_stats_fn(route))
         shifted_sketch0 = pilot.sketch0 + pilot.shift
         boundaries = make_boundaries(shifted_sketch0, pilot.sigma, params)
 
-        mode, geometry = resolve_mode_and_geometry(pilot, params, mode)
+        # Resolve each distinct requested mode once (the "auto" heuristic
+        # and the ISLA-E geometry fit live in resolve_mode_and_geometry).
+        resolved_cache = {}
+        buckets = {}
+        for i, q in enumerate(queries):
+            requested = q.mode if q.mode is not None else mode
+            if requested not in resolved_cache:
+                resolved_cache[requested] = resolve_mode_and_geometry(
+                    pilot, params, requested)
+            resolved, geometry = resolved_cache[requested]
+            buckets.setdefault(resolved, (geometry, []))[1].append(i)
 
-        values, block_ids, mom_s, mom_l, quotas = sample_blocks_batched(
-            self.block_samplers, self.block_sizes, rate, boundaries, rng,
-            shift=pilot.shift, max_samples=deadline_samples)
+        mode_groups = []
+        for resolved, (geometry, ids) in buckets.items():
+            rate = (rate_override if rate_override is not None
+                    else self.plan_rate([queries[i] for i in ids],
+                                        pilot.sigma, pilot_columns))
+            mode_groups.append(ModeGroup(mode=resolved, geometry=geometry,
+                                         rate=rate, query_ids=ids))
+        return QueryPlan(queries=list(queries), pilot=pilot,
+                         pilot_columns=pilot_columns, boundaries=boundaries,
+                         shifted_sketch0=shifted_sketch0,
+                         mode_groups=mode_groups)
 
-        # Phase 2 runs on the chosen route only; blocks.avg always carries
-        # the partials the answer was summarized from.
-        n = len(self.block_sizes)
+    # -- execution ---------------------------------------------------------
+
+    def _partials(self, mom_s: np.ndarray, mom_l: np.ndarray,
+                  sketch0: float, sigma: float, params: IslaParams,
+                  mode: str, geometry, route: str) -> np.ndarray:
+        """Phase 2 over stacked (n, 4) cells on the chosen route."""
         if route == "device":
-            partials = self._device_partials(mom_s, mom_l, shifted_sketch0,
-                                             pilot.sigma, params, mode,
-                                             geometry)
-            # avg-only provenance: the jnp Phase 2 returns partial answers,
-            # not the (alpha, sketch, case) diagnostics of the host solvers.
-            blocks = BlockResultsBatch(
-                avg=partials, alpha=np.zeros(n), sketch=np.zeros(n),
-                case=np.zeros(n, dtype=np.int64), n_iter=np.zeros(n),
-                mom_s=mom_s, mom_l=mom_l, n_sampled=quotas)
-        else:
-            res = phase2_iteration_batch(mom_s, mom_l, shifted_sketch0,
-                                         params, mode=mode,
-                                         geometry=geometry)
-            partials = res.avg
-            blocks = BlockResultsBatch(
-                avg=res.avg, alpha=res.alpha, sketch=res.sketch,
-                case=res.case, n_iter=res.n_iter, mom_s=mom_s, mom_l=mom_l,
-                n_sampled=quotas)
-
-        mean_shifted = summarize(partials, self.block_sizes)
-        sample_size = int(quotas.sum())  # actually drawn (deadline-aware)
-        ex2 = None
-        if any(q.agg == "VAR" for q in queries):
-            # Block-weighted second moment of the shifted stream (only VAR
-            # reads it; quota >= 1, so every count is positive).
-            totals = sample_moments_batch(values, block_ids,
-                                          len(self.block_sizes))
-            ex2 = summarize(totals[:, 2] / totals[:, 0], self.block_sizes)
-        result = AggregateResult(
-            answer=mean_shifted - pilot.shift, sketch0=pilot.sketch0,
-            sigma=pilot.sigma, sampling_rate=rate, sample_size=sample_size,
-            blocks=blocks, boundaries=boundaries)
-        return SharedPass(result=result, mean=result.answer, ex2=ex2,
-                          mean_shifted=mean_shifted,
-                          data_size=self.data_size, rate=rate,
-                          sample_size=sample_size)
+            return self._device_partials(mom_s, mom_l, sketch0, sigma,
+                                         params, mode, geometry)
+        return phase2_iteration_batch(mom_s, mom_l, sketch0, params,
+                                      mode=mode, geometry=geometry).avg
 
     def _device_partials(self, mom_s_host: np.ndarray,
                          mom_l_host: np.ndarray, sketch0: float,
@@ -212,56 +507,344 @@ class MultiQueryExecutor:
                      mode=dev_mode, geometry=dev_geometry)
         return np.asarray(avg, dtype=np.float64) * scale
 
+    def _base_pass(self, plan: QueryPlan, mg: ModeGroup,
+                   columns: Mapping[str, np.ndarray],
+                   block_ids: np.ndarray, quotas: np.ndarray,
+                   values: np.ndarray, route: str,
+                   need_ex2: bool = True) -> SharedPass:
+        """The plain measure pass over ALL samples of this mode-group's
+        draw — the pre-relational SharedPass every unpredicated, ungrouped
+        query composes from.  ``need_ex2=False`` skips the plain-moment
+        sweep (only VAR reads it)."""
+        pilot = plan.pilot
+        params = self.params
+        n = len(self.block_sizes)
+        mom_s, mom_l = phase1_sampling_batch(values, block_ids, n,
+                                             plan.boundaries)
+        if route == "device":
+            partials = self._device_partials(
+                mom_s, mom_l, plan.shifted_sketch0, pilot.sigma, params,
+                mg.mode, mg.geometry)
+            # avg-only provenance: the jnp Phase 2 returns partial answers,
+            # not the (alpha, sketch, case) diagnostics of the host solvers.
+            blocks = BlockResultsBatch(
+                avg=partials, alpha=np.zeros(n), sketch=np.zeros(n),
+                case=np.zeros(n, dtype=np.int64), n_iter=np.zeros(n),
+                mom_s=mom_s, mom_l=mom_l, n_sampled=quotas)
+        else:
+            res = phase2_iteration_batch(mom_s, mom_l, plan.shifted_sketch0,
+                                         params, mode=mg.mode,
+                                         geometry=mg.geometry)
+            partials = res.avg
+            blocks = BlockResultsBatch(
+                avg=res.avg, alpha=res.alpha, sketch=res.sketch,
+                case=res.case, n_iter=res.n_iter, mom_s=mom_s, mom_l=mom_l,
+                n_sampled=quotas)
+
+        mean_shifted = summarize(partials, self.block_sizes)
+        sample_size = int(quotas.sum())  # actually drawn (deadline-aware)
+        ex2 = None
+        if need_ex2:
+            # Block-weighted second moment of the shifted stream (VAR reads
+            # it; quota >= 1, so every count is positive).
+            totals = sample_moments_batch(values, block_ids, n)
+            ex2 = summarize(totals[:, 2] / totals[:, 0], self.block_sizes)
+        result = AggregateResult(
+            answer=mean_shifted - pilot.shift, sketch0=pilot.sketch0,
+            sigma=pilot.sigma, sampling_rate=mg.rate,
+            sample_size=sample_size, blocks=blocks,
+            boundaries=plan.boundaries)
+        return SharedPass(result=result, mean=result.answer, ex2=ex2,
+                          mean_shifted=mean_shifted,
+                          data_size=self.data_size, rate=mg.rate,
+                          sample_size=sample_size)
+
+    def _keyed_pass(self, plan: QueryPlan, mg: ModeGroup,
+                    key: Tuple[Optional[Predicate], Optional[str]],
+                    columns: Mapping[str, np.ndarray],
+                    block_ids: np.ndarray, quotas: np.ndarray,
+                    values: np.ndarray, route: str,
+                    need_mean: bool = True) -> KeyedPass:
+        """Re-segment this pass's stream for one (where, group_by) key and
+        run the vectorized phases over the flattened (group, block) cells.
+
+        ``need_mean=False`` (COUNT-only keys) skips Phase 1/Phase 2 — the
+        cell counts alone answer the query; the mean-side fields come back
+        NaN and must not be read."""
+        where, group_by = key
+        mask = where.mask(columns) if where is not None else None
+        if group_by is not None:
+            group_ids, n_groups = self._group_ids(group_by, columns)
+        else:
+            group_ids, n_groups = None, 1
+        params = self.params
+        n_b = len(self.block_sizes)
+        totals = sample_moments_batch(
+            values, block_ids, n_b, group_ids=group_ids, n_groups=n_groups,
+            mask=mask)
+        if need_mean:
+            mom_s, mom_l = phase1_sampling_batch(
+                values, block_ids, n_b, plan.boundaries,
+                group_ids=group_ids, n_groups=n_groups, mask=mask)
+            partials = self._partials(
+                mom_s, mom_l, plan.shifted_sketch0, plan.pilot.sigma,
+                params, mg.mode, mg.geometry, route).reshape(n_groups, n_b)
+        else:
+            mom_s = mom_l = np.zeros((n_groups * n_b, 4))
+            partials = np.full((n_groups, n_b), np.nan)
+
+        cnt = totals[:, 0].reshape(n_groups, n_b)
+        s1 = totals[:, 1].reshape(n_groups, n_b)
+        s2 = totals[:, 2].reshape(n_groups, n_b)
+        sizes = np.asarray(self.block_sizes, dtype=np.float64)
+        drawn = np.asarray(quotas, dtype=np.float64)
+        # Estimated matching population per cell: catalog block size scaled
+        # by the cell's observed match fraction of the block's draw.
+        weights = sizes[None, :] * cnt / drawn[None, :]
+        w_g = weights.sum(axis=1)
+        n_g = cnt.sum(axis=1).astype(np.int64)
+        populated = w_g > 0
+
+        safe_w = np.where(populated, w_g, 1.0)
+        mean_g = np.where(populated,
+                          (partials * weights).sum(axis=1) / safe_w, np.nan)
+        safe_cnt = np.maximum(cnt, 1.0)
+        ex2_g = np.where(populated,
+                         ((s2 / safe_cnt) * weights).sum(axis=1) / safe_w,
+                         np.nan)
+        # Plain per-group sample sigma (for the Eq. 1 "bound earned" check).
+        safe_n = np.maximum(n_g, 1).astype(np.float64)
+        samp_mean = s1.sum(axis=1) / safe_n
+        samp_var = np.maximum(s2.sum(axis=1) / safe_n - samp_mean ** 2, 0.0)
+        sigma_g = np.where(n_g >= 2,
+                           np.sqrt(samp_var * safe_n
+                                   / np.maximum(safe_n - 1.0, 1.0)), np.nan)
+        # A populated cell that fell back to sketch0 (starved S/L regions)
+        # degrades its group's bound to best-effort — the fallback answer is
+        # the paper's relaxed-confidence sketch, not an (e, beta) estimate.
+        fallback = ((mom_s[:, 0] < params.min_region_count)
+                    | (mom_l[:, 0] < params.min_region_count)
+                    ).reshape(n_groups, n_b)
+        degraded_g = np.any(fallback & (cnt > 0), axis=1)
+
+        w_all = float(w_g.sum())
+        n_all = int(n_g.sum())
+        if w_all > 0:
+            contrib = np.where(populated, mean_g * w_g, 0.0)
+            mean_all = float(contrib.sum() / w_all)
+            contrib2 = np.where(populated, ex2_g * w_g, 0.0)
+            ex2_all = float(contrib2.sum() / w_all)
+        else:
+            mean_all, ex2_all = float("nan"), float("nan")
+        tot_mean = float(s1.sum() / max(n_all, 1))
+        tot_var = max(float(s2.sum() / max(n_all, 1)) - tot_mean ** 2, 0.0)
+        sigma_all = (math.sqrt(tot_var * n_all / max(n_all - 1, 1))
+                     if n_all >= 2 else float("nan"))
+        return KeyedPass(
+            n_groups=n_groups, partials=partials, cell_counts=cnt,
+            cell_weights=weights, mean_g=mean_g, ex2_g=ex2_g,
+            sigma_g=sigma_g,
+            plain_mean_g=np.where(n_g > 0, samp_mean, np.nan),
+            n_g=n_g, w_g=w_g, degraded_g=degraded_g,
+            mean_all=mean_all, ex2_all=ex2_all, sigma_all=sigma_all,
+            plain_mean_all=(tot_mean if n_all else float("nan")),
+            n_all=n_all, w_all=w_all,
+            degraded_all=bool(degraded_g.any()))
+
+    # -- composition -------------------------------------------------------
+
+    def _count_bound(self, w: float, n_drawn: int,
+                     beta_z: float) -> Optional[float]:
+        """Normal-binomial half-width for an estimated COUNT.
+
+        The match fraction is clamped away from {0, 1} by ~1/n (rule-of-
+        three flavor): an all-matching or none-matching draw must not claim
+        a ±0 bound the sample cannot support.
+        """
+        if n_drawn <= 0:
+            return None
+        p = min(max(w / self.data_size, 0.0), 1.0)
+        edge = 1.0 / (n_drawn + 2.0)
+        p = min(max(p, edge), 1.0 - edge)
+        return beta_z * self.data_size * math.sqrt(p * (1.0 - p) / n_drawn)
+
+    def _compose_plain(self, q: IslaQuery, sp: SharedPass, mg: ModeGroup,
+                       pass_id: int) -> QueryAnswer:
+        """Pre-relational composition — byte-compatible with the flat
+        executor: AVG/SUM from the leverage mean, COUNT exact, VAR from the
+        shared pass's second moment."""
+        # The (e, beta) guarantee requires Eq. 1's sample size; when a
+        # deadline cap or a rate_override truncated the draw below it,
+        # report best-effort (None) instead of an unearned bound.
+        met = sp.sample_size >= required_sample_size(
+            q.e, sp.result.sigma, q.beta)
+        if q.agg == "AVG":
+            value, bound = sp.mean, (q.e if met else None)
+        elif q.agg == "SUM":
+            value = sp.data_size * sp.mean
+            bound = sp.data_size * q.e if met else None
+        elif q.agg == "COUNT":
+            value, bound = float(sp.data_size), 0.0
+        else:  # VAR — shift-invariant: both terms are on the shifted stream
+            value = max(sp.ex2 - sp.mean_shifted * sp.mean_shifted, 0.0)
+            bound = None
+        return QueryAnswer(
+            query=q, value=float(value), mean=sp.mean, error_bound=bound,
+            sampling_rate=sp.rate, sample_size=sp.sample_size, mode=mg.mode,
+            pass_id=pass_id)
+
+    def _group_row(self, q: IslaQuery, kp: KeyedPass, g: int, shift: float,
+                   n_drawn: int, beta_z: float) -> GroupAnswer:
+        n = int(kp.n_g[g])
+        w = float(kp.w_g[g])
+        mean = float(kp.mean_g[g]) - shift if n else float("nan")
+        degraded = bool(kp.degraded_g[g])
+        sigma = float(kp.sigma_g[g])
+        met = (n > 0 and not degraded and not math.isnan(sigma)
+               and n >= required_sample_size(q.e, sigma, q.beta))
+        if q.agg == "AVG":
+            value = mean
+            bound = q.e if met else None
+        elif q.agg == "SUM":
+            value = w * mean if n else float("nan")
+            bound = None  # est. population factor: always best-effort
+        elif q.agg == "COUNT":
+            value = w
+            bound = self._count_bound(w, n_drawn, beta_z)
+            # deterministic across batch compositions (see _compose_keyed)
+            mean = float(kp.plain_mean_g[g]) - shift if n else float("nan")
+        else:  # VAR
+            value = (max(float(kp.ex2_g[g]) - float(kp.mean_g[g]) ** 2, 0.0)
+                     if n else float("nan"))
+            bound = None
+        return GroupAnswer(group=g, value=float(value), mean=mean,
+                           error_bound=bound, n_samples=n, est_size=w)
+
+    def _compose_keyed(self, q: IslaQuery, kp: KeyedPass, mg: ModeGroup,
+                       pass_id: int, shift: float,
+                       n_drawn: int) -> QueryAnswer:
+        beta_z = z_score(q.beta)
+        mean = (kp.mean_all - shift if kp.n_all else float("nan"))
+        met = (kp.n_all > 0 and not kp.degraded_all
+               and not math.isnan(kp.sigma_all)
+               and kp.n_all >= required_sample_size(q.e, kp.sigma_all,
+                                                    q.beta))
+        if q.agg == "AVG":
+            value = mean
+            bound = q.e if met else None
+        elif q.agg == "SUM":
+            value = kp.w_all * mean if kp.n_all else float("nan")
+            bound = None
+        elif q.agg == "COUNT":
+            value = kp.w_all
+            bound = self._count_bound(kp.w_all, n_drawn, beta_z)
+            # COUNT never estimates a leverage mean (its key may have
+            # skipped Phase 2 entirely); report the plain matching-sample
+            # mean so the field is deterministic across batch compositions.
+            mean = kp.plain_mean_all - shift if kp.n_all else float("nan")
+        else:  # VAR
+            value = (max(kp.ex2_all - kp.mean_all ** 2, 0.0)
+                     if kp.n_all else float("nan"))
+            bound = None
+        groups = None
+        if q.group_by is not None:
+            groups = [self._group_row(q, kp, g, shift, n_drawn, beta_z)
+                      for g in range(kp.n_groups)]
+        return QueryAnswer(
+            query=q, value=float(value), mean=mean, error_bound=bound,
+            sampling_rate=mg.rate, sample_size=n_drawn, mode=mg.mode,
+            pass_id=pass_id, groups=groups, n_matched=kp.n_all,
+            est_population=kp.w_all)
+
+    def _execute_group(self, plan: QueryPlan, mg: ModeGroup, pass_id: int,
+                       rng: np.random.Generator, route: str,
+                       deadline_samples: Optional[int]) -> "list":
+        """One shared sampling pass; every query of the mode-group composes
+        from it (per distinct (where, group_by) key, one re-segmentation)."""
+        columns, block_ids, quotas = self._sample_rows(mg.rate, rng,
+                                                       deadline_samples)
+        values = self._measure_of(columns) + plan.pilot.shift
+        n_drawn = int(quotas.sum())
+        sp = None  # the plain pass is computed lazily: an all-relational
+        keyed = {}  # batch never pays for it
+        key_aggs = {}
+        for i in mg.query_ids:
+            q = plan.queries[i]
+            key_aggs.setdefault(_pass_key(q), set()).add(q.agg)
+        out = []
+        for i in mg.query_ids:
+            q = plan.queries[i]
+            key = _pass_key(q)
+            if key == (None, None):
+                if sp is None:
+                    sp = self._base_pass(
+                        plan, mg, columns, block_ids, quotas, values, route,
+                        need_ex2=("VAR" in key_aggs[key]))
+                out.append((i, self._compose_plain(q, sp, mg, pass_id)))
+                continue
+            if key not in keyed:
+                keyed[key] = self._keyed_pass(
+                    plan, mg, key, columns, block_ids, quotas, values,
+                    route, need_mean=(key_aggs[key] != {"COUNT"}))
+            out.append((i, self._compose_keyed(
+                q, keyed[key], mg, pass_id, plan.pilot.shift, n_drawn)))
+        return out
+
+    def _shared_pass(self, queries: Sequence[IslaQuery],
+                     rng: np.random.Generator, mode: str, route: str,
+                     rate_override: Optional[float],
+                     sigma_guess: Optional[float],
+                     deadline_samples: Optional[int]) -> SharedPass:
+        """Plan + execute one plain pass for a single-mode batch (compat
+        shim over plan()/_base_pass; the full relational path is run())."""
+        plan = self.plan(queries, rng, mode=mode, route=route,
+                         rate_override=rate_override,
+                         sigma_guess=sigma_guess)
+        if len(plan.mode_groups) != 1:
+            raise ValueError("_shared_pass serves single-mode batches; use "
+                             "run() for mixed per-query modes")
+        mg = plan.mode_groups[0]
+        columns, block_ids, quotas = self._sample_rows(mg.rate, rng,
+                                                       deadline_samples)
+        values = self._measure_of(columns) + plan.pilot.shift
+        return self._base_pass(plan, mg, columns, block_ids, quotas, values,
+                               route,
+                               need_ex2=any(q.agg == "VAR" for q in queries))
+
     def run(self, queries: Sequence[IslaQuery], rng: np.random.Generator,
             mode: str = "calibrated", route: str = "host",
             rate_override: Optional[float] = None,
             sigma_guess: Optional[float] = None,
             deadline_samples: Optional[int] = None) -> "list[QueryAnswer]":
-        """Answer every query from one shared pass.
+        """Answer every query from one shared pass per mode-group.
 
-        ``mode``/``route`` select the Phase 2 solver and where it runs; the
-        per-query (e, beta) only drive the shared sampling rate and each
-        answer's reported bound.
+        ``mode``/``route`` select the default Phase 2 solver and where it
+        runs (a query's own ``mode`` field overrides the default); the
+        per-query (e, beta, where, group_by) drive each mode-group's shared
+        sampling rate and each answer's reported bound.  Answers come back
+        in query order.
         """
-        self.validate(queries)
-        # before any sampling cost is paid:
-        if route not in ROUTES:
-            raise ValueError(f"unknown route {route!r}; expected one of "
-                             f"{ROUTES}")
-        if mode not in MODES:
-            raise ValueError(f"unknown mode {mode!r}; expected one of "
-                             f"{MODES}")
-        sp = self._shared_pass(queries, rng, mode, route, rate_override,
-                               sigma_guess, deadline_samples)
-        answers = []
-        for q in queries:
-            # The (e, beta) guarantee requires Eq. 1's sample size; when a
-            # deadline cap or a rate_override truncated the draw below it,
-            # report best-effort (None) instead of an unearned bound.
-            met = sp.sample_size >= required_sample_size(
-                q.e, sp.result.sigma, q.beta)
-            if q.agg == "AVG":
-                value, bound = sp.mean, (q.e if met else None)
-            elif q.agg == "SUM":
-                value = sp.data_size * sp.mean
-                bound = sp.data_size * q.e if met else None
-            elif q.agg == "COUNT":
-                value, bound = float(sp.data_size), 0.0
-            else:  # VAR — shift-invariant: both terms are on the shifted stream
-                value = max(sp.ex2 - sp.mean_shifted * sp.mean_shifted, 0.0)
-                bound = None
-            answers.append(QueryAnswer(
-                query=q, value=float(value), mean=sp.mean, error_bound=bound,
-                sampling_rate=sp.rate, sample_size=sp.sample_size))
+        plan = self.plan(queries, rng, mode=mode, route=route,
+                         rate_override=rate_override,
+                         sigma_guess=sigma_guess)
+        answers = [None] * len(queries)
+        for pass_id, mg in enumerate(plan.mode_groups):
+            for i, ans in self._execute_group(plan, mg, pass_id, rng, route,
+                                              deadline_samples):
+                answers[i] = ans
         return answers
 
 
-def multi_aggregate(block_samplers: Sequence[Sampler],
+def multi_aggregate(block_samplers: Sequence[RowSampler],
                     block_sizes: Sequence[int],
                     queries: Sequence[IslaQuery],
                     rng: np.random.Generator,
                     params: Optional[IslaParams] = None,
                     **kw) -> "list[QueryAnswer]":
     """One-shot convenience: build an executor and run the query batch."""
-    return MultiQueryExecutor(block_samplers, block_sizes,
-                              params=params).run(queries, rng, **kw)
+    run_kw = {k: v for k, v in kw.items()
+              if k not in ("measure", "group_domains")}
+    ctor_kw = {k: v for k, v in kw.items()
+               if k in ("measure", "group_domains")}
+    return MultiQueryExecutor(block_samplers, block_sizes, params=params,
+                              **ctor_kw).run(queries, rng, **run_kw)

@@ -58,13 +58,20 @@ def run_pilot(block_samplers: Sequence[Callable[[int, np.random.Generator], np.n
               params: IslaParams,
               rng: np.random.Generator,
               sigma_guess: Optional[float] = None,
-              min_pilot: int = 64) -> PilotResult:
+              min_pilot: int = 64,
+              stats_fn: Optional[Callable] = None) -> PilotResult:
     """Draw the pilot sample (per block, proportional to block size) and
     compute sigma-hat and sketch0 at relaxed precision t_e * e.
 
     ``block_samplers[j](n, rng)`` returns n uniform random samples from block
     j — the abstraction covers in-memory arrays, file blocks and synthetic
     streams alike.
+
+    ``stats_fn`` optionally offloads the pilot's moment accumulation (e.g.
+    to the jnp device path, ``distributed.pilot_stats_device``): it takes
+    the drawn pilot array and returns ``(sketch0, sigma, min)`` — or None
+    to fall back to the host reduction.  The draw itself always stays on
+    the host RNG so sampling streams are backend-independent.
     """
     total = float(sum(block_sizes))
     # Bootstrap: if no sigma guess, draw a fixed small pilot to estimate it.
@@ -83,8 +90,16 @@ def run_pilot(block_samplers: Sequence[Callable[[int, np.random.Generator], np.n
         nj = max(1, int(round(m0 * bs / total)))
         vals.append(np.asarray(s(nj, rng), dtype=np.float64))
     pilot = np.concatenate(vals)
-    sketch0 = float(np.mean(pilot))
-    sigma = float(np.std(pilot, ddof=1)) if pilot.size > 1 else sigma_guess
+    stats = stats_fn(pilot) if stats_fn is not None else None
+    if stats is not None:
+        sketch0, sigma, lo = (float(x) for x in stats)
+        if pilot.size <= 1:
+            sigma = sigma_guess
+    else:
+        sketch0 = float(np.mean(pilot))
+        sigma = (float(np.std(pilot, ddof=1)) if pilot.size > 1
+                 else sigma_guess)
+        lo = float(np.min(pilot))
     if sigma <= 0:
         sigma = 1e-9
     # Footnote 1: translate so all data are positive — ONLY when the pilot
@@ -92,7 +107,6 @@ def run_pilot(block_samplers: Sequence[Callable[[int, np.random.Generator], np.n
     # mass, so we never shift gratuitously: strictly-positive data like
     # exponential/salary keep the paper's exact geometry).  When shifting,
     # add a 1-sigma margin below the pilot minimum to guard later draws.
-    lo = float(np.min(pilot))
     shift = 0.0
     if lo <= 0.0:
         shift = -lo + 1.0 * sigma

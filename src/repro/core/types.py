@@ -8,7 +8,7 @@ crosses the wire is O(1) regardless of sample size.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Tuple
+from typing import Any, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -115,6 +115,49 @@ class RegionMoments:
             count=float(self.count), s1=float(self.s1),
             s2=float(self.s2), s3=float(self.s3))
 
+
+
+@dataclasses.dataclass(frozen=True)
+class Predicate:
+    """A WHERE clause over sampled rows: the conjunction of an optional
+    half-open range ``[lo, hi)`` and an optional equality on one column.
+
+    The half-open range means adjacent range predicates tile the value axis
+    without double counting.  ``eq`` is meant for categorical / integer-coded
+    columns, where float equality on codes is exact.  Frozen and hashable so
+    query planners can key shared work by ``(where, group_by)``.
+    """
+
+    column: str = "value"
+    lo: Optional[float] = None   # value >= lo
+    hi: Optional[float] = None   # value <  hi
+    eq: Optional[float] = None   # value == eq
+
+    def mask(self, columns: Mapping[str, np.ndarray]) -> np.ndarray:
+        """Boolean match mask over a dict of equal-length column arrays."""
+        if self.column not in columns:
+            raise KeyError(
+                f"predicate column {self.column!r} not in sampled rows "
+                f"(have: {sorted(columns)})")
+        col = np.asarray(columns[self.column])
+        m = np.ones(col.shape, dtype=bool)
+        if self.eq is not None:
+            m &= col == self.eq
+        if self.lo is not None:
+            m &= col >= self.lo
+        if self.hi is not None:
+            m &= col < self.hi
+        return m
+
+    def describe(self) -> str:
+        parts = []
+        if self.lo is not None:
+            parts.append(f"{self.column} >= {self.lo:g}")
+        if self.hi is not None:
+            parts.append(f"{self.column} < {self.hi:g}")
+        if self.eq is not None:
+            parts.append(f"{self.column} == {self.eq:g}")
+        return " AND ".join(parts) if parts else "TRUE"
 
 
 @dataclasses.dataclass(frozen=True)

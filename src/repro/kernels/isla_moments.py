@@ -153,6 +153,32 @@ def isla_moments_batched_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
     )(bounds.astype(jnp.float32), values3d)
 
 
+def isla_moments_grouped_pallas(values4d: jnp.ndarray, bounds: jnp.ndarray,
+                                tm: int = DEFAULT_TM, stride: int = 1,
+                                interpret: bool = False) -> jnp.ndarray:
+    """Relational (group, block) ISLA moments — Phase 1 for the grouped
+    engine axis.
+
+    values4d: (n_groups, n_blocks, rows, 128), rows % tm == 0; bounds: (4,)
+    fp32.  Returns (n_groups, n_blocks, 2, 4) fp32 moments.
+
+    The segment mapping is the engine's ``flat_segments`` contract —
+    segment id = ``group * n_blocks + block`` — realized as a plain reshape:
+    the flattened leading axis IS the batched kernel's block axis, so the
+    grouped axis reuses ``isla_moments_batched_pallas`` unchanged (one
+    launch, one grid) and its output reshapes straight back to the
+    (group, block) cells the vectorized Phase 2 consumes.
+    """
+    if values4d.ndim != 4:
+        raise ValueError(f"need (n_groups, n_blocks, rows, {LANE}), got "
+                         f"shape {values4d.shape}")
+    n_groups, n_blocks, rows, lane = values4d.shape
+    flat = values4d.reshape(n_groups * n_blocks, rows, lane)
+    out = isla_moments_batched_pallas(flat, bounds, tm=tm, stride=stride,
+                                      interpret=interpret)
+    return out.reshape(n_groups, n_blocks, 2, 4)
+
+
 def _pilot_kernel(x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)
 

@@ -1,30 +1,203 @@
-"""Serving driver: batched generation with the slot scheduler.
+"""Serving driver: two workloads behind one entrypoint.
+
+``--workload lm`` (default) — batched LM generation with the slot scheduler:
 
   PYTHONPATH=src python -m repro.launch.serve --arch olmo-1b --reduced \
       --requests 6 --max-new 8
+
+``--workload isla`` — the approximate-aggregation serving tier: an
+admission loop around ``MultiQueryExecutor``.  Queries (AVG/SUM/COUNT/VAR
+with WHERE + GROUP BY) arrive asynchronously, are admitted per tick, planned
+into shared sampling passes per resolved Phase 2 mode, and answered with
+provenance (rate, pass id, resolved mode, bound):
+
+  PYTHONPATH=src python -m repro.launch.serve --workload isla --ticks 4
+  PYTHONPATH=src python -m repro.launch.serve --workload isla --smoke
 """
 from __future__ import annotations
 
 import argparse
+import collections
+import dataclasses
 import time
+from typing import Optional
 
-import jax
-
-from ..configs import get_config
-from ..models import model as model_lib
-from ..serve import BatchScheduler, Request
+import numpy as np
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="olmo-1b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--requests", type=int, default=6)
-    ap.add_argument("--max-new", type=int, default=12)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+# ---------------------------------------------------------------------------
+# ISLA serving tier: admission loop around MultiQueryExecutor.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class IslaTicket:
+    """An admitted query waiting for (or holding) its answer."""
+
+    tid: int
+    query: "object"            # IslaQuery
+    tick_submitted: int
+    tick_answered: Optional[int] = None
+    answer: Optional["object"] = None  # QueryAnswer
+
+
+class IslaAdmissionLoop:
+    """Batches arriving ISLA queries per tick and answers them from shared
+    passes.
+
+    Each ``tick()`` drains up to ``max_batch`` pending queries, hands the
+    batch to ``MultiQueryExecutor.run`` — which plans one shared sampling
+    pass per resolved Phase 2 mode-group — and returns the finished tickets.
+    Every answer carries provenance: the shared rate its pass sampled at,
+    the pass id it shared with its batch-mates, and the resolved mode.
+    """
+
+    def __init__(self, executor, rng: np.random.Generator,
+                 mode: str = "calibrated", route: str = "host",
+                 max_batch: int = 64):
+        self.executor = executor
+        self.rng = rng
+        self.mode = mode
+        self.route = route
+        self.max_batch = int(max_batch)
+        self._pending = collections.deque()
+        self._next_tid = 0
+        self._tick = 0
+        self.answered = []
+
+    def submit(self, query) -> int:
+        """Admit one query; returns its ticket id."""
+        tid = self._next_tid
+        self._next_tid += 1
+        self._pending.append(IslaTicket(tid=tid, query=query,
+                                        tick_submitted=self._tick))
+        return tid
+
+    @property
+    def pending(self) -> int:
+        return len(self._pending)
+
+    def tick(self) -> "list[IslaTicket]":
+        """Serve one admission round; returns the tickets answered now."""
+        self._tick += 1
+        batch = []
+        while self._pending and len(batch) < self.max_batch:
+            batch.append(self._pending.popleft())
+        if not batch:
+            return []
+        answers = self.executor.run([t.query for t in batch], self.rng,
+                                    mode=self.mode, route=self.route)
+        for t, a in zip(batch, answers):
+            t.answer = a
+            t.tick_answered = self._tick
+        self.answered.extend(batch)
+        return batch
+
+    def run_until_drained(self, max_ticks: int = 1000
+                          ) -> "list[IslaTicket]":
+        done = []
+        while self._pending and max_ticks > 0:
+            done.extend(self.tick())
+            max_ticks -= 1
+        return done
+
+
+def _synthetic_grouped_blocks(n_blocks: int, n_groups: int, rows: int,
+                              seed: int):
+    """In-memory relational blocks: a measure, an integer GROUP BY key with
+    group-dependent means, and a binary predicate column."""
+    from repro.core.multiquery import table_sampler
+
+    rng = np.random.default_rng(seed)
+    samplers = []
+    for _ in range(n_blocks):
+        g = rng.integers(0, n_groups, size=rows)
+        samplers.append(table_sampler({
+            "value": rng.normal(80.0 + 5.0 * g, 10.0),
+            "region": g.astype(np.float64),
+            "flag": rng.integers(0, 2, size=rows).astype(np.float64),
+        }))
+    return samplers
+
+
+def _random_query(rng: np.random.Generator, e: float):
+    from repro.core import IslaQuery, Predicate
+
+    agg = ("AVG", "SUM", "COUNT", "VAR")[int(rng.integers(0, 4))]
+    where = None
+    if rng.random() < 0.5:
+        where = Predicate(column="flag", eq=1.0)
+    group_by = "region" if rng.random() < 0.5 else None
+    mode = ("calibrated", "faithful_cf", None)[int(rng.integers(0, 3))]
+    return IslaQuery(e=e, beta=0.95, agg=agg, where=where,
+                     group_by=group_by, mode=mode)
+
+
+def _describe_answer(t: IslaTicket) -> str:
+    a = t.answer
+    q = t.query
+    sel = q.where.describe() if q.where is not None else "TRUE"
+    gb = q.group_by or "-"
+    bound = ("exact" if a.error_bound == 0.0 else
+             f"±{a.error_bound:.3g}" if a.error_bound is not None
+             else "best-effort")
+    line = (f"  #{t.tid:<3d} {q.agg:>5}  where[{sel}] group_by[{gb}] "
+            f"-> {a.value:.5g} [{bound}] mode={a.mode} pass={a.pass_id} "
+            f"rate={a.sampling_rate:.2e} tick={t.tick_answered}")
+    if a.groups:
+        cells = ", ".join(f"g{g.group}={g.value:.4g}(n={g.n_samples})"
+                          for g in a.groups)
+        line += f"\n        groups: {cells}"
+    return line
+
+
+def serve_isla(args) -> None:
+    from repro.core import IslaParams
+    from repro.core.multiquery import MultiQueryExecutor
+
+    n_blocks = 8 if args.smoke else args.blocks
+    n_groups = 3 if args.smoke else args.groups
+    rows = 2000 if args.smoke else 20000
+    ticks = 2 if args.smoke else args.ticks
+    qpt = 3 if args.smoke else args.queries_per_tick
+    e = 1.0 if args.smoke else args.precision
+
+    samplers = _synthetic_grouped_blocks(n_blocks, n_groups, rows,
+                                         args.seed)
+    sizes = [10 ** 7] * n_blocks
+    ex = MultiQueryExecutor(samplers, sizes, params=IslaParams(e=e),
+                            group_domains={"region": n_groups})
+    loop = IslaAdmissionLoop(ex, np.random.default_rng(args.seed + 1),
+                             mode="auto", route=args.route)
+    qrng = np.random.default_rng(args.seed + 2)
+    t0 = time.perf_counter()
+    total = 0
+    for _ in range(ticks):
+        for _ in range(qpt):
+            loop.submit(_random_query(qrng, e))
+        done = loop.tick()
+        total += len(done)
+        print(f"tick {loop._tick}: admitted {len(done)} queries, "
+              f"{loop.pending} pending")
+        for t in done:
+            print(_describe_answer(t))
+    dt = time.perf_counter() - t0
+    print(f"served {total} queries over {ticks} ticks in {dt:.2f}s "
+          f"({total / max(dt, 1e-9):.1f} q/s), "
+          f"{n_blocks} blocks x {n_groups} groups")
+
+
+# ---------------------------------------------------------------------------
+# LM serving workload (the slot scheduler demo).
+# ---------------------------------------------------------------------------
+
+
+def serve_lm(args) -> None:
+    import jax
+
+    from ..configs import get_config
+    from ..models import model as model_lib
+    from ..serve import BatchScheduler, Request
 
     cfg = get_config(args.arch, reduced=args.reduced)
     params = model_lib.init_params(cfg, jax.random.key(args.seed))
@@ -45,6 +218,33 @@ def main():
           f"in {dt:.2f}s ({total_new / dt:.1f} tok/s)")
     for r in done:
         print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.generated}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=["lm", "isla"], default="lm")
+    ap.add_argument("--seed", type=int, default=0)
+    # lm workload
+    ap.add_argument("--arch", default="olmo-1b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=12)
+    # isla workload
+    ap.add_argument("--blocks", type=int, default=100)
+    ap.add_argument("--groups", type=int, default=8)
+    ap.add_argument("--ticks", type=int, default=4)
+    ap.add_argument("--queries-per-tick", type=int, default=6)
+    ap.add_argument("--precision", type=float, default=0.5)
+    ap.add_argument("--route", choices=["host", "device"], default="host")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes for CI smoke runs")
+    args = ap.parse_args()
+    if args.workload == "isla":
+        serve_isla(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

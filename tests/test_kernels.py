@@ -7,6 +7,7 @@ import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 from repro.kernels.isla_moments import (isla_moments_batched_pallas,
+                                        isla_moments_grouped_pallas,
                                         isla_moments_pallas,
                                         pilot_stats_pallas)
 
@@ -84,6 +85,28 @@ def test_batched_kernel_feeds_batched_phase2(rng):
         one = phase2(mom[b, 0], mom[b, 1], jnp.float32(100.0), params,
                      mode="calibrated")
         assert float(avgs[b]) == pytest.approx(float(one), rel=1e-6)
+
+
+def test_moments_grouped_kernel(rng):
+    """(group, block) kernel == per-cell oracle, and its output reshapes
+    straight onto the stacked Phase 2 (the relational device route)."""
+    from repro.core.distributed import phase2
+    from repro.core.types import IslaParams
+    x = jnp.asarray(rng.normal(100, 20, size=(3, 4, 64 * 2, 128)),
+                    jnp.float32)
+    got = isla_moments_grouped_pallas(x, BOUNDS_ARR, tm=64, interpret=True)
+    assert got.shape == (3, 4, 2, 4)
+    for g in range(3):
+        for b in range(4):
+            want = ref.isla_moments_ref(x[g, b], *BOUNDS)
+            np.testing.assert_allclose(np.asarray(got[g, b]),
+                                       np.asarray(want), rtol=1e-5)
+    avgs = phase2(got[..., 0, :], got[..., 1, :], jnp.float32(100.0),
+                  IslaParams(), mode="calibrated")
+    assert avgs.shape == (3, 4)
+    with pytest.raises(ValueError, match="n_groups"):
+        isla_moments_grouped_pallas(x[0], BOUNDS_ARR, tm=64,
+                                    interpret=True)
 
 
 def test_pilot_stats_kernel(rng):

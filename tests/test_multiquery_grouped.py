@@ -1,0 +1,429 @@
+"""The relational (group, block) axis: per-cell bit parity against the
+sequential oracle, chunked-accumulation bit parity, grouped/predicated
+answers vs numpy ground truth, honest degradation on empty groups and
+all-filtered blocks, mode-group planning, and the device-route pilot."""
+import math
+
+import numpy as np
+import pytest
+
+from conftest import normal_samplers
+from repro.core.boundaries import make_boundaries
+from repro.core.engine import (IslaQuery, aggregate, flat_segments,
+                               phase1_sampling, phase1_sampling_batch,
+                               phase2_iteration, phase2_iteration_batch,
+                               sample_blocks_batched, sample_moments_batch)
+from repro.core.multiquery import (MultiQueryExecutor, multi_aggregate,
+                                   table_sampler)
+from repro.core.preestimation import run_pilot
+from repro.core.types import IslaParams, Predicate
+
+MU, SIGMA = 100.0, 20.0
+
+
+def _tagged_stream(rng, n_blocks=6, n_groups=3, m=400):
+    vals = rng.normal(MU, SIGMA, size=n_blocks * m)
+    block_ids = np.repeat(np.arange(n_blocks), m)
+    group_ids = rng.integers(0, n_groups, size=vals.size)
+    mask = rng.random(vals.size) < 0.7
+    return vals, block_ids, group_ids, mask
+
+
+def _grouped_tables(rng, n_blocks, n_groups, rows, sigma=SIGMA,
+                    group_step=10.0):
+    tables = []
+    for _ in range(n_blocks):
+        g = rng.integers(0, n_groups, size=rows)
+        tables.append({
+            "value": rng.normal(70.0 + group_step * g, sigma),
+            "region": g.astype(np.float64),
+            "flag": rng.integers(0, 2, size=rows).astype(np.float64),
+        })
+    return tables
+
+
+# ---------------------------------------------------------------------------
+# Tentpole parity: every (group, block) cell == the sequential oracle.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["faithful_cf", "calibrated"])
+def test_grouped_predicated_cells_match_oracle_bitwise(mode, rng):
+    """Each flattened cell's moments AND Phase 2 answer are bit-identical
+    to running the scalar per-block pipeline over that cell's sub-stream
+    (the per-group sequential sweep)."""
+    params = IslaParams()
+    b = make_boundaries(MU, SIGMA, params)
+    n_blocks, n_groups = 6, 3
+    vals, block_ids, group_ids, mask = _tagged_stream(rng, n_blocks,
+                                                      n_groups)
+    mom_s, mom_l = phase1_sampling_batch(
+        vals, block_ids, n_blocks, b, group_ids=group_ids,
+        n_groups=n_groups, mask=mask)
+    assert mom_s.shape == (n_groups * n_blocks, 4)
+    res = phase2_iteration_batch(mom_s, mom_l, MU, params, mode=mode)
+    for g in range(n_groups):
+        for j in range(n_blocks):
+            cell = vals[(block_ids == j) & (group_ids == g) & mask]
+            ps, pl_ = phase1_sampling(cell, b)
+            idx = g * n_blocks + j  # flat_segments layout
+            assert mom_s[idx].tolist() == [ps.count, ps.s1, ps.s2, ps.s3]
+            assert mom_l[idx].tolist() == [pl_.count, pl_.s1, pl_.s2,
+                                           pl_.s3]
+            ref = phase2_iteration(ps, pl_, MU, params, mode=mode)
+            assert float(res.avg[idx]) == ref.avg, f"cell ({g}, {j})"
+            assert int(res.case[idx]) == ref.case
+
+
+def test_sample_moments_grouped_match_numpy(rng):
+    vals, block_ids, group_ids, mask = _tagged_stream(rng)
+    tot = sample_moments_batch(vals, block_ids, 6, group_ids=group_ids,
+                               n_groups=3, mask=mask)
+    for g in range(3):
+        for j in range(6):
+            cell = vals[(block_ids == j) & (group_ids == g) & mask]
+            row = tot[g * 6 + j]
+            assert row[0] == cell.size
+            assert row[1] == pytest.approx(np.sum(cell), rel=1e-12)
+            assert row[2] == pytest.approx(np.sum(cell ** 2), rel=1e-12)
+
+
+def test_flat_segments_contract():
+    ids = np.array([0, 1, 2])
+    seg, n = flat_segments(ids, 3)
+    assert n == 3 and seg is ids
+    seg, n = flat_segments(ids, 3, np.array([1, 0, 1]), 2)
+    assert n == 6 and seg.tolist() == [3, 1, 5]
+    with pytest.raises(ValueError, match="n_groups"):
+        flat_segments(ids, 3, None, 2)
+    with pytest.raises(ValueError, match="align"):
+        flat_segments(ids, 3, np.array([0, 1]), 2)
+    with pytest.raises(ValueError, match="group ids"):
+        flat_segments(ids, 3, np.array([0, 2, 0]), 2)
+
+
+# ---------------------------------------------------------------------------
+# Chunked accumulation: bit-identical to whole-stream.
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("chunk", [1, 37, 500, 10 ** 9])
+def test_phase1_chunked_bitwise(chunk, rng):
+    """Prefix-chunked bincount (carry-prepend continuation) == whole."""
+    params = IslaParams()
+    b = make_boundaries(MU, SIGMA, params)
+    vals, block_ids, group_ids, mask = _tagged_stream(rng)
+    whole = phase1_sampling_batch(vals, block_ids, 6, b,
+                                  group_ids=group_ids, n_groups=3,
+                                  mask=mask)
+    chunked = phase1_sampling_batch(vals, block_ids, 6, b,
+                                    group_ids=group_ids, n_groups=3,
+                                    mask=mask, chunk_size=chunk)
+    assert np.array_equal(whole[0], chunked[0])
+    assert np.array_equal(whole[1], chunked[1])
+
+
+@pytest.mark.parametrize("chunk_blocks", [1, 3, 7])
+def test_sample_blocks_chunked_bitwise(chunk_blocks, rng):
+    """Block-chunked sampling folds the stream away without changing a bit
+    of the moments (same RNG stream, block-aligned chunks)."""
+    params = IslaParams()
+    b = make_boundaries(MU, SIGMA, params)
+    samplers = normal_samplers(b=10)
+    sizes = [10 ** 6] * 10
+    v, ids, ms, ml, q = sample_blocks_batched(
+        samplers, sizes, 1e-4, b, np.random.default_rng(3))
+    vn, idn, ms_c, ml_c, q_c = sample_blocks_batched(
+        samplers, sizes, 1e-4, b, np.random.default_rng(3),
+        chunk_blocks=chunk_blocks)
+    assert vn is None and idn is None  # stream never materialized whole
+    assert np.array_equal(ms, ms_c)
+    assert np.array_equal(ml, ml_c)
+    assert np.array_equal(q, q_c)
+
+
+def test_aggregate_chunked_parity():
+    params = IslaParams(e=0.1)
+    whole = aggregate(normal_samplers(), [10 ** 9] * 10, params,
+                      np.random.default_rng(5), mode="calibrated")
+    chunked = aggregate(normal_samplers(), [10 ** 9] * 10, params,
+                        np.random.default_rng(5), mode="calibrated",
+                        chunk_blocks=3)
+    assert whole.answer == chunked.answer
+    assert np.array_equal(np.asarray(whole.blocks.avg),
+                          np.asarray(chunked.blocks.avg))
+
+
+def test_aggregate_rejects_chunk_on_sequential():
+    with pytest.raises(ValueError, match="chunk_blocks"):
+        aggregate(normal_samplers(b=2), [10, 10], IslaParams(),
+                  np.random.default_rng(0), engine="sequential",
+                  chunk_blocks=2)
+
+
+# ---------------------------------------------------------------------------
+# Grouped / predicated answers vs ground truth.
+# ---------------------------------------------------------------------------
+
+
+def _truth(tables, sizes, where_col=None, where_eq=None, group=None):
+    """Population truth of the with-replacement sampling model: block b
+    contributes size_b * (table fraction) rows with the table's values."""
+    w_tot, s_tot, s2_tot = 0.0, 0.0, 0.0
+    for t, sz in zip(tables, sizes):
+        m = np.ones(t["value"].shape, dtype=bool)
+        if where_col is not None:
+            m &= t[where_col] == where_eq
+        if group is not None:
+            m &= t["region"] == group
+        frac = np.mean(m)
+        if frac == 0:
+            continue
+        w = sz * frac
+        w_tot += w
+        s_tot += w * np.mean(t["value"][m])
+        s2_tot += w * np.mean(t["value"][m] ** 2)
+    if w_tot == 0:
+        return 0.0, float("nan"), float("nan")
+    mean = s_tot / w_tot
+    return w_tot, mean, s2_tot / w_tot - mean * mean
+
+
+def test_grouped_predicated_answers_match_ground_truth():
+    B, G, e = 6, 3, 0.1
+    rng = np.random.default_rng(11)
+    tables = _grouped_tables(rng, B, G, rows=40000, sigma=30.0)
+    sizes = [10 ** 6] * B
+    ex = MultiQueryExecutor([table_sampler(t) for t in tables], sizes,
+                            params=IslaParams(e=e),
+                            group_domains={"region": G})
+    queries = [
+        IslaQuery(e=e, agg="AVG", group_by="region",
+                  where=Predicate(column="flag", eq=1.0)),
+        IslaQuery(e=e, agg="SUM", group_by="region",
+                  where=Predicate(column="flag", eq=1.0)),
+        IslaQuery(e=e, agg="VAR", group_by="region",
+                  where=Predicate(column="flag", eq=1.0)),
+        IslaQuery(e=e, agg="COUNT", where=Predicate(column="flag", eq=1.0)),
+    ]
+    avg, tot, var, cnt = ex.run(queries, np.random.default_rng(2))
+    for g in range(G):
+        w_t, mean_t, var_t = _truth(tables, sizes, "flag", 1.0, g)
+        row = avg.groups[g]
+        assert row.error_bound == e  # bound earned per group
+        assert abs(row.value - mean_t) <= 2 * e, f"group {g}"
+        assert tot.groups[g].value == pytest.approx(w_t * mean_t, rel=0.02)
+        assert tot.groups[g].error_bound is None  # est. population factor
+        # VAR ~ sigma^2 = 900 here; mean-scale error amplifies by 2*mean
+        assert var.groups[g].value == pytest.approx(var_t, rel=0.1)
+        assert row.est_size == pytest.approx(w_t, rel=0.02)
+    w_t, mean_t, _ = _truth(tables, sizes, "flag", 1.0)
+    assert cnt.value == pytest.approx(w_t, rel=0.02)
+    assert cnt.error_bound is not None
+    assert abs(cnt.value - w_t) <= 3 * cnt.error_bound
+    assert avg.value == pytest.approx(mean_t, abs=2 * e)
+    assert avg.n_matched == tot.n_matched > 0
+
+
+def test_grouped_shares_one_pass_per_mode_group():
+    """Two resolved modes => exactly two sampling passes (plus bootstrap
+    and pilot), counted at the sampler."""
+    B = 5
+    calls = []
+
+    def mk(j):
+        def s(n, rng):
+            calls.append(j)
+            return rng.normal(MU, SIGMA, size=n)
+        return s
+
+    sizes = [10 ** 7] * B
+    ex = MultiQueryExecutor([mk(j) for j in range(B)], sizes,
+                            params=IslaParams())
+    queries = [IslaQuery(e=0.5, mode="calibrated"),
+               IslaQuery(e=0.5, agg="SUM", mode="calibrated"),
+               IslaQuery(e=0.5, agg="AVG", mode="faithful_cf")]
+    ans = ex.run(queries, np.random.default_rng(0))
+    # bootstrap + pilot + 2 mode-group passes = 4 rounds of B draws
+    assert len(calls) == 4 * B
+    assert {a.pass_id for a in ans} == {0, 1}
+    assert ans[0].pass_id == ans[1].pass_id  # calibrated pair shares
+    assert ans[0].mode == "calibrated"
+    assert ans[2].mode == "faithful_cf"
+
+    calls.clear()
+    ex.run(queries[:2], np.random.default_rng(0))
+    assert len(calls) == 3 * B  # one mode -> one pass
+
+
+def test_empty_group_reported_never_silently_wrong():
+    """A declared group the data never produces: NaN value, no bound, zero
+    est_size — and the populated groups are unaffected."""
+    B, G = 4, 4  # region only takes values 0..2
+    rng = np.random.default_rng(3)
+    tables = _grouped_tables(rng, B, 3, rows=20000)
+    sizes = [10 ** 6] * B
+    ex = MultiQueryExecutor([table_sampler(t) for t in tables], sizes,
+                            params=IslaParams(e=0.2),
+                            group_domains={"region": G})
+    (a,) = ex.run([IslaQuery(e=0.2, agg="AVG", group_by="region")],
+                  np.random.default_rng(1))
+    assert len(a.groups) == G
+    empty = a.groups[3]
+    assert math.isnan(empty.value) and math.isnan(empty.mean)
+    assert empty.error_bound is None
+    assert empty.n_samples == 0 and empty.est_size == 0.0
+    for g in range(3):
+        assert abs(a.groups[g].value - (70.0 + 10.0 * g)) <= 1.0
+    assert not math.isnan(a.value)  # grand mean ignores the empty group
+
+
+def test_all_filtered_block_excluded_from_weights():
+    """A block whose rows all fail the predicate carries zero weight; the
+    grouped answer composes from the other blocks only."""
+    rng = np.random.default_rng(5)
+    tables = _grouped_tables(rng, 4, 2, rows=20000)
+    tables[0]["flag"][:] = 0.0  # block 0 never matches flag == 1
+    sizes = [10 ** 6] * 4
+    ex = MultiQueryExecutor([table_sampler(t) for t in tables], sizes,
+                            params=IslaParams(e=0.2),
+                            group_domains={"region": 2})
+    (a,) = ex.run([IslaQuery(e=0.2, agg="AVG", group_by="region",
+                             where=Predicate(column="flag", eq=1.0))],
+                  np.random.default_rng(2))
+    w_t, mean_t, _ = _truth(tables, sizes, "flag", 1.0, 0)
+    assert a.groups[0].value == pytest.approx(mean_t, abs=0.5)
+    # 3 matching blocks x ~50% flag selectivity; block 0 contributes 0
+    w_all, _, _ = _truth(tables, sizes, "flag", 1.0)
+    assert a.est_population == pytest.approx(w_all, rel=0.05)
+    assert w_all < 2 * 10 ** 6  # the filtered block really is excluded
+
+
+def test_nothing_matches_is_nan_not_zero():
+    rng = np.random.default_rng(6)
+    tables = _grouped_tables(rng, 3, 2, rows=5000)
+    ex = MultiQueryExecutor([table_sampler(t) for t in tables],
+                            [10 ** 6] * 3, params=IslaParams(e=0.5),
+                            group_domains={"region": 2})
+    avg, cnt = ex.run(
+        [IslaQuery(e=0.5, agg="AVG", where=Predicate(column="flag",
+                                                     eq=7.0)),
+         IslaQuery(e=0.5, agg="COUNT", where=Predicate(column="flag",
+                                                       eq=7.0))],
+        np.random.default_rng(0))
+    assert math.isnan(avg.value) and avg.error_bound is None
+    assert avg.n_matched == 0
+    assert cnt.value == 0.0
+    assert cnt.error_bound is not None and cnt.error_bound > 0.0
+
+
+def test_predicate_aware_rate_inflation():
+    """A selective predicate and a GROUP BY both raise the planned rate
+    over the plain query's (PS3-style pilot-driven planning)."""
+    B = 6
+    rng = np.random.default_rng(8)
+    tables = _grouped_tables(rng, B, 4, rows=20000)
+    # make flag == 1 rare (~10%)
+    for t in tables:
+        t["flag"] = (np.random.default_rng(0).random(t["flag"].size) < 0.1
+                     ).astype(np.float64)
+    sizes = [10 ** 8] * B
+    ex = MultiQueryExecutor([table_sampler(t) for t in tables], sizes,
+                            params=IslaParams(e=0.5),
+                            group_domains={"region": 4})
+    (plain,) = ex.run([IslaQuery(e=0.5)], np.random.default_rng(1))
+    (pred,) = ex.run([IslaQuery(e=0.5, where=Predicate(column="flag",
+                                                       eq=1.0))],
+                     np.random.default_rng(1))
+    (grouped,) = ex.run([IslaQuery(e=0.5, group_by="region")],
+                        np.random.default_rng(1))
+    assert pred.sampling_rate > 5 * plain.sampling_rate
+    assert grouped.sampling_rate > 3 * plain.sampling_rate
+
+
+def test_count_mean_independent_of_batch_composition():
+    """A keyed COUNT's reported mean is the plain matching-sample mean —
+    identical whether or not a batch-mate forced the key's Phase 2 run."""
+    rng = np.random.default_rng(4)
+    tables = _grouped_tables(rng, 4, 2, rows=20000)
+    sizes = [10 ** 6] * 4
+    where = Predicate(column="flag", eq=1.0)
+
+    def run(queries):
+        ex = MultiQueryExecutor([table_sampler(t) for t in tables], sizes,
+                                params=IslaParams(e=0.3),
+                                group_domains={"region": 2})
+        return ex.run(queries, np.random.default_rng(5))
+
+    alone = run([IslaQuery(e=0.3, agg="COUNT", where=where)])
+    paired = run([IslaQuery(e=0.3, agg="COUNT", where=where),
+                  IslaQuery(e=0.3, agg="AVG", where=where)])
+    assert not math.isnan(alone[0].mean)
+    assert alone[0].mean == paired[0].mean
+    assert alone[0].value == paired[0].value
+
+
+def test_validation_errors_relational():
+    ex = MultiQueryExecutor(normal_samplers(b=3), [10] * 3,
+                            group_domains={"g": 2})
+    with pytest.raises(ValueError, match="unknown group_by"):
+        ex.run([IslaQuery(group_by="nope")], np.random.default_rng(0))
+    with pytest.raises(ValueError, match="unknown mode"):
+        ex.run([IslaQuery(mode="warp")], np.random.default_rng(0))
+    with pytest.raises(ValueError, match="must be a Predicate"):
+        ex.run([IslaQuery(where="x > 1")], np.random.default_rng(0))
+    with pytest.raises(KeyError, match="predicate column"):
+        ex.run([IslaQuery(where=Predicate(column="missing", lo=0.0))],
+               np.random.default_rng(0))
+    with pytest.raises(ValueError, match="cardinality"):
+        MultiQueryExecutor(normal_samplers(b=2), [1, 1],
+                           group_domains={"g": 0})
+
+
+def test_multi_aggregate_passes_group_domains():
+    rng = np.random.default_rng(9)
+    tables = _grouped_tables(rng, 3, 2, rows=10000)
+    ans = multi_aggregate([table_sampler(t) for t in tables],
+                          [10 ** 6] * 3,
+                          [IslaQuery(e=0.3, agg="AVG",
+                                     group_by="region")],
+                          np.random.default_rng(1),
+                          group_domains={"region": 2})
+    assert len(ans[0].groups) == 2
+
+
+# ---------------------------------------------------------------------------
+# Device-route pilot.
+# ---------------------------------------------------------------------------
+
+
+def test_pilot_stats_device_matches_host(rng):
+    from repro.core.distributed import pilot_stats_device
+    vals = rng.normal(3e4, 7e3, size=5000)  # large scale: fp32 lever matters
+    mean, sigma, lo = pilot_stats_device(vals)
+    assert mean == pytest.approx(float(np.mean(vals)), rel=1e-4)
+    assert sigma == pytest.approx(float(np.std(vals, ddof=1)), rel=1e-3)
+    assert lo == pytest.approx(float(np.min(vals)), rel=1e-4)
+
+
+def test_run_pilot_stats_fn_fallback(rng):
+    """A stats_fn returning None falls back to the host reduction."""
+    host = run_pilot(normal_samplers(b=4), [100] * 4, IslaParams(),
+                     np.random.default_rng(7))
+    fell_back = run_pilot(normal_samplers(b=4), [100] * 4, IslaParams(),
+                          np.random.default_rng(7),
+                          stats_fn=lambda v: None)
+    assert fell_back.sketch0 == host.sketch0
+    assert fell_back.sigma == host.sigma
+    assert fell_back.shift == host.shift
+
+
+def test_run_pilot_device_stats_tolerance():
+    from repro.core.distributed import pilot_stats_device
+    host = run_pilot(normal_samplers(b=4), [10 ** 6] * 4, IslaParams(),
+                     np.random.default_rng(7))
+    dev = run_pilot(normal_samplers(b=4), [10 ** 6] * 4, IslaParams(),
+                    np.random.default_rng(7), stats_fn=pilot_stats_device)
+    assert dev.sketch0 == pytest.approx(host.sketch0, rel=1e-4)
+    assert dev.sigma == pytest.approx(host.sigma, rel=1e-3)
+    assert dev.pilot_size == host.pilot_size

@@ -1,0 +1,63 @@
+"""The ISLA serving tier: admission loop batching, provenance, drain."""
+import numpy as np
+import pytest
+
+from repro.core import IslaParams, IslaQuery, Predicate
+from repro.core.multiquery import MultiQueryExecutor
+from repro.launch.serve import IslaAdmissionLoop, _synthetic_grouped_blocks
+
+
+def _loop(max_batch=64, n_groups=3):
+    samplers = _synthetic_grouped_blocks(n_blocks=6, n_groups=n_groups,
+                                         rows=4000, seed=0)
+    ex = MultiQueryExecutor(samplers, [10 ** 6] * 6,
+                            params=IslaParams(e=0.5),
+                            group_domains={"region": n_groups})
+    return IslaAdmissionLoop(ex, np.random.default_rng(1),
+                             max_batch=max_batch)
+
+
+def test_tick_answers_admitted_queries():
+    loop = _loop()
+    t0 = loop.submit(IslaQuery(e=0.5, agg="AVG"))
+    t1 = loop.submit(IslaQuery(e=0.5, agg="AVG", group_by="region"))
+    done = loop.tick()
+    assert [t.tid for t in done] == [t0, t1]
+    assert loop.pending == 0
+    assert done[0].answer.value == pytest.approx(done[1].answer.value,
+                                                 abs=2.0)
+    assert done[1].answer.groups is not None
+    assert len(done[1].answer.groups) == 3
+    assert done[0].tick_answered == 1
+    # provenance rides every answer
+    assert done[0].answer.mode is not None
+    assert done[0].answer.sampling_rate > 0
+
+
+def test_max_batch_defers_overflow_to_next_tick():
+    loop = _loop(max_batch=2)
+    for _ in range(5):
+        loop.submit(IslaQuery(e=0.5))
+    assert len(loop.tick()) == 2
+    assert loop.pending == 3
+    done = loop.run_until_drained()
+    assert len(done) == 3
+    assert loop.pending == 0
+    assert [t.tick_answered for t in loop.answered] == [1, 1, 2, 2, 3]
+
+
+def test_empty_tick_is_noop():
+    loop = _loop()
+    assert loop.tick() == []
+    assert loop.answered == []
+
+
+def test_mixed_modes_share_passes_within_tick():
+    loop = _loop()
+    loop.submit(IslaQuery(e=0.5, mode="calibrated"))
+    loop.submit(IslaQuery(e=0.5, mode="calibrated", agg="SUM"))
+    loop.submit(IslaQuery(e=0.5, mode="faithful_cf",
+                          where=Predicate(column="flag", eq=1.0)))
+    done = loop.tick()
+    assert done[0].answer.pass_id == done[1].answer.pass_id
+    assert done[2].answer.pass_id != done[0].answer.pass_id
