@@ -1,0 +1,244 @@
+"""Online-refinement benchmark: continuation rounds vs one-shot resampling,
+and warm-store reuse in the incremental executor.
+
+Headlines (recorded in ``BENCH_online.json``):
+ * **merge parity** — k continuation rounds through ``MomentStore`` are
+   bit-identical per (group, block) cell to a single pass over the
+   concatenated stream (asserted; the benchmark is invalid otherwise);
+ * **rounds-to-target-error** — refining one persistent store round after
+   round reaches the target error with k-times fewer samples than re-
+   sampling from scratch each time a tighter answer is demanded (the
+   §VII-A online claim, quantified);
+ * **warm-store reuse** — a repeated predicate through
+   ``run(incremental=True)`` draws STRICTLY fewer new samples than a cold
+   ``execute()`` of the same query (zero when the deficit is <= 0) — the
+   acceptance criterion of the incremental serving path.
+
+Contract: rows print as ``(name, us_per_call, derived)`` like the other
+benches; ``--smoke`` shrinks sizes so CI keeps the entrypoint alive;
+``--out DIR`` picks where BENCH_online.json lands.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.boundaries import make_boundaries
+from repro.core.engine import IslaQuery, phase1_sampling_batch
+from repro.core.moment_store import MomentStore
+from repro.core.multiquery import MultiQueryExecutor, table_sampler
+from repro.core.types import IslaParams, Predicate
+
+MU, SIGMA = 100.0, 20.0
+
+
+def _samplers(b):
+    return [(lambda n, rng, m=MU, s=SIGMA: rng.normal(m, s, size=n))
+            for _ in range(b)]
+
+
+def merge_parity(smoke=False):
+    """k ingest rounds == one concatenated stream, bit-for-bit per cell."""
+    params = IslaParams()
+    b = make_boundaries(MU, SIGMA, params)
+    n_blocks, n_groups, m = (4, 2, 400) if smoke else (32, 4, 4000)
+    rng = np.random.default_rng(0)
+    vals = rng.normal(MU, SIGMA, size=n_blocks * m)
+    block_ids = np.repeat(np.arange(n_blocks), m)
+    group_ids = rng.integers(0, n_groups, size=vals.size)
+    mask = rng.random(vals.size) < 0.8
+
+    whole_s, whole_l = phase1_sampling_batch(
+        vals, block_ids, n_blocks, b, group_ids=group_ids,
+        n_groups=n_groups, mask=mask)
+    k = 5
+    t0 = time.perf_counter()
+    store = MomentStore.fresh(n_blocks, b, MU, n_groups=n_groups)
+    cuts = np.linspace(0, vals.size, k + 1).astype(int)
+    for lo, hi in zip(cuts[:-1], cuts[1:]):
+        sl = slice(lo, hi)
+        store.ingest(vals[sl], block_ids[sl],
+                     np.bincount(block_ids[sl], minlength=n_blocks),
+                     group_ids=group_ids[sl], mask=mask[sl])
+    us = (time.perf_counter() - t0) * 1e6
+    if not (np.array_equal(store.mom_s, whole_s)
+            and np.array_equal(store.mom_l, whole_l)):
+        raise AssertionError("k rounds != one stream — benchmark invalid")
+    return [(f"store_merge_{k}rounds/b{n_blocks}g{n_groups}", us, 1.0)], {
+        "rounds": k, "n_blocks": n_blocks, "n_groups": n_groups,
+        "bit_identical": True}
+
+
+def rounds_to_target(smoke=False):
+    """Progressive refinement on a fixed demand schedule: round r demands
+    the precision of r * per_round samples per block.  Both paths serve
+    identical demands with identical per-round statistical power; the
+    online store merges each round's draw (top-up = per_round), while the
+    one-shot baseline re-samples its whole stream from scratch every round
+    — a sum-of-rounds vs last-round sample bill ((R+1)/2 at R rounds)."""
+    params = IslaParams(e=0.1)
+    n_blocks = 8 if smoke else 50
+    per_round = 200 if smoke else 1000
+    rounds = 4 if smoke else 8
+    sizes = [10 ** 7] * n_blocks
+    seeds = range(3 if smoke else 8)
+
+    online_samples, oneshot_samples = [], []
+    online_err, oneshot_err = [], []
+    online_us = oneshot_us = 0.0
+    for seed in seeds:
+        b = make_boundaries(MU + 0.3, SIGMA, params)
+        # Online: ONE store, merged round after round.
+        store = MomentStore.fresh(n_blocks, b, MU + 0.3)
+        rng = np.random.default_rng(seed)
+        samplers = _samplers(n_blocks)
+        t0 = time.perf_counter()
+        for _ in range(rounds):
+            res = store.continue_rounds(
+                samplers, sizes, per_round / 10 ** 7, params, rng,
+                mode="calibrated", reanchor=True)
+        online_us += (time.perf_counter() - t0) * 1e6
+        online_samples.append(store.total_sampled)
+        online_err.append(abs(store.answer(res.avg, sizes) - MU))
+
+        # One-shot resampling: every demand draws its stream from scratch.
+        rng = np.random.default_rng(seed)
+        spent = 0
+        t0 = time.perf_counter()
+        for round_ in range(1, rounds + 1):
+            fresh = MomentStore.fresh(n_blocks, b, MU + 0.3)
+            res = fresh.continue_rounds(
+                samplers, sizes, round_ * per_round / 10 ** 7, params, rng,
+                mode="calibrated")
+            spent += fresh.total_sampled
+        oneshot_us += (time.perf_counter() - t0) * 1e6
+        oneshot_samples.append(spent)
+        oneshot_err.append(abs(fresh.answer(res.avg, sizes) - MU))
+
+    n = len(online_samples)
+    mean_online = float(np.mean(online_samples))
+    mean_oneshot = float(np.mean(oneshot_samples))
+    ratio = mean_oneshot / mean_online
+    rows = [
+        (f"online_refine/b{n_blocks}r{rounds}", online_us / n, mean_online),
+        (f"oneshot_resample/b{n_blocks}r{rounds}", oneshot_us / n,
+         mean_oneshot),
+        ("online_sample_ratio", online_us / n, ratio),
+    ]
+    report = {
+        "n_blocks": n_blocks, "per_round": per_round, "rounds": rounds,
+        "online_mean_samples": mean_online,
+        "oneshot_mean_samples": mean_oneshot,
+        "oneshot_over_online": ratio,
+        "online_mean_final_abs_err": float(np.mean(online_err)),
+        "oneshot_mean_final_abs_err": float(np.mean(oneshot_err)),
+    }
+    return rows, report
+
+
+def warm_store_reuse(smoke=False):
+    """The acceptance run: cold execute vs warm repeat of one predicate."""
+    n_blocks, n_groups, rows_per = (6, 3, 2000) if smoke else (100, 8, 8192)
+    sizes = [10 ** 7] * n_blocks
+    rng = np.random.default_rng(2)
+    tables = []
+    for _ in range(n_blocks):
+        g = rng.integers(0, n_groups, size=rows_per)
+        tables.append({
+            "value": rng.normal(MU - 8.0 + 2.0 * g, SIGMA),
+            "region": g.astype(np.float64),
+            "flag": rng.integers(0, 2, size=rows_per).astype(np.float64),
+        })
+    e = 1.0 if smoke else 0.5
+    query = IslaQuery(e=e, agg="AVG", group_by="region",
+                      where=Predicate(column="flag", eq=1.0))
+
+    def mk():
+        return MultiQueryExecutor(
+            [table_sampler(t) for t in tables], sizes,
+            params=IslaParams(e=e), group_domains={"region": n_groups})
+
+    cold_ex = mk()
+    t0 = time.perf_counter()
+    (cold,) = cold_ex.run([query], np.random.default_rng(3))
+    cold_us = (time.perf_counter() - t0) * 1e6
+
+    warm_ex = mk()
+    (first,) = warm_ex.run([query], np.random.default_rng(3),
+                           incremental=True)
+    t0 = time.perf_counter()
+    (warm,) = warm_ex.run([query], np.random.default_rng(4),
+                          incremental=True)
+    warm_us = (time.perf_counter() - t0) * 1e6
+
+    if not warm.new_samples < cold.sample_size:
+        raise AssertionError(
+            f"warm repeat drew {warm.new_samples} >= cold "
+            f"{cold.sample_size} — the warm store is not reusing work")
+    rows = [
+        (f"cold_execute/b{n_blocks}g{n_groups}", cold_us,
+         float(cold.sample_size)),
+        (f"warm_repeat/b{n_blocks}g{n_groups}", warm_us,
+         float(warm.new_samples)),
+        ("warm_speedup", warm_us, cold_us / max(warm_us, 1e-9)),
+    ]
+    report = {
+        "n_blocks": n_blocks, "n_groups": n_groups, "e": e,
+        "cold_samples": int(cold.sample_size),
+        "first_incremental_new_samples": int(first.new_samples),
+        "warm_repeat_new_samples": int(warm.new_samples),
+        "warm_strictly_fewer_than_cold": bool(
+            warm.new_samples < cold.sample_size),
+        "cold_us": cold_us, "warm_us": warm_us,
+        "warm_speedup": cold_us / max(warm_us, 1e-9),
+    }
+    return rows, report
+
+
+# Row-only wrappers for the run.py harness (its contract has no report).
+def online_merge_parity():
+    return merge_parity()[0]
+
+
+def online_progressive_refine():
+    return rounds_to_target()[0]
+
+
+def online_warm_store():
+    return warm_store_reuse()[0]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes so CI can keep the entrypoints alive")
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_online.json")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    report = {"smoke": bool(args.smoke)}
+    for section, bench in (("merge", merge_parity),
+                           ("refine", rounds_to_target),
+                           ("warm", warm_store_reuse)):
+        rows, rep = bench(smoke=args.smoke)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived:.6g}", flush=True)
+        report[section] = rep
+    path = os.path.join(args.out, "BENCH_online.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path} (warm repeat drew "
+          f"{report['warm']['warm_repeat_new_samples']} new samples vs "
+          f"{report['warm']['cold_samples']} cold; online refine used "
+          f"{report['refine']['oneshot_over_online']:.2f}x fewer samples)",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -7,11 +7,15 @@ import sys
 
 
 def main() -> None:
-    from . import multiquery_bench, paper_tables, telemetry_bench
+    from . import (multiquery_bench, online_bench, paper_tables,
+                   telemetry_bench)
 
     benches = [
         multiquery_bench.batched_vs_sequential_calculation,
         multiquery_bench.multiquery_shared_pass,
+        online_bench.online_merge_parity,
+        online_bench.online_progressive_refine,
+        online_bench.online_warm_store,
         paper_tables.table3_leverage_effects,
         paper_tables.table4_accuracy,
         paper_tables.table5_modulation,

@@ -6,8 +6,8 @@ Telemetry API for training loops: metrics.loss_stats etc.
 """
 from .types import (AggregateResult, BlockResult, BlockResultsBatch,
                     Boundaries, IslaParams, Predicate, RegionMoments,
-                    REGION_TS, REGION_S, REGION_N, REGION_L, REGION_TL,
-                    classify, classify_np, region_of)
+                    StoreKey, REGION_TS, REGION_S, REGION_N, REGION_L,
+                    REGION_TL, classify, classify_np, region_of)
 from .boundaries import (choose_q, choose_q_batch, deviation_degree,
                          deviation_degree_batch, is_balanced,
                          is_balanced_batch, make_boundaries)
@@ -29,6 +29,7 @@ from .engine import (IslaQuery, aggregate, aggregate_array, baseline_sample,
 from .summarize import summarize
 from .baselines import mv_avg, mvb_avg, uniform_avg
 from .noniid import aggregate_noniid, block_leverages
+from .moment_store import MomentStore, split_budget
 from .online import OnlineBlockState, continue_block
 from .extremes import aggregate_extreme, block_rate_leverages
 from .multiquery import (GroupAnswer, MultiQueryExecutor, QueryAnswer,
@@ -54,7 +55,8 @@ __all__ = [
     "run_block", "run_blocks_batched", "sample_blocks_batched",
     "sample_moments_batch", "summarize",
     "mv_avg", "mvb_avg", "uniform_avg", "aggregate_noniid",
-    "block_leverages", "OnlineBlockState", "continue_block",
+    "block_leverages", "MomentStore", "split_budget", "StoreKey",
+    "OnlineBlockState", "continue_block",
     "aggregate_extreme", "block_rate_leverages",
     "GroupAnswer", "MultiQueryExecutor", "QueryAnswer", "QueryPlan",
     "multi_aggregate", "table_sampler",

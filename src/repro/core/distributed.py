@@ -40,9 +40,15 @@ def region_masks(v: jnp.ndarray, b: Tuple) -> Tuple[jnp.ndarray, jnp.ndarray]:
     return ms, ml
 
 
-def moments(values: jnp.ndarray, bounds: Tuple, valid=None
+def moments(values: jnp.ndarray, bounds: Tuple, valid=None, prior=None
             ) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Masked (count, s1, s2, s3) for S and L as two 4-vectors (fp32)."""
+    """Masked (count, s1, s2, s3) for S and L as two 4-vectors (fp32).
+
+    ``prior`` is the online-continuation accumulator operand: a previous
+    round's ``(mom_s, mom_l)`` pair, merged into this round's sums on
+    device (moments are additive — §VII-A; fp32 vector adds here, the
+    bit-exact carry merge lives on the host ``MomentStore`` path).
+    """
     v = values.astype(jnp.float32).reshape(-1)
     ms, ml = region_masks(v, bounds)
     if valid is not None:
@@ -55,7 +61,12 @@ def moments(values: jnp.ndarray, bounds: Tuple, valid=None
         return jnp.stack([jnp.sum(m), jnp.sum(vm), jnp.sum(vm * v),
                           jnp.sum(vm * v * v)])
 
-    return mom(ms), mom(ml)
+    mom_s, mom_l = mom(ms), mom(ml)
+    if prior is not None:
+        prior_s, prior_l = prior
+        mom_s = mom_s + jnp.asarray(prior_s, jnp.float32)
+        mom_l = mom_l + jnp.asarray(prior_l, jnp.float32)
+    return mom_s, mom_l
 
 
 # ---------------------------------------------------------------------------

@@ -187,8 +187,9 @@ def phase1_sampling_batch(values: np.ndarray, block_ids: np.ndarray,
                           group_ids: Optional[np.ndarray] = None,
                           n_groups: int = 1,
                           mask: Optional[np.ndarray] = None,
-                          chunk_size: Optional[int] = None
-                          ) -> Tuple[np.ndarray, np.ndarray]:
+                          chunk_size: Optional[int] = None,
+                          carry: Optional[Tuple[np.ndarray, np.ndarray]]
+                          = None) -> Tuple[np.ndarray, np.ndarray]:
     """Alg. 1 over every (group, block) cell at once.
 
     ``values`` is the concatenation of every block's samples and
@@ -204,14 +205,29 @@ def phase1_sampling_batch(values: np.ndarray, block_ids: np.ndarray,
     samples (bit-identical to whole-stream accumulation — see
     ``_segment_moment_rows``'s carry contract), bounding the bincount
     working set for callers that stream huge tagged samples.
+
+    ``carry`` continues accumulation from previous (rows_s, rows_l) — the
+    online-mode round continuation (§VII-A): merging a fresh round into
+    prior moments through the carry is bit-identical to having drawn one
+    longer stream (``MomentStore`` builds on exactly this contract).
     """
     values, seg_ids, n_segments = _tagged_segments(
         values, block_ids, n_blocks, group_ids, n_groups, mask)
+    if carry is not None:
+        carry = (np.asarray(carry[0], dtype=np.float64),
+                 np.asarray(carry[1], dtype=np.float64))
+        if carry[0].shape != (n_segments, 4) \
+                or carry[1].shape != (n_segments, 4):
+            raise ValueError(
+                f"carry rows must be ({n_segments}, 4), got "
+                f"{carry[0].shape} and {carry[1].shape}")
     if chunk_size is None or values.size <= chunk_size:
-        return _segment_moment_rows(values, seg_ids, n_segments, boundaries)
+        return _segment_moment_rows(values, seg_ids, n_segments, boundaries,
+                                    carry=carry)
     if chunk_size < 1:
         raise ValueError(f"chunk_size must be >= 1, got {chunk_size}")
-    carry = (np.zeros((n_segments, 4)), np.zeros((n_segments, 4)))
+    if carry is None:
+        carry = (np.zeros((n_segments, 4)), np.zeros((n_segments, 4)))
     for start in range(0, values.size, chunk_size):
         sl = slice(start, start + chunk_size)
         carry = _segment_moment_rows(values[sl], seg_ids[sl], n_segments,
@@ -223,17 +239,37 @@ def sample_moments_batch(values: np.ndarray, block_ids: np.ndarray,
                          n_blocks: int, *,
                          group_ids: Optional[np.ndarray] = None,
                          n_groups: int = 1,
-                         mask: Optional[np.ndarray] = None) -> np.ndarray:
+                         mask: Optional[np.ndarray] = None,
+                         carry: Optional[np.ndarray] = None) -> np.ndarray:
     """(n_groups * n_blocks, 3) plain moments ``(count, s1, s2)`` of *all*
     stream samples per (group, block) cell (no region mask) — the extra
     accumulators VAR/COUNT estimators and per-group weights compose with the
     leverage-based mean (see ``multiquery``).  Same segment/mask contract as
-    ``phase1_sampling_batch``."""
+    ``phase1_sampling_batch``; ``carry`` continues accumulation from prior
+    (n_segments, 3) rows via the same carry-prepend bincount, so merged
+    rounds stay bit-identical to one longer stream."""
     values, seg_ids, n_segments = _tagged_segments(
         values, block_ids, n_blocks, group_ids, n_groups, mask)
-    cnt = np.bincount(seg_ids, minlength=n_segments).astype(np.float64)
-    s1 = np.bincount(seg_ids, weights=values, minlength=n_segments)
-    s2 = np.bincount(seg_ids, weights=values * values, minlength=n_segments)
+    if carry is None:
+        cnt = np.bincount(seg_ids, minlength=n_segments).astype(np.float64)
+        s1 = np.bincount(seg_ids, weights=values, minlength=n_segments)
+        s2 = np.bincount(seg_ids, weights=values * values,
+                         minlength=n_segments)
+        return np.stack([cnt, s1, s2], axis=1)
+    carry = np.asarray(carry, dtype=np.float64)
+    if carry.shape != (n_segments, 3):
+        raise ValueError(f"carry rows must be ({n_segments}, 3), got "
+                         f"{carry.shape}")
+    pre = np.arange(n_segments, dtype=np.intp)
+    ids2 = np.concatenate([pre, seg_ids])
+
+    def acc(col: int, w: np.ndarray) -> np.ndarray:
+        return np.bincount(ids2, weights=np.concatenate([carry[:, col], w]),
+                           minlength=n_segments)
+
+    cnt = acc(0, np.ones(values.size, dtype=np.float64))
+    s1 = acc(1, values)
+    s2 = acc(2, values * values)
     return np.stack([cnt, s1, s2], axis=1)
 
 

@@ -1,0 +1,327 @@
+"""Persistent (group, block) moment state — the online mode as a subsystem.
+
+The paper's signature big-data claim (§VII-A) is that a block's entire
+sampling state is its 8 streaming moments, so answers can be refined round
+after round without ever recording sampled rows.  ``MomentStore`` is that
+state lifted onto the relational (group, block) axis PR 1-2 built:
+
+ * ``mom_s`` / ``mom_l`` — stacked (n_groups * n_blocks, 4) float64 region
+   moment rows on the flattened ``engine.flat_segments`` axis;
+ * ``totals`` — (n_groups * n_blocks, 3) plain (count, s1, s2) rows of ALL
+   matching samples per cell (the extra accumulators VAR / COUNT / group
+   weights compose from);
+ * ``n_sampled`` — (n_blocks,) cumulative per-block draws (including
+   masked-out rows — the denominator of selectivity-scaled cell weights);
+ * ``rounds``, plus the anchor the moments were accumulated under:
+   ``boundaries`` (region cuts are FROZEN for the store's lifetime — merged
+   moments cannot be re-classified), the Phase 2 ``sketch0`` (re-anchorable,
+   see ``reanchor``) and the footnote-1 ``shift``.
+
+``ingest`` merges a fresh tagged pass through the engine's carry-prepend
+bincount continuation, so k short rounds are **bit-identical** per cell to
+one pass over the concatenated stream; ``continue_rounds`` is the
+vectorized §VII-A loop (draw, merge, re-run batched Phase 2), and
+``split_budget`` is the deadline-aware allocator the serving tier uses to
+divide a tick's sample budget across warm stores by marginal-error
+reduction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence
+
+import numpy as np
+
+from .engine import (Sampler, block_quotas, phase1_sampling_batch,
+                     phase2_iteration_batch, sample_moments_batch)
+from .modulation import ModulationBatchResult
+from .summarize import summarize
+from .types import Boundaries, IslaParams
+
+
+@dataclasses.dataclass
+class MomentStore:
+    """Everything the online mode persists between rounds — O(cells), not
+    O(samples)."""
+
+    n_blocks: int
+    n_groups: int
+    boundaries: Boundaries
+    sketch0: float            # shifted-scale Phase 2 anchor (re-anchorable)
+    shift: float
+    mom_s: np.ndarray         # (n_groups * n_blocks, 4) S-region moments
+    mom_l: np.ndarray         # (n_groups * n_blocks, 4) L-region moments
+    totals: np.ndarray        # (n_groups * n_blocks, 3) all-sample moments
+    n_sampled: np.ndarray     # (n_blocks,) cumulative draws, int64
+    rounds: int = 0
+    has_regions: bool = True  # False: totals-only store (COUNT-only keys)
+    has_totals: bool = True   # False: regions-only (plain AVG/SUM passes
+                              # — nothing reads weights/ex2/sample_sigma)
+
+    @staticmethod
+    def fresh(n_blocks: int, boundaries: Boundaries, sketch0: float,
+              shift: float = 0.0, n_groups: int = 1,
+              has_regions: bool = True,
+              has_totals: bool = True) -> "MomentStore":
+        if n_blocks < 1 or n_groups < 1:
+            raise ValueError(f"need n_blocks, n_groups >= 1; got "
+                             f"({n_blocks}, {n_groups})")
+        if not (has_regions or has_totals):
+            raise ValueError("a store must accumulate regions, totals, or "
+                             "both")
+        n_cells = n_groups * n_blocks
+        return MomentStore(
+            n_blocks=n_blocks, n_groups=n_groups, boundaries=boundaries,
+            sketch0=float(sketch0), shift=float(shift),
+            mom_s=np.zeros((n_cells, 4)), mom_l=np.zeros((n_cells, 4)),
+            totals=np.zeros((n_cells, 3)),
+            n_sampled=np.zeros(n_blocks, dtype=np.int64),
+            has_regions=has_regions, has_totals=has_totals)
+
+    @property
+    def n_cells(self) -> int:
+        return self.n_groups * self.n_blocks
+
+    @property
+    def total_sampled(self) -> int:
+        return int(self.n_sampled.sum())
+
+    # -- accumulation ------------------------------------------------------
+
+    def ingest(self, values: np.ndarray, block_ids: np.ndarray,
+               quotas: np.ndarray, *,
+               group_ids: Optional[np.ndarray] = None,
+               mask: Optional[np.ndarray] = None,
+               chunk_size: Optional[int] = None,
+               count_round: bool = True) -> None:
+        """Merge one tagged pass into the store.
+
+        ``values`` are on the SHIFTED scale (the caller applies
+        ``self.shift``); ``quotas`` is the per-block draw count this pass
+        (a (n_blocks,) array — zero for blocks the pass skipped).  The
+        merge routes the store's prior rows through the engine's carry, so
+        the result is bit-identical per cell to a single accumulation over
+        the concatenated stream.
+
+        ``count_round=False`` marks this ingest as a continuation chunk of
+        the current logical round (block-chunked draws), so ``rounds``
+        counts refinement rounds, not chunks.
+        """
+        quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
+        if quotas.shape != (self.n_blocks,):
+            raise ValueError(f"quotas must be ({self.n_blocks},), got "
+                             f"{quotas.shape}")
+        # Skip the carry only when the store holds nothing at all — NOT
+        # merely when rounds == 0, so a store seeded with prior moments
+        # (e.g. OnlineBlockState.as_store of a run_block result) merges
+        # instead of silently overwriting.  The empty-carry path and a
+        # zero-carry prepend are bit-identical; skipping is just cheaper.
+        first = (self.rounds == 0 and not self.mom_s.any()
+                 and not self.mom_l.any() and not self.totals.any())
+        if self.has_regions:
+            self.mom_s, self.mom_l = phase1_sampling_batch(
+                values, block_ids, self.n_blocks, self.boundaries,
+                group_ids=group_ids, n_groups=self.n_groups, mask=mask,
+                chunk_size=chunk_size,
+                carry=None if first else (self.mom_s, self.mom_l))
+        if self.has_totals:
+            self.totals = sample_moments_batch(
+                values, block_ids, self.n_blocks, group_ids=group_ids,
+                n_groups=self.n_groups, mask=mask,
+                carry=None if first else self.totals)
+        self.n_sampled = self.n_sampled + quotas
+        if count_round:
+            self.rounds += 1
+
+    # -- solving -----------------------------------------------------------
+
+    def solve(self, params: IslaParams, mode: str = "faithful",
+              geometry=None) -> ModulationBatchResult:
+        """Re-run the batched Phase 2 over the merged moments (host path;
+        the device route feeds ``mom_s``/``mom_l`` to ``distributed.phase2``
+        itself)."""
+        if not self.has_regions:
+            raise ValueError("totals-only store has no region moments to "
+                             "solve (built with has_regions=False)")
+        return phase2_iteration_batch(self.mom_s, self.mom_l, self.sketch0,
+                                      params, mode=mode, geometry=geometry)
+
+    def answer(self, avg: np.ndarray, block_sizes: Sequence[int]) -> float:
+        """Summarize per-block partials to the un-shifted grand answer
+        (n_groups == 1 stores; grouped stores compose via multiquery)."""
+        if self.n_groups != 1:
+            raise ValueError("grand answer is the ungrouped summarization; "
+                             "grouped stores compose per group")
+        return summarize(np.asarray(avg).reshape(-1), list(block_sizes)) \
+            - self.shift
+
+    def reanchor(self, avg: np.ndarray) -> float:
+        """Re-anchor ``sketch0`` from the merged moments: the cell-count-
+        weighted mean of the current partial answers (shifted scale).
+
+        Later rounds then iterate against the refined picture instead of
+        the initial rough sketch — the §VII-A continuation bugfix.  Cells
+        with no samples carry no weight; an all-empty store keeps its
+        anchor.
+        """
+        w = (self.totals[:, 0] if self.has_totals
+             else self.mom_s[:, 0] + self.mom_l[:, 0])
+        populated = w > 0
+        if self.has_regions and np.any(populated):
+            a = np.asarray(avg, dtype=np.float64).reshape(-1)
+            self.sketch0 = float(np.sum(a[populated] * w[populated])
+                                 / np.sum(w[populated]))
+        return self.sketch0
+
+    def continue_rounds(self, block_samplers: Sequence[Sampler],
+                        block_sizes: Sequence[int], rate: float,
+                        params: IslaParams, rng: np.random.Generator,
+                        mode: str = "faithful", geometry=None,
+                        max_samples: Optional[int] = None,
+                        reanchor: bool = False,
+                        chunk_blocks: Optional[int] = None,
+                        chunk_size: Optional[int] = None
+                        ) -> ModulationBatchResult:
+        """One more online round, vectorized: draw a fresh tagged pass at
+        ``rate`` (per block, block order — the engine's RNG stream), merge
+        it into the store, and re-run the batched Phase 2.
+
+        ``chunk_blocks`` folds the draw away that many blocks at a time so
+        the round's stream is never materialized whole (bit-identical via
+        the carry contract); ``reanchor=True`` refreshes ``sketch0`` from
+        the merged answer after solving, so the NEXT round iterates against
+        the refined picture.
+        """
+        if len(block_samplers) != self.n_blocks:
+            raise ValueError(f"store holds {self.n_blocks} blocks, got "
+                             f"{len(block_samplers)} samplers")
+        if self.n_groups != 1:
+            raise ValueError("continue_rounds draws ungrouped streams; "
+                             "grouped stores are fed via multiquery")
+        quotas = np.asarray(block_quotas(block_sizes, rate, max_samples),
+                            dtype=np.int64)
+        step = self.n_blocks if chunk_blocks is None else int(chunk_blocks)
+        if step < 1:
+            raise ValueError(f"chunk_blocks must be >= 1, got {chunk_blocks}")
+        for start in range(0, self.n_blocks, step):
+            end = min(start + step, self.n_blocks)
+            raws = [np.asarray(block_samplers[j](int(quotas[j]), rng),
+                               dtype=np.float64)
+                    for j in range(start, end)]
+            vals = np.concatenate(raws) + self.shift
+            ids = np.repeat(np.arange(start, end, dtype=np.intp),
+                            quotas[start:end])
+            q = np.zeros(self.n_blocks, dtype=np.int64)
+            q[start:end] = quotas[start:end]
+            self.ingest(vals, ids, q, chunk_size=chunk_size,
+                        count_round=(start == 0))
+        res = self.solve(params, mode=mode, geometry=geometry)
+        if reanchor:
+            self.reanchor(res.avg)
+        return res
+
+    # -- planning helpers --------------------------------------------------
+
+    def deficit(self, target_quotas: Sequence[int]) -> np.ndarray:
+        """Per-block samples still owed against a target quota (what a new
+        query's (e, beta) demands minus what the store already drew)."""
+        target = np.asarray(target_quotas, dtype=np.int64).reshape(-1)
+        if target.shape != (self.n_blocks,):
+            raise ValueError(f"target quotas must be ({self.n_blocks},), "
+                             f"got {target.shape}")
+        return np.maximum(target - self.n_sampled, 0)
+
+    def sample_sigma(self) -> float:
+        """ddof-1 sigma of all matching samples seen so far (NaN until two
+        samples exist) — the marginal-error signal ``split_budget`` reads."""
+        n = float(self.totals[:, 0].sum())
+        if n < 2:
+            return float("nan")
+        mean = float(self.totals[:, 1].sum()) / n
+        var = max(float(self.totals[:, 2].sum()) / n - mean * mean, 0.0)
+        return math.sqrt(var * n / (n - 1.0))
+
+
+def proportional_allocate(amounts: np.ndarray, budget: int) -> np.ndarray:
+    """Scale non-negative integer demands down to a total budget with
+    largest-remainder rounding; never exceeds the budget or any demand."""
+    amounts = np.asarray(amounts, dtype=np.int64)
+    total = int(amounts.sum())
+    if total <= budget:
+        return amounts.copy()
+    if budget <= 0:
+        return np.zeros_like(amounts)
+    exact = amounts * (budget / total)
+    out = np.floor(exact).astype(np.int64)
+    rem = budget - int(out.sum())
+    if rem > 0:
+        frac = exact - out
+        frac[out >= amounts] = -1.0
+        for i in np.argsort(-frac)[:rem]:
+            if out[i] < amounts[i]:
+                out[i] += 1
+    return np.minimum(out, amounts)
+
+
+def split_budget(n_now: Sequence[float], sigmas: Sequence[float],
+                 deficits: Sequence[int], budget: int) -> np.ndarray:
+    """Split a tick's sample budget across stores by marginal-error
+    reduction (deadline-aware QoS).
+
+    A store holding n matching samples has half-width ~ z * sigma / sqrt(n);
+    the marginal reduction per extra sample is ~ sigma / n^(3/2).  Water-
+    filling equalizes that marginal across stores — allocate x_i so that
+    sigma_i / (n_i + x_i)^(3/2) is level — subject to 0 <= x_i <= deficit_i.
+    Solved by bisection on the level; stores with unknown sigma (no samples
+    yet) are treated as maximally uncertain and filled first.
+    """
+    n_now = np.maximum(np.asarray(n_now, dtype=np.float64).reshape(-1), 1.0)
+    sigmas = np.asarray(sigmas, dtype=np.float64).reshape(-1)
+    deficits = np.maximum(
+        np.asarray(deficits, dtype=np.int64).reshape(-1), 0)
+    if not (n_now.shape == sigmas.shape == deficits.shape):
+        raise ValueError("n_now, sigmas, deficits must align")
+    budget = int(budget)
+    total = int(deficits.sum())
+    if budget >= total or total == 0:
+        return deficits.copy()
+    # Unknown sigma (cold store, NaN) -> dominate every known marginal.
+    # A KNOWN zero sigma stays zero: its error cannot shrink, so it is
+    # served last, not first.
+    known = sigmas[np.isfinite(sigmas) & (sigmas > 0)]
+    fill = (float(known.max()) * 1e3) if known.size else 1.0
+    sig = np.where(np.isfinite(sigmas), np.maximum(sigmas, 0.0), fill)
+    if not np.any(sig > 0):
+        # No marginal signal at all: plain proportional split.
+        return proportional_allocate(deficits, budget)
+
+    def allocated(level: float) -> np.ndarray:
+        want = np.power(sig / level, 2.0 / 3.0) - n_now
+        return np.clip(want, 0.0, deficits.astype(np.float64))
+
+    # Marginal at zero extra samples bounds the level from above.
+    hi = float(np.max(sig / np.power(n_now, 1.5))) * 2.0
+    lo = hi * 1e-12
+    for _ in range(80):
+        mid = math.sqrt(hi * lo)
+        if allocated(mid).sum() > budget:
+            lo = mid  # level too low -> giving out too much
+        else:
+            hi = mid
+    x = np.floor(allocated(hi)).astype(np.int64)
+    # Hand out the rounding remainder greedily by current marginal gain.
+    rem = budget - int(x.sum())
+    if rem > 0:
+        gain = sig / np.power(n_now + x, 1.5)
+        gain[x >= deficits] = -np.inf
+        for i in np.argsort(-gain)[:rem]:
+            if gain[i] > -np.inf and x[i] < deficits[i]:
+                x[i] += 1
+    # Whatever the waterfill could not place (e.g. the deficit bulk sits
+    # on zero-marginal stores) still belongs to this tick's budget: fill
+    # remaining capacity proportionally instead of dropping it.
+    rem = budget - int(x.sum())
+    if rem > 0:
+        x = x + proportional_allocate(deficits - x, rem)
+    return x

@@ -40,6 +40,20 @@ vectorized engine:
 The scalar per-block engine (``engine.run_block``) stays the bit-validated
 reference oracle: every (group, block) cell's moments and partial answer are
 bit-identical to running it over that cell's sub-stream in stream order.
+
+Online / incremental serving: every pass accumulates into a ``MomentStore``
+(the §VII-A state lifted onto the (group, block) axis).  One-shot batches
+use ephemeral stores — bit-identical to the pre-store executor — while
+``run(..., incremental=True)`` keys persistent stores by
+``StoreKey(where, group_by, mode)``: the pilot anchor (boundaries, sketch0,
+shift) is frozen on first use, repeat predicates are answered from the warm
+moments, and a new query's (e, beta) tops up only the per-block sample
+DEFICIT its Eq. 1 quota still demands (zero new samples when the deficit is
+<= 0).  A tick ``budget`` is split across passes by marginal-error
+reduction (``moment_store.split_budget``) — the deadline-aware serving
+path.  ``chunk_blocks`` streams the row draw through block-sized chunks so
+row columns are never materialized whole (bit-identical via the engine's
+carry contract).
 """
 from __future__ import annotations
 
@@ -50,14 +64,15 @@ from typing import Callable, Mapping, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from .boundaries import make_boundaries
-from .engine import (MODES, IslaQuery, Sampler, block_quotas,
-                     phase1_sampling_batch, phase2_iteration_batch,
-                     resolve_mode_and_geometry, sample_moments_batch)
+from .engine import (MODES, IslaQuery, block_quotas,
+                     phase2_iteration_batch, resolve_mode_and_geometry)
+from .moment_store import (MomentStore, proportional_allocate,
+                           split_budget)
 from .preestimation import (required_sample_size, run_pilot, sampling_rate,
                             z_score)
 from .summarize import summarize
 from .types import (AggregateResult, BlockResultsBatch, Boundaries,
-                    IslaParams, Predicate)
+                    IslaParams, Predicate, StoreKey)
 
 AGGREGATES = ("AVG", "SUM", "COUNT", "VAR")
 # Aggregates answered exactly from catalog metadata — they never constrain
@@ -105,6 +120,11 @@ def _pass_key(q: IslaQuery) -> Tuple[Optional[Predicate], Optional[str]]:
     return (q.where, q.group_by)
 
 
+# Per-block deficit vectors scale down to a budget with the same
+# largest-remainder rounding the budget splitter's fallback uses.
+_scale_quotas = proportional_allocate
+
+
 @dataclasses.dataclass
 class GroupAnswer:
     """One group's row of a GROUP BY answer.
@@ -137,6 +157,8 @@ class QueryAnswer:
     groups: Optional[list] = None       # GroupAnswer rows when group_by
     n_matched: Optional[int] = None     # matching samples (where/group_by)
     est_population: Optional[float] = None  # estimated matching rows
+    new_samples: Optional[int] = None   # rows drawn fresh for this answer's
+                                        # pass (0 = served from warm store)
 
     def __float__(self) -> float:
         return float(self.value)
@@ -248,6 +270,21 @@ class MultiQueryExecutor:
             if int(card) < 1:
                 raise ValueError(f"group domain {key!r} needs cardinality "
                                  f">= 1, got {card}")
+        # Incremental serving state: persistent per-key moment stores plus
+        # the pilot anchor (boundaries / sketch0 / shift are frozen on the
+        # first incremental run — merged moments cannot be re-classified).
+        self._stores: "dict[StoreKey, MomentStore]" = {}
+        self._anchor = None
+        self._sigma_cache = {}  # (group_by, where) -> per-group sigmas,
+        #                         valid only against the frozen anchor pilot
+
+    def reset_stores(self) -> None:
+        """Drop all warm stores and the pilot anchor (e.g. after the
+        underlying table changed enough that frozen boundaries went stale).
+        The next incremental run re-pilots and starts cold."""
+        self._stores.clear()
+        self._anchor = None
+        self._sigma_cache.clear()
 
     # -- row plumbing ------------------------------------------------------
 
@@ -262,24 +299,58 @@ class MultiQueryExecutor:
                            f"rows (have: {sorted(rows)})")
         return np.asarray(rows[self.measure], dtype=np.float64)
 
-    def _sample_rows(self, rate: float, rng: np.random.Generator,
-                     deadline_samples: Optional[int]
-                     ) -> Tuple[Mapping[str, np.ndarray], np.ndarray,
-                                np.ndarray]:
-        """One tagged pass: per-block draws in block order (the identical
-        RNG stream the plain engine consumes), concatenated per column."""
-        quotas = block_quotas(self.block_sizes, rate, deadline_samples)
-        raws = [self._as_rows(s(m, rng))
-                for s, m in zip(self.block_samplers, quotas)]
-        keys = set(raws[0])
-        for r in raws[1:]:
-            if set(r) != keys:
-                raise ValueError("block samplers must agree on columns; got "
-                                 f"{sorted(keys)} vs {sorted(r)}")
-        columns = {k: np.concatenate([r[k] for r in raws]) for k in keys}
-        block_ids = np.repeat(
-            np.arange(len(self.block_samplers), dtype=np.intp), quotas)
-        return columns, block_ids, np.asarray(quotas, dtype=np.int64)
+    def _draw_and_ingest(self, group_stores: Mapping[Tuple, MomentStore],
+                         quotas: np.ndarray, rng: np.random.Generator,
+                         shift: float,
+                         chunk_blocks: Optional[int] = None) -> None:
+        """One tagged pass at explicit per-block quotas, folded into every
+        key's store.
+
+        Per-block draws run in block order (the identical RNG stream the
+        plain engine consumes); zero-quota blocks are skipped (deficit
+        top-ups).  With ``chunk_blocks`` the rows are drawn and ingested
+        that many blocks at a time and dropped immediately — row columns
+        are never materialized whole, and the store's carry contract keeps
+        the accumulated moments bit-identical to the unchunked draw.
+        """
+        n_b = len(self.block_samplers)
+        quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
+        step = n_b if chunk_blocks is None else int(chunk_blocks)
+        if step < 1:
+            raise ValueError(f"chunk_blocks must be >= 1, got {chunk_blocks}")
+        expected_cols = None  # column agreement holds across the WHOLE pass
+        counted = set()       # one logical round per store per pass
+        for start in range(0, n_b, step):
+            end = min(start + step, n_b)
+            idx = [j for j in range(start, end) if quotas[j] > 0]
+            if not idx:
+                continue
+            raws = [self._as_rows(self.block_samplers[j](int(quotas[j]),
+                                                         rng))
+                    for j in idx]
+            for r in raws:
+                if expected_cols is None:
+                    expected_cols = set(r)
+                elif set(r) != expected_cols:
+                    raise ValueError(
+                        "block samplers must agree on columns; got "
+                        f"{sorted(expected_cols)} vs {sorted(r)}")
+            columns = {k: np.concatenate([r[k] for r in raws])
+                       for k in expected_cols}
+            block_ids = np.repeat(np.asarray(idx, dtype=np.intp),
+                                  [int(quotas[j]) for j in idx])
+            values = self._measure_of(columns) + shift
+            chunk_quotas = np.zeros(n_b, dtype=np.int64)
+            chunk_quotas[start:end] = quotas[start:end]
+            for key, store in group_stores.items():
+                where, group_by = key
+                mask = where.mask(columns) if where is not None else None
+                gids = (self._group_ids(group_by, columns)[0]
+                        if group_by is not None else None)
+                store.ingest(values, block_ids, chunk_quotas,
+                             group_ids=gids, mask=mask,
+                             count_round=id(store) not in counted)
+                counted.add(id(store))
 
     def _group_ids(self, key: str, columns: Mapping[str, np.ndarray]
                    ) -> Tuple[np.ndarray, int]:
@@ -314,14 +385,65 @@ class MultiQueryExecutor:
             return None
         return float(np.mean(m))
 
+    def group_sigmas(self, q: IslaQuery,
+                     pilot_columns: Mapping[str, np.ndarray]
+                     ) -> "list[float]":
+        """Per-group pilot sigma estimates for a GROUP BY query (ddof=1,
+        where-masked when the query carries a predicate).  Groups with
+        fewer than two matching pilot rows are skipped — the pooled-sigma
+        floor in ``_query_rate`` covers them."""
+        key = q.group_by
+        if (key is None or not pilot_columns or key not in pilot_columns
+                or self.measure not in pilot_columns):
+            return []
+        # Warm incremental ticks re-plan against the SAME frozen pilot
+        # (identity-checked), where these sigmas are immutable.
+        cacheable = (self._anchor is not None
+                     and pilot_columns is self._anchor[1])
+        ckey = (key, q.where)
+        if cacheable and ckey in self._sigma_cache:
+            return self._sigma_cache[ckey]
+        col = np.asarray(pilot_columns[key])
+        vals = np.asarray(pilot_columns[self.measure], dtype=np.float64)
+        m = (q.where.mask(pilot_columns) if q.where is not None
+             else np.ones(col.shape, dtype=bool))
+        card = int(self.group_domains[key])
+        gids = col.astype(np.intp)
+        # rows with non-integer or out-of-domain codes carry no sigma vote
+        valid = m & (gids == col) & (gids >= 0) & (gids < card)
+        gids, gv = gids[valid], vals[valid]
+        # One segmented pass instead of a per-group scan: ddof-1 sigma from
+        # per-group (count, sum, sumsq) bincounts.
+        n = np.bincount(gids, minlength=card).astype(np.float64)
+        s1 = np.bincount(gids, weights=gv, minlength=card)
+        s2 = np.bincount(gids, weights=gv * gv, minlength=card)
+        ok = n >= 2
+        safe_n = np.maximum(n, 2.0)
+        var = np.maximum(s2 / safe_n - (s1 / safe_n) ** 2, 0.0)
+        sig = np.sqrt(var * safe_n / (safe_n - 1.0))
+        out = [float(s) for s, good in zip(sig, ok) if good and s > 0]
+        if cacheable:
+            self._sigma_cache[ckey] = out
+        return out
+
     def _query_rate(self, q: IslaQuery, sigma: float,
                     pilot_columns: Mapping[str, np.ndarray]) -> float:
         """Predicate-aware Eq. 1: base rate for (e, beta), times the group
         cardinality (each group needs its own m), over the estimated
-        selectivity (only matching samples count toward any group's m)."""
+        selectivity (only matching samples count toward any group's m).
+
+        GROUP BY rates take the group-wise max over per-group pilot sigmas
+        — a heteroscedastic group whose own sigma exceeds the pooled one
+        gets the m its variance actually demands.  The pooled sigma stays
+        a floor: the same pass also answers the grand (ungrouped)
+        aggregate, whose bound the pooled sigma drives.
+        """
         base = sampling_rate(q.e, sigma, q.beta, self.data_size)
         factor = 1.0
         if q.group_by is not None:
+            for sg in self.group_sigmas(q, pilot_columns):
+                base = max(base,
+                           sampling_rate(q.e, sg, q.beta, self.data_size))
             factor *= float(self.group_domains[q.group_by])
         if q.where is not None:
             sel = self.selectivity(q.where, pilot_columns)
@@ -427,10 +549,16 @@ class MultiQueryExecutor:
     def plan(self, queries: Sequence[IslaQuery], rng: np.random.Generator,
              mode: str = "calibrated", route: str = "host",
              rate_override: Optional[float] = None,
-             sigma_guess: Optional[float] = None) -> QueryPlan:
+             sigma_guess: Optional[float] = None,
+             pilot=None, pilot_columns=None) -> QueryPlan:
         """Parse + plan a query batch: run the pilot, resolve each query's
         Phase 2 mode, group queries by resolved mode, and set one shared
-        predicate-aware rate per mode-group."""
+        predicate-aware rate per mode-group.
+
+        Passing a cached ``pilot`` (+ its ``pilot_columns``) skips the
+        pilot draw entirely — the warm incremental path, where the anchor
+        (boundaries, sketch0, shift) must stay frozen so merged store
+        moments remain classifiable."""
         self.validate(queries)
         if route not in ROUTES:
             raise ValueError(f"unknown route {route!r}; expected one of "
@@ -442,8 +570,12 @@ class MultiQueryExecutor:
             IslaQuery(e=self.params.e, beta=self.params.beta)]
         params = self.params.replace(e=min(q.e for q in sampled),
                                      beta=max(q.beta for q in sampled))
-        pilot, pilot_columns = self._run_pilot(
-            queries, rng, params, sigma_guess, self._pilot_stats_fn(route))
+        if pilot is None:
+            pilot, pilot_columns = self._run_pilot(
+                queries, rng, params, sigma_guess,
+                self._pilot_stats_fn(route))
+        elif pilot_columns is None:
+            pilot_columns = {}
         shifted_sketch0 = pilot.sketch0 + pilot.shift
         boundaries = make_boundaries(shifted_sketch0, pilot.sigma, params)
 
@@ -507,23 +639,19 @@ class MultiQueryExecutor:
                      mode=dev_mode, geometry=dev_geometry)
         return np.asarray(avg, dtype=np.float64) * scale
 
-    def _base_pass(self, plan: QueryPlan, mg: ModeGroup,
-                   columns: Mapping[str, np.ndarray],
-                   block_ids: np.ndarray, quotas: np.ndarray,
-                   values: np.ndarray, route: str,
-                   need_ex2: bool = True) -> SharedPass:
-        """The plain measure pass over ALL samples of this mode-group's
-        draw — the pre-relational SharedPass every unpredicated, ungrouped
-        query composes from.  ``need_ex2=False`` skips the plain-moment
-        sweep (only VAR reads it)."""
+    def _base_stats(self, plan: QueryPlan, mg: ModeGroup,
+                    store: MomentStore, route: str) -> SharedPass:
+        """The plain measure pass over ALL samples accumulated in the
+        (None, None) key's store — the pre-relational SharedPass every
+        unpredicated, ungrouped query composes from."""
         pilot = plan.pilot
         params = self.params
         n = len(self.block_sizes)
-        mom_s, mom_l = phase1_sampling_batch(values, block_ids, n,
-                                             plan.boundaries)
+        mom_s, mom_l = store.mom_s, store.mom_l
+        quotas = store.n_sampled
         if route == "device":
             partials = self._device_partials(
-                mom_s, mom_l, plan.shifted_sketch0, pilot.sigma, params,
+                mom_s, mom_l, store.sketch0, pilot.sigma, params,
                 mg.mode, mg.geometry)
             # avg-only provenance: the jnp Phase 2 returns partial answers,
             # not the (alpha, sketch, case) diagnostics of the host solvers.
@@ -532,7 +660,7 @@ class MultiQueryExecutor:
                 case=np.zeros(n, dtype=np.int64), n_iter=np.zeros(n),
                 mom_s=mom_s, mom_l=mom_l, n_sampled=quotas)
         else:
-            res = phase2_iteration_batch(mom_s, mom_l, plan.shifted_sketch0,
+            res = phase2_iteration_batch(mom_s, mom_l, store.sketch0,
                                          params, mode=mg.mode,
                                          geometry=mg.geometry)
             partials = res.avg
@@ -544,11 +672,23 @@ class MultiQueryExecutor:
         mean_shifted = summarize(partials, self.block_sizes)
         sample_size = int(quotas.sum())  # actually drawn (deadline-aware)
         ex2 = None
-        if need_ex2:
-            # Block-weighted second moment of the shifted stream (VAR reads
-            # it; quota >= 1, so every count is positive).
-            totals = sample_moments_batch(values, block_ids, n)
-            ex2 = summarize(totals[:, 2] / totals[:, 0], self.block_sizes)
+        if store.has_totals:
+            # Block-weighted second moment of the shifted stream (VAR
+            # reads it).  Blocks a budget-capped draw never reached carry
+            # no E[x^2] evidence — averaging them in as zero would drag
+            # VAR toward 0 silently, so they are excluded from the weight.
+            totals = store.totals
+            cnt = totals[:, 0]
+            per_block = totals[:, 2] / np.maximum(cnt, 1.0)
+            visited = cnt > 0
+            if np.all(visited):
+                ex2 = summarize(per_block, self.block_sizes)
+            elif np.any(visited):
+                sizes = np.asarray(self.block_sizes, dtype=np.float64)
+                ex2 = float(np.sum(per_block[visited] * sizes[visited])
+                            / np.sum(sizes[visited]))
+            else:
+                ex2 = float("nan")
         result = AggregateResult(
             answer=mean_shifted - pilot.shift, sketch0=pilot.sketch0,
             sigma=pilot.sigma, sampling_rate=mg.rate,
@@ -559,35 +699,23 @@ class MultiQueryExecutor:
                           data_size=self.data_size, rate=mg.rate,
                           sample_size=sample_size)
 
-    def _keyed_pass(self, plan: QueryPlan, mg: ModeGroup,
-                    key: Tuple[Optional[Predicate], Optional[str]],
-                    columns: Mapping[str, np.ndarray],
-                    block_ids: np.ndarray, quotas: np.ndarray,
-                    values: np.ndarray, route: str,
-                    need_mean: bool = True) -> KeyedPass:
-        """Re-segment this pass's stream for one (where, group_by) key and
-        run the vectorized phases over the flattened (group, block) cells.
+    def _keyed_stats(self, plan: QueryPlan, mg: ModeGroup,
+                     store: MomentStore, route: str,
+                     need_mean: bool = True) -> KeyedPass:
+        """Compose one (where, group_by) key's per-cell statistics from its
+        store's accumulated (group, block) moments.
 
-        ``need_mean=False`` (COUNT-only keys) skips Phase 1/Phase 2 — the
-        cell counts alone answer the query; the mean-side fields come back
-        NaN and must not be read."""
-        where, group_by = key
-        mask = where.mask(columns) if where is not None else None
-        if group_by is not None:
-            group_ids, n_groups = self._group_ids(group_by, columns)
-        else:
-            group_ids, n_groups = None, 1
+        ``need_mean=False`` (COUNT-only keys) skips Phase 2 — the cell
+        counts alone answer the query; the mean-side fields come back NaN
+        and must not be read."""
         params = self.params
-        n_b = len(self.block_sizes)
-        totals = sample_moments_batch(
-            values, block_ids, n_b, group_ids=group_ids, n_groups=n_groups,
-            mask=mask)
-        if need_mean:
-            mom_s, mom_l = phase1_sampling_batch(
-                values, block_ids, n_b, plan.boundaries,
-                group_ids=group_ids, n_groups=n_groups, mask=mask)
+        n_b = store.n_blocks
+        n_groups = store.n_groups
+        totals = store.totals
+        if need_mean and store.has_regions:
+            mom_s, mom_l = store.mom_s, store.mom_l
             partials = self._partials(
-                mom_s, mom_l, plan.shifted_sketch0, plan.pilot.sigma,
+                mom_s, mom_l, store.sketch0, plan.pilot.sigma,
                 params, mg.mode, mg.geometry, route).reshape(n_groups, n_b)
         else:
             mom_s = mom_l = np.zeros((n_groups * n_b, 4))
@@ -597,10 +725,11 @@ class MultiQueryExecutor:
         s1 = totals[:, 1].reshape(n_groups, n_b)
         s2 = totals[:, 2].reshape(n_groups, n_b)
         sizes = np.asarray(self.block_sizes, dtype=np.float64)
-        drawn = np.asarray(quotas, dtype=np.float64)
+        drawn = np.asarray(store.n_sampled, dtype=np.float64)
         # Estimated matching population per cell: catalog block size scaled
-        # by the cell's observed match fraction of the block's draw.
-        weights = sizes[None, :] * cnt / drawn[None, :]
+        # by the cell's observed match fraction of the block's cumulative
+        # draw (a block a budget-capped draw never reached carries none).
+        weights = sizes[None, :] * cnt / np.maximum(drawn, 1.0)[None, :]
         w_g = weights.sum(axis=1)
         n_g = cnt.sum(axis=1).astype(np.int64)
         populated = w_g > 0
@@ -756,39 +885,147 @@ class MultiQueryExecutor:
             pass_id=pass_id, groups=groups, n_matched=kp.n_all,
             est_population=kp.w_all)
 
-    def _execute_group(self, plan: QueryPlan, mg: ModeGroup, pass_id: int,
-                       rng: np.random.Generator, route: str,
-                       deadline_samples: Optional[int]) -> "list":
-        """One shared sampling pass; every query of the mode-group composes
-        from it (per distinct (where, group_by) key, one re-segmentation)."""
-        columns, block_ids, quotas = self._sample_rows(mg.rate, rng,
-                                                       deadline_samples)
-        values = self._measure_of(columns) + plan.pilot.shift
-        n_drawn = int(quotas.sum())
-        sp = None  # the plain pass is computed lazily: an all-relational
-        keyed = {}  # batch never pays for it
+    def _group_stores(self, plan: QueryPlan, mg: ModeGroup,
+                      stores: Optional[dict]
+                      ) -> Tuple[dict, dict]:
+        """The per-key stores of one mode-group's pass.
+
+        ``stores`` is the executor's persistent dict (incremental) — keys
+        are looked up / created under ``StoreKey(where, group_by, mode)``
+        and survive the run.  ``stores=None`` builds fresh ephemeral stores
+        (the one-shot path — bit-identical to the pre-store executor).
+        Returns ``(key -> store, key -> aggs)``.
+        """
         key_aggs = {}
         for i in mg.query_ids:
             q = plan.queries[i]
             key_aggs.setdefault(_pass_key(q), set()).add(q.agg)
+        n_b = len(self.block_sizes)
+        out = {}
+        for key, aggs in key_aggs.items():
+            where, group_by = key
+            n_groups = (int(self.group_domains[group_by])
+                        if group_by is not None else 1)
+            if stores is not None:
+                skey = StoreKey(where=where, group_by=group_by,
+                                mode=mg.mode)
+                st = stores.get(skey)
+                if st is None:
+                    # Persistent stores always accumulate regions: a later
+                    # batch may add an AVG to a key first seen COUNT-only,
+                    # and past samples cannot be re-classified.
+                    st = MomentStore.fresh(
+                        n_b, plan.boundaries, plan.shifted_sketch0,
+                        shift=plan.pilot.shift, n_groups=n_groups)
+                    stores[skey] = st
+            elif key == (None, None):
+                # The plain pass always keeps regions (its composed mean
+                # is the leverage answer); totals only feed VAR's ex2.
+                st = MomentStore.fresh(
+                    n_b, plan.boundaries, plan.shifted_sketch0,
+                    shift=plan.pilot.shift, n_groups=n_groups,
+                    has_totals=("VAR" in aggs))
+            else:
+                # Keyed passes always need totals (cell weights / counts);
+                # COUNT-only keys skip the region sweep.
+                st = MomentStore.fresh(
+                    n_b, plan.boundaries, plan.shifted_sketch0,
+                    shift=plan.pilot.shift, n_groups=n_groups,
+                    has_regions=(aggs != {"COUNT"}))
+            out[key] = st
+        return out, key_aggs
+
+    def _execute_group(self, plan: QueryPlan, mg: ModeGroup, pass_id: int,
+                       rng: np.random.Generator, route: str,
+                       deadline_samples: Optional[int],
+                       prebuilt: Optional[Tuple[dict, dict]] = None,
+                       persistent: bool = False,
+                       budget_alloc: Optional[int] = None,
+                       chunk_blocks: Optional[int] = None) -> "list":
+        """One shared sampling pass; every query of the mode-group composes
+        from it (per distinct (where, group_by) key, one re-segmentation).
+
+        ``prebuilt`` is this mode-group's ``(key -> store, key -> aggs)``
+        pair from ``_group_stores`` (built once per run).  One-shot
+        (``persistent=False``): fresh ephemeral stores, full-quota draw.
+        Incremental: persistent stores, and the draw covers only the union
+        per-block sample DEFICIT the batch still owes (zero draws when
+        every store is already ahead of every quota), optionally scaled
+        down to ``budget_alloc`` new samples.
+        """
+        target = np.asarray(
+            block_quotas(self.block_sizes, mg.rate, deadline_samples),
+            dtype=np.int64)
+        group_stores, key_aggs = prebuilt
+        if persistent:
+            draw = np.zeros(len(self.block_sizes), dtype=np.int64)
+            for st in group_stores.values():
+                draw = np.maximum(draw, st.deficit(target))
+            if budget_alloc is not None:
+                draw = _scale_quotas(draw, int(budget_alloc))
+        else:
+            draw = target
+        new_samples = int(draw.sum())
+        if new_samples:
+            self._draw_and_ingest(group_stores, draw, rng,
+                                  plan.pilot.shift,
+                                  chunk_blocks=chunk_blocks)
+
+        sp = None  # the plain pass is composed lazily: an all-relational
+        keyed = {}  # batch never pays for it
         out = []
         for i in mg.query_ids:
             q = plan.queries[i]
             key = _pass_key(q)
+            st = group_stores[key]
             if key == (None, None):
                 if sp is None:
-                    sp = self._base_pass(
-                        plan, mg, columns, block_ids, quotas, values, route,
-                        need_ex2=("VAR" in key_aggs[key]))
-                out.append((i, self._compose_plain(q, sp, mg, pass_id)))
-                continue
-            if key not in keyed:
-                keyed[key] = self._keyed_pass(
-                    plan, mg, key, columns, block_ids, quotas, values,
-                    route, need_mean=(key_aggs[key] != {"COUNT"}))
-            out.append((i, self._compose_keyed(
-                q, keyed[key], mg, pass_id, plan.pilot.shift, n_drawn)))
+                    sp = self._base_stats(plan, mg, st, route)
+                ans = self._compose_plain(q, sp, mg, pass_id)
+            else:
+                if key not in keyed:
+                    keyed[key] = self._keyed_stats(
+                        plan, mg, st, route,
+                        need_mean=(key_aggs[key] != {"COUNT"}))
+                ans = self._compose_keyed(
+                    q, keyed[key], mg, pass_id, plan.pilot.shift,
+                    st.total_sampled)
+            ans.new_samples = new_samples
+            out.append((i, ans))
         return out
+
+    def _budget_allocations(self, plan: QueryPlan,
+                            deadline_samples: Optional[int],
+                            budget: Optional[int],
+                            mg_stores: "list") -> dict:
+        """Split a run's NEW-sample budget across its mode-group passes by
+        marginal-error reduction (``moment_store.split_budget``): the most
+        uncertain stores — fewest matching samples, highest observed sigma
+        — absorb the tick's budget first.  ``mg_stores`` holds each
+        mode-group's prebuilt (key -> store, key -> aggs) pair."""
+        if budget is None:
+            return {}
+        deficits, n_now, sigmas = [], [], []
+        for mg, (group_stores, _) in zip(plan.mode_groups, mg_stores):
+            target = np.asarray(
+                block_quotas(self.block_sizes, mg.rate, deadline_samples),
+                dtype=np.int64)
+            union = np.zeros(len(self.block_sizes), dtype=np.int64)
+            lo_n, hi_sig = None, float("nan")
+            for st in group_stores.values():
+                union = np.maximum(union, st.deficit(target))
+                n = float(st.totals[:, 0].sum())
+                lo_n = n if lo_n is None else min(lo_n, n)
+                s = st.sample_sigma()
+                if math.isfinite(s) and not math.isfinite(hi_sig):
+                    hi_sig = s
+                elif math.isfinite(s):
+                    hi_sig = max(hi_sig, s)
+            deficits.append(int(union.sum()))
+            n_now.append(lo_n or 0.0)
+            sigmas.append(hi_sig)
+        alloc = split_budget(n_now, sigmas, deficits, int(budget))
+        return {pass_id: int(a) for pass_id, a in enumerate(alloc)}
 
     def _shared_pass(self, queries: Sequence[IslaQuery],
                      rng: np.random.Generator, mode: str, route: str,
@@ -796,7 +1033,7 @@ class MultiQueryExecutor:
                      sigma_guess: Optional[float],
                      deadline_samples: Optional[int]) -> SharedPass:
         """Plan + execute one plain pass for a single-mode batch (compat
-        shim over plan()/_base_pass; the full relational path is run())."""
+        shim over plan()/_base_stats; the full relational path is run())."""
         plan = self.plan(queries, rng, mode=mode, route=route,
                          rate_override=rate_override,
                          sigma_guess=sigma_guess)
@@ -804,18 +1041,25 @@ class MultiQueryExecutor:
             raise ValueError("_shared_pass serves single-mode batches; use "
                              "run() for mixed per-query modes")
         mg = plan.mode_groups[0]
-        columns, block_ids, quotas = self._sample_rows(mg.rate, rng,
-                                                       deadline_samples)
-        values = self._measure_of(columns) + plan.pilot.shift
-        return self._base_pass(plan, mg, columns, block_ids, quotas, values,
-                               route,
-                               need_ex2=any(q.agg == "VAR" for q in queries))
+        store = MomentStore.fresh(
+            len(self.block_sizes), plan.boundaries, plan.shifted_sketch0,
+            shift=plan.pilot.shift,
+            has_totals=any(q.agg == "VAR" for q in queries))
+        quotas = np.asarray(
+            block_quotas(self.block_sizes, mg.rate, deadline_samples),
+            dtype=np.int64)
+        self._draw_and_ingest({(None, None): store}, quotas, rng,
+                              plan.pilot.shift)
+        return self._base_stats(plan, mg, store, route)
 
     def run(self, queries: Sequence[IslaQuery], rng: np.random.Generator,
             mode: str = "calibrated", route: str = "host",
             rate_override: Optional[float] = None,
             sigma_guess: Optional[float] = None,
-            deadline_samples: Optional[int] = None) -> "list[QueryAnswer]":
+            deadline_samples: Optional[int] = None,
+            incremental: bool = False,
+            budget: Optional[int] = None,
+            chunk_blocks: Optional[int] = None) -> "list[QueryAnswer]":
         """Answer every query from one shared pass per mode-group.
 
         ``mode``/``route`` select the default Phase 2 solver and where it
@@ -823,14 +1067,48 @@ class MultiQueryExecutor:
         per-query (e, beta, where, group_by) drive each mode-group's shared
         sampling rate and each answer's reported bound.  Answers come back
         in query order.
+
+        ``incremental=True`` turns the executor into a serving system with
+        state: the first run pilots and freezes the anchor, every pass
+        merges into a persistent per-``StoreKey`` moment store, and later
+        runs top up only the sample deficit their queries still demand —
+        a repeat predicate at the same (or looser) precision is answered
+        from the warm store with ZERO new samples (``new_samples`` on each
+        answer reports the top-up).  ``budget`` caps this run's total new
+        samples, split across passes by marginal-error reduction — the
+        deadline-aware tick path.  ``chunk_blocks`` streams the row draw
+        through block chunks (O(one-chunk) row memory, bit-identical).
         """
-        plan = self.plan(queries, rng, mode=mode, route=route,
-                         rate_override=rate_override,
-                         sigma_guess=sigma_guess)
+        if budget is not None and not incremental:
+            raise ValueError(
+                "budget caps the incremental deficit top-up; without "
+                "incremental=True there is no store ledger to budget "
+                "against (use deadline_samples for a per-block quota cap)")
+        if incremental and self._anchor is not None:
+            pilot, pilot_columns = self._anchor
+            plan = self.plan(queries, rng, mode=mode, route=route,
+                             rate_override=rate_override,
+                             sigma_guess=sigma_guess, pilot=pilot,
+                             pilot_columns=pilot_columns)
+        else:
+            plan = self.plan(queries, rng, mode=mode, route=route,
+                             rate_override=rate_override,
+                             sigma_guess=sigma_guess)
+            if incremental:
+                self._anchor = (plan.pilot, plan.pilot_columns)
+        stores = self._stores if incremental else None
+        mg_stores = [self._group_stores(plan, mg, stores)
+                     for mg in plan.mode_groups]
+        alloc = (self._budget_allocations(plan, deadline_samples, budget,
+                                          mg_stores)
+                 if incremental else {})
         answers = [None] * len(queries)
         for pass_id, mg in enumerate(plan.mode_groups):
-            for i, ans in self._execute_group(plan, mg, pass_id, rng, route,
-                                              deadline_samples):
+            for i, ans in self._execute_group(
+                    plan, mg, pass_id, rng, route, deadline_samples,
+                    prebuilt=mg_stores[pass_id], persistent=incremental,
+                    budget_alloc=alloc.get(pass_id),
+                    chunk_blocks=chunk_blocks):
                 answers[i] = ans
         return answers
 

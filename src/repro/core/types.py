@@ -161,6 +161,23 @@ class Predicate:
 
 
 @dataclasses.dataclass(frozen=True)
+class StoreKey:
+    """Identity of a persistent moment store in the incremental serving
+    path: the re-segmentation work (``where``, ``group_by``) plus the
+    resolved Phase 2 mode its passes were planned under.  Frozen/hashable —
+    executors key warm stores and their sample ledgers off it."""
+
+    where: Optional[Predicate] = None
+    group_by: Optional[str] = None
+    mode: str = "calibrated"
+
+    def describe(self) -> str:
+        sel = self.where.describe() if self.where is not None else "TRUE"
+        return (f"where[{sel}] group_by[{self.group_by or '-'}] "
+                f"mode={self.mode}")
+
+
+@dataclasses.dataclass(frozen=True)
 class IslaParams:
     """All tunables of the scheme, defaults per the paper's §VIII setup."""
 

@@ -29,11 +29,16 @@ LANE = 128          # TPU vector lane width
 DEFAULT_TM = 512    # rows per tile -> tile = 512*128*4B = 256 KiB VMEM
 
 
-def _moments_kernel(bounds_ref, x_ref, o_ref):
-    """One grid step: accumulate tile moments into o_ref (2, 4)."""
+def _moments_kernel(bounds_ref, prior_ref, x_ref, o_ref):
+    """One grid step: accumulate tile moments into o_ref (2, 4).
+
+    The accumulator is seeded from ``prior_ref`` instead of zeros — the
+    online continuation (§VII-A): passing a previous round's moments as the
+    prior operand merges the rounds on device without a second pass.
+    """
     @pl.when(pl.program_id(0) == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[...] = prior_ref[...].astype(jnp.float32)
 
     x = x_ref[...].astype(jnp.float32)
     s_lo, s_hi = bounds_ref[0], bounds_ref[1]
@@ -57,11 +62,14 @@ def _moments_kernel(bounds_ref, x_ref, o_ref):
                    static_argnames=("tm", "stride", "interpret"))
 def isla_moments_pallas(values2d: jnp.ndarray, bounds: jnp.ndarray,
                         tm: int = DEFAULT_TM, stride: int = 1,
-                        interpret: bool = False) -> jnp.ndarray:
+                        interpret: bool = False,
+                        prior: jnp.ndarray = None) -> jnp.ndarray:
     """Tiled ISLA moments.
 
     values2d: (rows, 128), rows % tm == 0; bounds: (4,) fp32
     (s_lo, s_hi, l_lo, l_hi).  stride > 1 reads every stride-th tile only.
+    ``prior`` optionally seeds the accumulator with a previous round's
+    (2, 4) moments (the §VII-A continuation merged in the same launch).
     Returns (2, 4) fp32 moments.
     """
     rows, lane = values2d.shape
@@ -71,11 +79,16 @@ def isla_moments_pallas(values2d: jnp.ndarray, bounds: jnp.ndarray,
         raise ValueError(f"rows {rows} not a multiple of tile rows {tm}")
     n_tiles = rows // tm
     n_sel = max(1, n_tiles // stride) if stride > 1 else n_tiles
+    if prior is None:
+        prior = jnp.zeros((2, 4), jnp.float32)
+    if prior.shape != (2, 4):
+        raise ValueError(f"prior must be (2, 4), got {prior.shape}")
 
     grid_spec = pl.GridSpec(
         grid=(n_sel,),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),  # bounds: tiny, replicated
+            pl.BlockSpec((2, 4), lambda i: (0, 0)),  # prior accumulator
             pl.BlockSpec((tm, LANE), lambda i: (i * stride, 0)),
         ],
         out_specs=pl.BlockSpec((2, 4), lambda i: (0, 0)),
@@ -85,19 +98,20 @@ def isla_moments_pallas(values2d: jnp.ndarray, bounds: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((2, 4), jnp.float32),
         interpret=interpret,
-    )(bounds.astype(jnp.float32), values2d)
+    )(bounds.astype(jnp.float32), prior.astype(jnp.float32), values2d)
 
 
-def _moments_batched_kernel(bounds_ref, x_ref, o_ref):
+def _moments_batched_kernel(bounds_ref, prior_ref, x_ref, o_ref):
     """Grid (block, tile): accumulate one block's tile into o_ref (1, 2, 4).
 
     Same body as ``_moments_kernel`` with a leading block axis: the output
     block is indexed by grid dim 0, so each block owns its (2, 4) moment
-    cell and the tile axis accumulates sequentially within it.
+    cell and the tile axis accumulates sequentially within it — seeded from
+    that block's ``prior_ref`` cell (zeros on a fresh round).
     """
     @pl.when(pl.program_id(1) == 0)
     def _init():
-        o_ref[...] = jnp.zeros_like(o_ref)
+        o_ref[...] = prior_ref[...].astype(jnp.float32)
 
     x = x_ref[...].astype(jnp.float32)
     s_lo, s_hi = bounds_ref[0], bounds_ref[1]
@@ -120,14 +134,18 @@ def _moments_batched_kernel(bounds_ref, x_ref, o_ref):
                    static_argnames=("tm", "stride", "interpret"))
 def isla_moments_batched_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
                                 tm: int = DEFAULT_TM, stride: int = 1,
-                                interpret: bool = False) -> jnp.ndarray:
+                                interpret: bool = False,
+                                prior: jnp.ndarray = None) -> jnp.ndarray:
     """Batched multi-block ISLA moments — Phase 1 for the batched engine.
 
     values3d: (n_blocks, rows, 128), rows % tm == 0; bounds: (4,) fp32.
     Returns (n_blocks, 2, 4) fp32 moments — one launch feeds every block's
     8 scalars straight into the vectorized Phase 2
     (``repro.core.distributed.phase2`` on stacked rows).  ``stride`` is the
-    fused sample-while-reducing path, per block.
+    fused sample-while-reducing path, per block.  ``prior`` optionally
+    seeds every block's accumulator with its previous-round (n_blocks,
+    2, 4) moments — the merge-capable online route: one launch both folds
+    the fresh round and merges it into the store's state.
     """
     n_blocks, rows, lane = values3d.shape
     if lane != LANE:
@@ -136,11 +154,17 @@ def isla_moments_batched_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
         raise ValueError(f"rows {rows} not a multiple of tile rows {tm}")
     n_tiles = rows // tm
     n_sel = max(1, n_tiles // stride) if stride > 1 else n_tiles
+    if prior is None:
+        prior = jnp.zeros((n_blocks, 2, 4), jnp.float32)
+    if prior.shape != (n_blocks, 2, 4):
+        raise ValueError(f"prior must be ({n_blocks}, 2, 4), got "
+                         f"{prior.shape}")
 
     grid_spec = pl.GridSpec(
         grid=(n_blocks, n_sel),
         in_specs=[
             pl.BlockSpec(memory_space=pl.ANY),  # bounds: tiny, replicated
+            pl.BlockSpec((1, 2, 4), lambda b, i: (b, 0, 0)),  # prior cells
             pl.BlockSpec((1, tm, LANE), lambda b, i: (b, i * stride, 0)),
         ],
         out_specs=pl.BlockSpec((1, 2, 4), lambda b, i: (b, 0, 0)),
@@ -150,12 +174,13 @@ def isla_moments_batched_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blocks, 2, 4), jnp.float32),
         interpret=interpret,
-    )(bounds.astype(jnp.float32), values3d)
+    )(bounds.astype(jnp.float32), prior.astype(jnp.float32), values3d)
 
 
 def isla_moments_grouped_pallas(values4d: jnp.ndarray, bounds: jnp.ndarray,
                                 tm: int = DEFAULT_TM, stride: int = 1,
-                                interpret: bool = False) -> jnp.ndarray:
+                                interpret: bool = False,
+                                prior: jnp.ndarray = None) -> jnp.ndarray:
     """Relational (group, block) ISLA moments — Phase 1 for the grouped
     engine axis.
 
@@ -167,15 +192,22 @@ def isla_moments_grouped_pallas(values4d: jnp.ndarray, bounds: jnp.ndarray,
     the flattened leading axis IS the batched kernel's block axis, so the
     grouped axis reuses ``isla_moments_batched_pallas`` unchanged (one
     launch, one grid) and its output reshapes straight back to the
-    (group, block) cells the vectorized Phase 2 consumes.
+    (group, block) cells the vectorized Phase 2 consumes.  ``prior``
+    ((n_groups, n_blocks, 2, 4)) seeds each cell's accumulator with its
+    previous-round moments — the merge-capable online route.
     """
     if values4d.ndim != 4:
         raise ValueError(f"need (n_groups, n_blocks, rows, {LANE}), got "
                          f"shape {values4d.shape}")
     n_groups, n_blocks, rows, lane = values4d.shape
     flat = values4d.reshape(n_groups * n_blocks, rows, lane)
+    if prior is not None:
+        if prior.shape != (n_groups, n_blocks, 2, 4):
+            raise ValueError(f"prior must be ({n_groups}, {n_blocks}, 2, "
+                             f"4), got {prior.shape}")
+        prior = prior.reshape(n_groups * n_blocks, 2, 4)
     out = isla_moments_batched_pallas(flat, bounds, tm=tm, stride=stride,
-                                      interpret=interpret)
+                                      interpret=interpret, prior=prior)
     return out.reshape(n_groups, n_blocks, 2, 4)
 
 

@@ -13,6 +13,15 @@ provenance (rate, pass id, resolved mode, bound):
 
   PYTHONPATH=src python -m repro.launch.serve --workload isla --ticks 4
   PYTHONPATH=src python -m repro.launch.serve --workload isla --smoke
+
+With ``--incremental`` the loop keeps persistent per-(where, group_by,
+mode) moment stores across ticks: repeat predicates are served from warm
+moments and each tick draws only the sample deficit its batch still owes;
+``--deadline-samples N`` caps a tick at N new samples, split across stores
+by marginal-error reduction (answers refine over later ticks):
+
+  PYTHONPATH=src python -m repro.launch.serve --workload isla --smoke \
+      --incremental --deadline-samples 20000
 """
 from __future__ import annotations
 
@@ -50,20 +59,41 @@ class IslaAdmissionLoop:
     pass per resolved Phase 2 mode-group — and returns the finished tickets.
     Every answer carries provenance: the shared rate its pass sampled at,
     the pass id it shared with its batch-mates, and the resolved mode.
+
+    ``incremental=True`` turns ticks into continuation rounds: every pass
+    merges into the executor's persistent per-(where, group_by, mode)
+    moment stores, so a repeat predicate in a later tick is served from the
+    warm store and draws only its sample deficit (zero when the store is
+    already ahead).  ``deadline_samples`` is the deadline-aware tick
+    budget: at most that many NEW samples per tick, split across the
+    tick's passes by marginal-error reduction
+    (``moment_store.split_budget``) — starved stores absorb the budget
+    first, and answers that could not earn their (e, beta) this tick
+    report a best-effort bound and refine on later ticks.
     """
 
     def __init__(self, executor, rng: np.random.Generator,
                  mode: str = "calibrated", route: str = "host",
-                 max_batch: int = 64):
+                 max_batch: int = 64, incremental: bool = False,
+                 deadline_samples: Optional[int] = None):
         self.executor = executor
         self.rng = rng
         self.mode = mode
         self.route = route
         self.max_batch = int(max_batch)
+        self.incremental = bool(incremental)
+        if deadline_samples is not None and not self.incremental:
+            raise ValueError(
+                "deadline_samples is the incremental tick budget (split "
+                "across warm stores by marginal error); without "
+                "incremental=True there is no deficit ledger to budget "
+                "against — pass incremental=True or drop the deadline")
+        self.deadline_samples = deadline_samples
         self._pending = collections.deque()
         self._next_tid = 0
         self._tick = 0
         self.answered = []
+        self.samples_drawn = 0  # cumulative NEW samples across ticks
 
     def submit(self, query) -> int:
         """Admit one query; returns its ticket id."""
@@ -85,11 +115,17 @@ class IslaAdmissionLoop:
             batch.append(self._pending.popleft())
         if not batch:
             return []
-        answers = self.executor.run([t.query for t in batch], self.rng,
-                                    mode=self.mode, route=self.route)
+        answers = self.executor.run(
+            [t.query for t in batch], self.rng, mode=self.mode,
+            route=self.route, incremental=self.incremental,
+            budget=self.deadline_samples if self.incremental else None)
+        seen_passes = set()
         for t, a in zip(batch, answers):
             t.answer = a
             t.tick_answered = self._tick
+            if a.new_samples is not None and a.pass_id not in seen_passes:
+                self.samples_drawn += a.new_samples
+                seen_passes.add(a.pass_id)
         self.answered.extend(batch)
         return batch
 
@@ -141,9 +177,10 @@ def _describe_answer(t: IslaTicket) -> str:
     bound = ("exact" if a.error_bound == 0.0 else
              f"±{a.error_bound:.3g}" if a.error_bound is not None
              else "best-effort")
+    fresh = (f" new={a.new_samples}" if a.new_samples is not None else "")
     line = (f"  #{t.tid:<3d} {q.agg:>5}  where[{sel}] group_by[{gb}] "
             f"-> {a.value:.5g} [{bound}] mode={a.mode} pass={a.pass_id} "
-            f"rate={a.sampling_rate:.2e} tick={t.tick_answered}")
+            f"rate={a.sampling_rate:.2e}{fresh} tick={t.tick_answered}")
     if a.groups:
         cells = ", ".join(f"g{g.group}={g.value:.4g}(n={g.n_samples})"
                           for g in a.groups)
@@ -168,23 +205,30 @@ def serve_isla(args) -> None:
     ex = MultiQueryExecutor(samplers, sizes, params=IslaParams(e=e),
                             group_domains={"region": n_groups})
     loop = IslaAdmissionLoop(ex, np.random.default_rng(args.seed + 1),
-                             mode="auto", route=args.route)
+                             mode="auto", route=args.route,
+                             incremental=args.incremental,
+                             deadline_samples=args.deadline_samples)
     qrng = np.random.default_rng(args.seed + 2)
     t0 = time.perf_counter()
     total = 0
     for _ in range(ticks):
         for _ in range(qpt):
             loop.submit(_random_query(qrng, e))
+        drawn_before = loop.samples_drawn
         done = loop.tick()
         total += len(done)
+        extra = (f", {loop.samples_drawn - drawn_before} new samples"
+                 if args.incremental else "")
         print(f"tick {loop._tick}: admitted {len(done)} queries, "
-              f"{loop.pending} pending")
+              f"{loop.pending} pending{extra}")
         for t in done:
             print(_describe_answer(t))
     dt = time.perf_counter() - t0
+    warm = (f", {loop.samples_drawn} samples total (warm stores reused)"
+            if args.incremental else "")
     print(f"served {total} queries over {ticks} ticks in {dt:.2f}s "
           f"({total / max(dt, 1e-9):.1f} q/s), "
-          f"{n_blocks} blocks x {n_groups} groups")
+          f"{n_blocks} blocks x {n_groups} groups{warm}")
 
 
 # ---------------------------------------------------------------------------
@@ -238,9 +282,18 @@ def main():
     ap.add_argument("--queries-per-tick", type=int, default=6)
     ap.add_argument("--precision", type=float, default=0.5)
     ap.add_argument("--route", choices=["host", "device"], default="host")
+    ap.add_argument("--incremental", action="store_true",
+                    help="persistent moment stores: warm-serve repeat "
+                         "predicates, top up only sample deficits")
+    ap.add_argument("--deadline-samples", type=int, default=None,
+                    help="deadline-aware tick budget: max NEW samples per "
+                         "tick, split across stores by marginal error")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI smoke runs")
     args = ap.parse_args()
+    if args.deadline_samples is not None and not args.incremental:
+        ap.error("--deadline-samples budgets the incremental deficit "
+                 "ledger; it requires --incremental")
     if args.workload == "isla":
         serve_isla(args)
     else:

@@ -59,6 +59,23 @@ def test_moments_match_engine(rng):
     assert float(mS[3]) == pytest.approx(ps.s3, rel=1e-4)
 
 
+def test_moments_prior_merges_rounds(rng):
+    """The accumulator operand: moments(round2, prior=round1) == moments of
+    the concatenated stream (device-side §VII-A continuation), and the
+    merged vectors feed phase2 unchanged."""
+    bounds = (60.0, 90.0, 110.0, 140.0)
+    v1 = jnp.asarray(rng.normal(100, 20, size=3000), jnp.float32)
+    v2 = jnp.asarray(rng.normal(100, 20, size=5000), jnp.float32)
+    r1 = moments(v1, bounds)
+    mS, mL = moments(v2, bounds, prior=r1)
+    wS, wL = moments(jnp.concatenate([v1, v2]), bounds)
+    np.testing.assert_allclose(np.asarray(mS), np.asarray(wS), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(mL), np.asarray(wL), rtol=1e-5)
+    merged = float(phase2(mS, mL, jnp.float32(100.0), P, mode="calibrated"))
+    whole = float(phase2(wS, wL, jnp.float32(100.0), P, mode="calibrated"))
+    assert merged == pytest.approx(whole, rel=1e-5)
+
+
 def test_isla_mean_jit_accuracy(rng):
     x = jnp.asarray(rng.normal(100, 20, size=(512, 512)), jnp.float32)
     got = float(jax.jit(lambda v: isla_mean(v, P, rate=0.1))(x))

@@ -109,6 +109,51 @@ def test_moments_grouped_kernel(rng):
                                     interpret=True)
 
 
+def test_moments_kernel_prior_accumulator(rng):
+    """The prior operand seeds the accumulator: two rounds through the
+    kernel == one kernel pass over the concatenated data (§VII-A merge on
+    device)."""
+    x1 = jnp.asarray(rng.normal(100, 20, size=(64 * 2, 128)), jnp.float32)
+    x2 = jnp.asarray(rng.normal(100, 20, size=(64 * 3, 128)), jnp.float32)
+    round1 = isla_moments_pallas(x1, BOUNDS_ARR, tm=64, interpret=True)
+    merged = isla_moments_pallas(x2, BOUNDS_ARR, tm=64, interpret=True,
+                                 prior=round1)
+    whole = isla_moments_pallas(jnp.concatenate([x1, x2]), BOUNDS_ARR,
+                                tm=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(whole),
+                               rtol=1e-6)
+
+
+def test_moments_batched_kernel_prior_accumulator(rng):
+    """Per-block prior cells merge independently on the batched route."""
+    x1 = jnp.asarray(rng.normal(100, 20, size=(3, 64 * 2, 128)),
+                     jnp.float32)
+    x2 = jnp.asarray(rng.normal(100, 20, size=(3, 64 * 2, 128)),
+                     jnp.float32)
+    round1 = isla_moments_batched_pallas(x1, BOUNDS_ARR, tm=64,
+                                         interpret=True)
+    merged = isla_moments_batched_pallas(x2, BOUNDS_ARR, tm=64,
+                                         interpret=True, prior=round1)
+    whole = isla_moments_batched_pallas(
+        jnp.concatenate([x1, x2], axis=1), BOUNDS_ARR, tm=64,
+        interpret=True)
+    np.testing.assert_allclose(np.asarray(merged), np.asarray(whole),
+                               rtol=1e-6)
+    with pytest.raises(ValueError, match="prior"):
+        isla_moments_batched_pallas(x2, BOUNDS_ARR, tm=64, interpret=True,
+                                    prior=round1[:2])
+
+
+def test_moments_grouped_kernel_prior_accumulator(rng):
+    x = jnp.asarray(rng.normal(100, 20, size=(2, 3, 64, 128)), jnp.float32)
+    round1 = isla_moments_grouped_pallas(x, BOUNDS_ARR, tm=64,
+                                         interpret=True)
+    merged = isla_moments_grouped_pallas(x, BOUNDS_ARR, tm=64,
+                                         interpret=True, prior=round1)
+    np.testing.assert_allclose(np.asarray(merged), 2 * np.asarray(round1),
+                               rtol=1e-6)
+
+
 def test_pilot_stats_kernel(rng):
     x = jnp.asarray(rng.normal(100, 20, size=(256, 128)), jnp.float32)
     got = pilot_stats_pallas(x, tm=64, interpret=True)

@@ -7,14 +7,14 @@ from repro.core.multiquery import MultiQueryExecutor
 from repro.launch.serve import IslaAdmissionLoop, _synthetic_grouped_blocks
 
 
-def _loop(max_batch=64, n_groups=3):
+def _loop(max_batch=64, n_groups=3, **kw):
     samplers = _synthetic_grouped_blocks(n_blocks=6, n_groups=n_groups,
                                          rows=4000, seed=0)
     ex = MultiQueryExecutor(samplers, [10 ** 6] * 6,
                             params=IslaParams(e=0.5),
                             group_domains={"region": n_groups})
     return IslaAdmissionLoop(ex, np.random.default_rng(1),
-                             max_batch=max_batch)
+                             max_batch=max_batch, **kw)
 
 
 def test_tick_answers_admitted_queries():
@@ -50,6 +50,48 @@ def test_empty_tick_is_noop():
     loop = _loop()
     assert loop.tick() == []
     assert loop.answered == []
+
+
+def test_incremental_ticks_reuse_warm_store():
+    """A repeat predicate in a later tick is served from the warm store:
+    zero new samples, and the loop's cumulative draw counter stops."""
+    loop = _loop(incremental=True)
+    q = IslaQuery(e=0.5, agg="AVG", group_by="region")
+    loop.submit(q)
+    (first,) = loop.tick()
+    assert first.answer.new_samples > 0
+    drawn_after_first = loop.samples_drawn
+    assert drawn_after_first >= first.answer.new_samples
+    loop.submit(q)
+    (second,) = loop.tick()
+    assert second.answer.new_samples == 0
+    assert loop.samples_drawn == drawn_after_first
+    assert second.answer.value == first.answer.value  # same warm moments
+
+
+def test_incremental_deadline_budget_refines_over_ticks():
+    """A tight tick budget degrades the bound honestly; repeating the
+    query over ticks tops the store up until the bound is earned."""
+    loop = _loop(incremental=True, deadline_samples=200)
+    q = IslaQuery(e=0.2, agg="AVG")
+    loop.submit(q)
+    (t0,) = loop.tick()
+    assert t0.answer.new_samples <= 200
+    assert t0.answer.error_bound is None  # budget-starved
+    bounds = []
+    for _ in range(60):
+        loop.submit(q)
+        (t,) = loop.tick()
+        assert t.answer.new_samples <= 200
+        bounds.append(t.answer.error_bound)
+        if bounds[-1] is not None:
+            break
+    assert bounds[-1] == 0.2  # eventually earned, 200 samples per tick
+
+
+def test_deadline_budget_requires_incremental():
+    with pytest.raises(ValueError, match="incremental"):
+        _loop(deadline_samples=100)
 
 
 def test_mixed_modes_share_passes_within_tick():
