@@ -29,7 +29,8 @@ from .engine import (IslaQuery, aggregate, aggregate_array, baseline_sample,
 from .summarize import summarize
 from .baselines import mv_avg, mvb_avg, uniform_avg
 from .noniid import aggregate_noniid, block_leverages
-from .moment_store import MomentStore, split_budget
+from .moment_store import (DeviceMomentStore, DeviceStack, MomentStore,
+                           iter_chunked_draws, split_budget)
 from .online import OnlineBlockState, continue_block
 from .extremes import aggregate_extreme, block_rate_leverages
 from .multiquery import (GroupAnswer, MultiQueryExecutor, QueryAnswer,
@@ -55,7 +56,8 @@ __all__ = [
     "run_block", "run_blocks_batched", "sample_blocks_batched",
     "sample_moments_batch", "summarize",
     "mv_avg", "mvb_avg", "uniform_avg", "aggregate_noniid",
-    "block_leverages", "MomentStore", "split_budget", "StoreKey",
+    "block_leverages", "MomentStore", "DeviceMomentStore", "DeviceStack",
+    "iter_chunked_draws", "split_budget", "StoreKey",
     "OnlineBlockState", "continue_block",
     "aggregate_extreme", "block_rate_leverages",
     "GroupAnswer", "MultiQueryExecutor", "QueryAnswer", "QueryPlan",

@@ -185,6 +185,247 @@ def phase2(mom_s: jnp.ndarray, mom_l: jnp.ndarray, sketch0: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Device-resident tick: tagged Phase 1 + totals + Phase 2 + group stats in
+# ONE jitted launch, continuing from donated resident moment buffers.
+# ---------------------------------------------------------------------------
+
+
+def h2d(x, dtype=None) -> jnp.ndarray:
+    """The single sanctioned host->device upload of the device-resident
+    serving path.  Every array the steady-state tick ships to the device
+    (fresh sample values and their segment tags — never moments) goes
+    through here, so tests can count crossings and wrap the rest of the
+    tick in a ``jax.transfer_guard("disallow")``."""
+    with jax.transfer_guard("allow"):
+        return jnp.asarray(x, dtype=dtype)
+
+
+def _segment_carry_sum(prior: jnp.ndarray, cols, seg: jnp.ndarray,
+                       n_segments: int) -> jnp.ndarray:
+    """Carry-prepend segmented sum: each segment's resident total is
+    prepended to the scatter stream as one extra weight row, so the fold
+    is ``((carry + a1) + a2) + ...`` — the identical left fold the host
+    ``np.bincount`` carry performs (``engine._segment_moment_rows``).
+    XLA's sequential scatter-add makes this bit-identical to the host
+    path when the store runs float64.  All columns ride ONE 2-D scatter
+    (row-wide updates) — an order of magnitude cheaper than per-column
+    scatters on CPU XLA, with the same per-column fold order."""
+    ids2 = jnp.concatenate([jnp.arange(n_segments, dtype=seg.dtype), seg])
+    data = jnp.concatenate([prior, jnp.stack(cols, axis=1)])
+    return jax.ops.segment_sum(data, ids2, num_segments=n_segments)
+
+
+def group_row_stats(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+                    totals: jnp.ndarray, partials: jnp.ndarray,
+                    n_sampled: jnp.ndarray, sizes: jnp.ndarray,
+                    n_groups_list, min_region_count: float) -> jnp.ndarray:
+    """Per-group statistics rows, reduced on device so the host never
+    reads per-cell moments.  One row per (store, group); columns:
+
+      0 n_g            matching samples
+      1 w_g            estimated matching population (size * cnt / drawn)
+      2 sum p*w        partials weighted by w (group leverage mean num.)
+      3 sum ex2*w      per-cell E[x^2] weighted by w
+      4 s1_g           plain sample sum
+      5 s2_g           plain sample square sum
+      6 degraded       #populated cells that hit the empty-region fallback
+      7 sum ex2*size   catalog-weighted E[x^2] numerator (visited cells)
+      8 sum size       catalog-weighted denominator (visited cells)
+
+    Cells are (group, block)-contiguous per stacked store
+    (``n_groups_list`` gives each store's static cardinality), so every
+    reduction is a plain reshape-sum over the block axis — no scatter.
+    """
+    cnt, s1, s2 = totals[:, 0], totals[:, 1], totals[:, 2]
+    per_ex2 = s2 / jnp.maximum(cnt, 1.0)
+    visited = (cnt > 0).astype(cnt.dtype)
+    fallback = ((mom_s[:, 0] < min_region_count)
+                | (mom_l[:, 0] < min_region_count)
+                ).astype(cnt.dtype) * visited
+    n_b = n_sampled.shape[0] // len(n_groups_list)
+    out = []
+    o = 0
+    for k, g in enumerate(n_groups_list):
+        sl = slice(o, o + g * n_b)
+        shape = (g, n_b)
+        drawn = n_sampled[k * n_b:(k + 1) * n_b][None, :]
+        bsize = sizes[k * n_b:(k + 1) * n_b][None, :]
+        cnt_k = cnt[sl].reshape(shape)
+        w = bsize * cnt_k / jnp.maximum(drawn, 1.0)
+        ex2_k = per_ex2[sl].reshape(shape)
+        vis_k = visited[sl].reshape(shape)
+        out.append(jnp.stack([
+            cnt_k.sum(1), w.sum(1),
+            (partials[sl].reshape(shape) * w).sum(1), (ex2_k * w).sum(1),
+            s1[sl].reshape(shape).sum(1), s2[sl].reshape(shape).sum(1),
+            fallback[sl].reshape(shape).sum(1),
+            (ex2_k * bsize * vis_k).sum(1), (bsize * vis_k).sum(1),
+        ], axis=1))
+        o += g * n_b
+    return jnp.concatenate(out) if len(out) > 1 else out[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "mode", "geometry", "n_groups_list"),
+    donate_argnums=(0, 1, 2, 3))
+def fused_tick(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+               totals: jnp.ndarray, n_sampled: jnp.ndarray,
+               values: jnp.ndarray, seg: jnp.ndarray, quotas: jnp.ndarray,
+               bounds: jnp.ndarray, sketch0: jnp.ndarray,
+               sizes: jnp.ndarray, *, params: IslaParams,
+               mode: str = "calibrated", geometry=None,
+               n_groups_list=(1,)):
+    """One device-resident continuation round as a single fused launch.
+
+    The four leading state operands are DONATED: the tick consumes the
+    resident buffers and returns their successors, so steady state never
+    re-ships moments host<->device — the fresh ``values``/``seg``/
+    ``quotas`` sample upload is the only h2d crossing, and only the
+    per-group stats rows and per-cell partial answers come back.
+
+    ``values`` are pre-scaled/shifted on the host (sample prep, not
+    moments); ``seg`` may contain ``n_cells`` as a drop segment for
+    bucket padding (``n_cells + 1`` segments are reduced, the overflow
+    row discarded) so the jit does not retrace on every tick's matched-
+    sample count.  ``sketch0`` is per-cell, so stacked stores that
+    re-anchored independently still solve in one launch.
+
+    Returns ``(mom_s', mom_l', totals', n_sampled', partials, rows)`` —
+    ``rows`` per ``group_row_stats``.
+    """
+    n_cells = mom_s.shape[0]
+    # One 11-column carry-prepend scatter folds the whole pass: S and L
+    # region moments plus the plain totals, each column's fold order
+    # identical to the host bincount carry (bit-exact in float64).  The
+    # extra pad row is the bucket-padding drop segment.
+    v = values
+    s_lo, s_hi, l_lo, l_hi = bounds[0], bounds[1], bounds[2], bounds[3]
+    m_s = ((v > s_lo) & (v < s_hi)).astype(v.dtype)
+    m_l = ((v > l_lo) & (v < l_hi)).astype(v.dtype)
+    v2 = v * v
+    v3 = v2 * v
+    ones = jnp.ones_like(v)
+    pad = jnp.zeros((1, 11), mom_s.dtype)
+    prior = jnp.concatenate(
+        [jnp.concatenate([mom_s, mom_l, totals], axis=1), pad])
+    merged = _segment_carry_sum(
+        prior, [m_s, v * m_s, v2 * m_s, v3 * m_s,
+                m_l, v * m_l, v2 * m_l, v3 * m_l,
+                ones, v, v2], seg, n_cells + 1)[:n_cells]
+    mom_s, mom_l = merged[:, 0:4], merged[:, 4:8]
+    totals = merged[:, 8:11]
+    n_sampled = n_sampled + jnp.tile(quotas, len(n_groups_list))
+    partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
+                      geometry=geometry)
+    rows = group_row_stats(mom_s, mom_l, totals, partials, n_sampled,
+                           sizes, n_groups_list,
+                           float(params.min_region_count))
+    return mom_s, mom_l, totals, n_sampled, partials, rows
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "mode", "geometry", "n_groups_list",
+                     "gid_slots", "valid_slots"),
+    donate_argnums=(0, 1, 2, 3))
+def fused_tick_dense(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+                     totals: jnp.ndarray, n_sampled: jnp.ndarray,
+                     values2d: jnp.ndarray, pad_valid: jnp.ndarray,
+                     quotas: jnp.ndarray, gid_panes, valid_panes,
+                     bounds: jnp.ndarray, sketch0: jnp.ndarray,
+                     sizes: jnp.ndarray, *, params: IslaParams,
+                     mode: str = "calibrated", geometry=None,
+                     n_groups_list=(1,), gid_slots=(-1,),
+                     valid_slots=(-1,)):
+    """``fused_tick`` on the dense block-major layout: Phase 1 as one
+    batched contraction instead of a scatter.
+
+    The serving draw is per-block contiguous, so the tick's samples pack
+    into a (n_blocks, quota_max) pane (``pad_valid`` zeroes the ragged
+    tail).  The 11 weight columns (S/L region moments + plain totals)
+    contract against a per-key (group one-hot x predicate) matrix in one
+    ``dot_general`` over the quota axis — the MXU-shaped form of Alg. 1,
+    and ~4x faster than the scatter on CPU XLA too.  The delta is added
+    onto the donated resident moments (plain vector add, not the
+    bit-exact carry fold — the float64 bit-parity contract belongs to
+    the tagged ``fused_tick``; this is the fp32 serving hot path).
+
+    Pane sharing is STATIC: ``gid_panes`` / ``valid_panes`` hold each
+    distinct uploaded (n_blocks, quota_max) GROUP BY / predicate pane
+    once, and the per-store ``gid_slots`` / ``valid_slots`` index into
+    them (-1 = ungrouped / unpredicated).  Keys sharing a GROUP BY slot
+    ride ONE contraction — their (predicate-masked) weight columns
+    concatenate along the moment axis, so k such keys cost one batched
+    GEMM, not k (identity of traced operands cannot be detected inside
+    jit, hence the static slots).  ``n_groups_list`` gives each store's
+    static cardinality.
+    """
+    dt = mom_s.dtype
+    v = values2d
+    s_lo, s_hi, l_lo, l_hi = bounds[0], bounds[1], bounds[2], bounds[3]
+    ms = ((v > s_lo) & (v < s_hi)).astype(dt) * pad_valid
+    ml = ((v > l_lo) & (v < l_hi)).astype(dt) * pad_valid
+    v2 = v * v
+    v3 = v2 * v
+    w = jnp.stack([ms, v * ms, v2 * ms, v3 * ms,
+                   ml, v * ml, v2 * ml, v3 * ml,
+                   pad_valid, v * pad_valid, v2 * pad_valid], axis=-1)
+    n_b = values2d.shape[0]
+    parts = [None] * len(n_groups_list)
+    shared = {}  # gid slot -> [(key index, valid slot), ...]
+    for i, (gslot, vslot, g) in enumerate(zip(gid_slots, valid_slots,
+                                              n_groups_list)):
+        if g == 1:
+            # Ungrouped key: a plain quota-axis reduction, no one-hot.
+            vk = pad_valid if vslot < 0 else valid_panes[vslot]
+            parts[i] = (w * vk[..., None]).sum(axis=1)         # (B, 11)
+        else:
+            shared.setdefault(gslot, []).append((i, vslot))
+    for gslot, members in shared.items():
+        g = n_groups_list[members[0][0]]
+        oh = jax.nn.one_hot(gid_panes[gslot], g, dtype=dt)
+        w_cat = jnp.concatenate(
+            [w if vslot < 0 else w * valid_panes[vslot][..., None]
+             for _, vslot in members], axis=2)          # (B, q, 11k)
+        blk = jax.lax.dot_general(
+            w_cat, oh, (((1,), (1,)), ((0,), (0,))))    # (B, 11k, G)
+        for j, (i, _) in enumerate(members):
+            sub = blk[:, 11 * j:11 * (j + 1), :]
+            parts[i] = jnp.transpose(sub, (2, 0, 1)).reshape(g * n_b, 11)
+    delta = jnp.concatenate(parts, axis=0)              # (C, 11)
+    mom_s = mom_s + delta[:, 0:4]
+    mom_l = mom_l + delta[:, 4:8]
+    totals = totals + delta[:, 8:11]
+    n_sampled = n_sampled + jnp.tile(quotas, len(n_groups_list))
+    partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
+                      geometry=geometry)
+    rows = group_row_stats(mom_s, mom_l, totals, partials, n_sampled,
+                           sizes, n_groups_list,
+                           float(params.min_region_count))
+    return mom_s, mom_l, totals, n_sampled, partials, rows
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "mode", "geometry", "n_groups_list"))
+def fused_solve(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+                totals: jnp.ndarray, n_sampled: jnp.ndarray,
+                sketch0: jnp.ndarray, sizes: jnp.ndarray, *,
+                params: IslaParams, mode: str = "calibrated",
+                geometry=None, n_groups_list=(1,)):
+    """The zero-draw tick: re-solve resident moments without touching the
+    state (a warm repeat whose deficit is <= 0).  No donation — the
+    resident buffers stay live — and no h2d operand at all."""
+    partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
+                      geometry=geometry)
+    rows = group_row_stats(mom_s, mom_l, totals, partials, n_sampled,
+                           sizes, n_groups_list,
+                           float(params.min_region_count))
+    return partials, rows
+
+
+# ---------------------------------------------------------------------------
 # Pilot + end-to-end distributed mean.
 # ---------------------------------------------------------------------------
 

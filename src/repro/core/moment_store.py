@@ -24,6 +24,15 @@ vectorized §VII-A loop (draw, merge, re-run batched Phase 2), and
 ``split_budget`` is the deadline-aware allocator the serving tier uses to
 divide a tick's sample budget across warm stores by marginal-error
 reduction.
+
+The DEVICE-RESIDENT layer (PR 4) keeps that state where the compute is:
+``DeviceMomentStore`` holds the same rows as jax arrays between ticks,
+``DeviceStack`` concatenates the warm stores of a mode-group onto one
+stacked cell axis, and a continuation round is ONE fused donated launch
+(``distributed.fused_tick`` / ``fused_tick_dense``) — the host touches
+only scalar answers and O(groups) statistics in steady state.
+``iter_chunked_draws`` is the SHARED chunked draw loop both serving draw
+paths ride (the RNG-order / quota-padding / round-count contract).
 """
 from __future__ import annotations
 
@@ -33,11 +42,81 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from .engine import (Sampler, block_quotas, phase1_sampling_batch,
-                     phase2_iteration_batch, sample_moments_batch)
+from .engine import (Sampler, block_quotas, flat_segments,
+                     phase1_sampling_batch, phase2_iteration_batch,
+                     sample_moments_batch)
 from .modulation import ModulationBatchResult
 from .summarize import summarize
 from .types import Boundaries, IslaParams
+
+
+@dataclasses.dataclass
+class DrawChunk:
+    """One chunk of the shared chunked block-draw loop (see
+    ``iter_chunked_draws``)."""
+
+    start: int              # first block of the chunk (inclusive)
+    end: int                # one past the last block of the chunk
+    idx: "list[int]"        # blocks actually drawn (quota > 0), block order
+    raws: list              # raw sampler outputs, aligned with ``idx``
+    chunk_quotas: np.ndarray  # (n_blocks,) int64 — this chunk's quota rows
+    first: bool             # True for the first non-empty chunk of the pass
+
+
+def iter_chunked_draws(block_samplers: Sequence[Sampler],
+                       quotas: np.ndarray, rng: np.random.Generator,
+                       chunk_blocks: Optional[int] = None):
+    """THE chunked draw loop: the RNG-order / quota-padding / round-count
+    contract shared by ``multiquery._draw_and_ingest`` (row samplers
+    fanning into several stores) and ``MomentStore.continue_rounds``
+    (scalar samplers into one).  Both paths iterate this generator so they
+    cannot silently diverge:
+
+     * **RNG order** — samplers are invoked strictly in block order, one
+       call per block with that block's full quota; zero-quota blocks are
+       skipped WITHOUT consuming the RNG (deficit top-ups leave satisfied
+       blocks' streams untouched).
+     * **quota padding** — each chunk yields a full-width ``(n_blocks,)``
+       quota row that is zero outside ``[start, end)``, so ingesting a
+       chunk advances every store's cumulative ledger identically to the
+       unchunked pass.
+     * **round count** — exactly one yielded chunk carries ``first=True``
+       (the first chunk that draws anything), so callers count one logical
+       round per pass regardless of chunking; an all-zero pass yields
+       nothing and counts no round.
+    """
+    n_b = len(block_samplers)
+    quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
+    if quotas.shape != (n_b,):
+        raise ValueError(f"quotas must be ({n_b},), got {quotas.shape}")
+    step = n_b if chunk_blocks is None else int(chunk_blocks)
+    if step < 1:
+        raise ValueError(f"chunk_blocks must be >= 1, got {chunk_blocks}")
+    first = True
+    for start in range(0, n_b, step):
+        end = min(start + step, n_b)
+        idx = [j for j in range(start, end) if quotas[j] > 0]
+        if not idx:
+            continue
+        raws = [block_samplers[j](int(quotas[j]), rng) for j in idx]
+        chunk_quotas = np.zeros(n_b, dtype=np.int64)
+        chunk_quotas[start:end] = quotas[start:end]
+        yield DrawChunk(start=start, end=end, idx=idx, raws=raws,
+                       chunk_quotas=chunk_quotas, first=first)
+        first = False
+
+
+def block_deficit(n_sampled: np.ndarray, target_quotas: Sequence[int],
+                  n_blocks: int) -> np.ndarray:
+    """Per-block samples still owed against a target quota — THE deficit
+    formula both store flavors plan with (host ``MomentStore`` and the
+    device mirror share it so host- and device-route planning cannot
+    desynchronize)."""
+    target = np.asarray(target_quotas, dtype=np.int64).reshape(-1)
+    if target.shape != (n_blocks,):
+        raise ValueError(f"target quotas must be ({n_blocks},), got "
+                         f"{target.shape}")
+    return np.maximum(target - n_sampled, 0)
 
 
 @dataclasses.dataclass
@@ -201,21 +280,14 @@ class MomentStore:
                              "grouped stores are fed via multiquery")
         quotas = np.asarray(block_quotas(block_sizes, rate, max_samples),
                             dtype=np.int64)
-        step = self.n_blocks if chunk_blocks is None else int(chunk_blocks)
-        if step < 1:
-            raise ValueError(f"chunk_blocks must be >= 1, got {chunk_blocks}")
-        for start in range(0, self.n_blocks, step):
-            end = min(start + step, self.n_blocks)
-            raws = [np.asarray(block_samplers[j](int(quotas[j]), rng),
-                               dtype=np.float64)
-                    for j in range(start, end)]
-            vals = np.concatenate(raws) + self.shift
-            ids = np.repeat(np.arange(start, end, dtype=np.intp),
-                            quotas[start:end])
-            q = np.zeros(self.n_blocks, dtype=np.int64)
-            q[start:end] = quotas[start:end]
-            self.ingest(vals, ids, q, chunk_size=chunk_size,
-                        count_round=(start == 0))
+        for chunk in iter_chunked_draws(block_samplers, quotas, rng,
+                                        chunk_blocks):
+            vals = np.concatenate([np.asarray(r, dtype=np.float64)
+                                   for r in chunk.raws]) + self.shift
+            ids = np.repeat(np.asarray(chunk.idx, dtype=np.intp),
+                            quotas[chunk.idx])
+            self.ingest(vals, ids, chunk.chunk_quotas,
+                        chunk_size=chunk_size, count_round=chunk.first)
         res = self.solve(params, mode=mode, geometry=geometry)
         if reanchor:
             self.reanchor(res.avg)
@@ -226,11 +298,11 @@ class MomentStore:
     def deficit(self, target_quotas: Sequence[int]) -> np.ndarray:
         """Per-block samples still owed against a target quota (what a new
         query's (e, beta) demands minus what the store already drew)."""
-        target = np.asarray(target_quotas, dtype=np.int64).reshape(-1)
-        if target.shape != (self.n_blocks,):
-            raise ValueError(f"target quotas must be ({self.n_blocks},), "
-                             f"got {target.shape}")
-        return np.maximum(target - self.n_sampled, 0)
+        return block_deficit(self.n_sampled, target_quotas, self.n_blocks)
+
+    def matched_total(self) -> float:
+        """Total matching samples accumulated (the budget splitter's n)."""
+        return float(self.totals[:, 0].sum())
 
     def sample_sigma(self) -> float:
         """ddof-1 sigma of all matching samples seen so far (NaN until two
@@ -241,6 +313,643 @@ class MomentStore:
         mean = float(self.totals[:, 1].sum()) / n
         var = max(float(self.totals[:, 2].sum()) / n - mean * mean, 0.0)
         return math.sqrt(var * n / (n - 1.0))
+
+
+# ---------------------------------------------------------------------------
+# Device-resident stores: the §VII-A state kept where the compute is.
+# ---------------------------------------------------------------------------
+
+
+def _bucket(m: int, floor: int = 256) -> int:
+    """Round a tick's matched-sample count up to a power-of-two bucket so
+    the fused launch does not retrace on every tick (padded slots land in
+    the drop segment)."""
+    b = floor
+    while b < m:
+        b <<= 1
+    return b
+
+
+def _dense_panes(values: np.ndarray, quotas: np.ndarray):
+    """Pack a block-major tagged stream into (n_blocks, quota_bucket)
+    panes for the dense fused tick: row-major assignment through the
+    ragged-quota mask preserves stream order, the pad mask zeroes the
+    tail."""
+    quotas = np.asarray(quotas, dtype=np.int64)
+    qmax = _bucket(int(quotas.max()), floor=8)
+    vmask = np.arange(qmax)[None, :] < quotas[:, None]
+    v2d = np.zeros((quotas.shape[0], qmax), dtype=np.float64)
+    v2d[vmask] = values
+    pad = np.zeros_like(v2d)
+    pad[vmask] = 1.0
+    return v2d, pad, vmask
+
+
+class DeviceMomentStore:
+    """Device-resident mirror of ``MomentStore``: the stacked (group,
+    block) moment rows, totals and per-block draw ledger live as jax
+    arrays BETWEEN ticks, so a continuation round is one fused launch
+    (``distributed.fused_tick``) that consumes the resident buffers via
+    donation and returns their successors — moments never cross the
+    host boundary in steady state.
+
+    Units: moments are stored on the SHIFTED scale (the same contract as
+    the host store) additionally divided by ``scale`` — the fp32-safety
+    lever (ISLA is exactly scale-equivariant).  When jax runs in x64 the
+    store defaults to float64 with ``scale=1.0``, where the carry-prepend
+    segment sums are **bit-identical** to the host bincount path.
+
+    The per-block cumulative draw ledger is kept twice: an int64 host
+    copy (``n_sampled`` — planning/deficit math stays host-side and
+    never touches the device) and a device copy feeding the cell-weight
+    computation inside the launch.
+    """
+
+    def __init__(self, n_blocks: int, n_groups: int, boundaries: Boundaries,
+                 sketch0: float, shift: float, scale: float,
+                 block_sizes: Sequence[int], dtype) -> None:
+        import jax.numpy as jnp
+
+        from . import distributed as D
+
+        if len(block_sizes) != n_blocks:
+            raise ValueError(f"need {n_blocks} block sizes, got "
+                             f"{len(block_sizes)}")
+        self.n_blocks = int(n_blocks)
+        self.n_groups = int(n_groups)
+        self.boundaries = boundaries
+        self.sketch0 = float(sketch0)
+        self.shift = float(shift)
+        self.scale = float(scale)
+        self.block_sizes = [int(b) for b in block_sizes]
+        self.dtype = dtype
+        n_cells = self.n_groups * self.n_blocks
+        # Resident state: owned directly until a DeviceStack adopts the
+        # store, after which the stacked tensors are authoritative and
+        # these hold None (see the properties below).
+        self._owner = None
+        self._mom_s = jnp.zeros((n_cells, 4), dtype)
+        self._mom_l = jnp.zeros((n_cells, 4), dtype)
+        self._totals = jnp.zeros((n_cells, 3), dtype)
+        self._ns_dev = jnp.zeros((self.n_blocks,), dtype)
+        self.n_sampled = np.zeros(self.n_blocks, dtype=np.int64)
+        self.rounds = 0
+        # Anchor constants, uploaded once at store creation (cold start —
+        # the steady-state tick never re-ships them).
+        self._bounds = D.h2d(
+            np.asarray(boundaries.as_tuple(), dtype=np.float64)
+            / self.scale, dtype)
+        self._sizes = D.h2d(np.asarray(self.block_sizes, dtype=np.float64),
+                            dtype)
+        self._sketch0_dev = D.h2d(self.sketch0 / self.scale, dtype)
+        # Per-tick stats cache (invalidated by any state change; keyed by
+        # the solve configuration so a different mode re-solves).
+        self._partials = None   # (n_cells,) device, scaled shifted units
+        self._rows = None       # (n_groups, 9) numpy, scaled shifted units
+        self._stats_valid = False
+        self._stats_cfg = None  # (params, mode, geometry) of the cache
+        self._stack = None      # cached single-store DeviceStack
+
+    # -- resident state (stack-aware) --------------------------------------
+
+    def _detach(self) -> None:
+        """Materialize this store's slices out of its owning stack (the
+        whole stack releases — a store cannot leave alone)."""
+        if self._owner is not None:
+            self._owner.release()
+
+    def _state_attr(self, name: str, idx: int):
+        if self._owner is not None:
+            return self._owner.state_slice(self, idx)
+        return getattr(self, name)
+
+    @property
+    def mom_s(self):
+        return self._state_attr("_mom_s", 0)
+
+    @mom_s.setter
+    def mom_s(self, v):
+        self._detach()
+        self._mom_s = v
+        self._stats_valid = False
+
+    @property
+    def mom_l(self):
+        return self._state_attr("_mom_l", 1)
+
+    @mom_l.setter
+    def mom_l(self, v):
+        self._detach()
+        self._mom_l = v
+        self._stats_valid = False
+
+    @property
+    def totals(self):
+        return self._state_attr("_totals", 2)
+
+    @totals.setter
+    def totals(self, v):
+        self._detach()
+        self._totals = v
+        self._stats_valid = False
+
+    @property
+    def _n_sampled_dev(self):
+        return self._state_attr("_ns_dev", 3)
+
+    @_n_sampled_dev.setter
+    def _n_sampled_dev(self, v):
+        self._detach()
+        self._ns_dev = v
+        self._stats_valid = False
+
+    # -- construction ------------------------------------------------------
+
+    @staticmethod
+    def default_dtype():
+        import jax
+        import jax.numpy as jnp
+        return jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+
+    @staticmethod
+    def anchor_scale(boundaries: Boundaries, sketch0: float) -> float:
+        """fp32-safety normalizer frozen with the anchor: the largest
+        magnitude the S/L band can produce (outliers beyond the cuts feed
+        only the plain totals, whose squares stay in fp32 range)."""
+        return max(abs(boundaries.s_lo), abs(boundaries.l_hi),
+                   abs(float(sketch0)), 1e-12)
+
+    @staticmethod
+    def fresh_device(n_blocks: int, boundaries: Boundaries, sketch0: float,
+                     block_sizes: Sequence[int], shift: float = 0.0,
+                     n_groups: int = 1, scale: Optional[float] = None,
+                     dtype=None) -> "DeviceMomentStore":
+        import jax.numpy as jnp
+        if dtype is None:
+            dtype = DeviceMomentStore.default_dtype()
+        # Canonicalize to what the backend will ACTUALLY allocate: a
+        # float64 request without jax_enable_x64 silently gives fp32, and
+        # the scale / bit-exactness / headroom contracts must follow the
+        # real dtype, not the requested one.
+        dtype = jnp.empty((0,), dtype).dtype
+        if scale is None:
+            scale = (1.0 if dtype == jnp.float64
+                     else DeviceMomentStore.anchor_scale(boundaries,
+                                                         sketch0))
+        return DeviceMomentStore(n_blocks, n_groups, boundaries,
+                                 float(sketch0), float(shift), float(scale),
+                                 block_sizes, dtype)
+
+    @staticmethod
+    def from_host(store: MomentStore, block_sizes: Sequence[int],
+                  scale: Optional[float] = None, dtype=None
+                  ) -> "DeviceMomentStore":
+        """One-time cold-start upload of a host store's state (warm
+        promotion); after this the device copy is authoritative."""
+        from . import distributed as D
+
+        dst = DeviceMomentStore.fresh_device(
+            store.n_blocks, store.boundaries, store.sketch0, block_sizes,
+            shift=store.shift, n_groups=store.n_groups, scale=scale,
+            dtype=dtype)
+        p4 = dst.scale ** np.arange(4)
+        dst.mom_s = D.h2d(store.mom_s / p4, dst.dtype)
+        dst.mom_l = D.h2d(store.mom_l / p4, dst.dtype)
+        dst.totals = D.h2d(store.totals / p4[:3], dst.dtype)
+        dst.n_sampled = store.n_sampled.copy()
+        dst._n_sampled_dev = D.h2d(store.n_sampled.astype(np.float64),
+                                   dst.dtype)
+        dst.rounds = store.rounds
+        return dst
+
+    def to_host(self) -> MomentStore:
+        """Download into a host float64 ``MomentStore`` (diagnostics and
+        parity tests — never on the serving tick path)."""
+        p4 = self.scale ** np.arange(4)
+        return MomentStore(
+            n_blocks=self.n_blocks, n_groups=self.n_groups,
+            boundaries=self.boundaries, sketch0=self.sketch0,
+            shift=self.shift,
+            mom_s=np.asarray(self.mom_s, dtype=np.float64) * p4,
+            mom_l=np.asarray(self.mom_l, dtype=np.float64) * p4,
+            totals=np.asarray(self.totals, dtype=np.float64) * p4[:3],
+            n_sampled=self.n_sampled.copy(), rounds=self.rounds)
+
+    # -- properties / planning mirror --------------------------------------
+
+    @property
+    def n_cells(self) -> int:
+        return self.n_groups * self.n_blocks
+
+    @property
+    def total_sampled(self) -> int:
+        return int(self.n_sampled.sum())
+
+    def deficit(self, target_quotas: Sequence[int]) -> np.ndarray:
+        return block_deficit(self.n_sampled, target_quotas, self.n_blocks)
+
+    def _grand_totals(self) -> "tuple[float, float, float]":
+        """(n, s1, s2) over all cells, un-scaled — from the cached group
+        rows when valid (zero device traffic), else three reduced scalars
+        off the resident totals."""
+        if self._stats_valid and self._rows is not None:
+            t = self._rows[:, [0, 4, 5]].sum(axis=0)
+        else:
+            import jax.numpy as jnp
+            t = np.asarray(jnp.sum(self.totals, axis=0), dtype=np.float64)
+        return float(t[0]), float(t[1]) * self.scale, \
+            float(t[2]) * self.scale ** 2
+
+    def matched_total(self) -> float:
+        """Total matching samples accumulated (the budget splitter's n)."""
+        return self._grand_totals()[0]
+
+    def sample_sigma(self) -> float:
+        """ddof-1 sigma of all matching samples — the host ``MomentStore``
+        contract served from device state."""
+        n, s1, s2 = self._grand_totals()
+        if n < 2:
+            return float("nan")
+        mean = s1 / n
+        var = max(s2 / n - mean * mean, 0.0)
+        return math.sqrt(var * n / (n - 1.0))
+
+    # -- ticks -------------------------------------------------------------
+
+    def _own_stack(self) -> "DeviceStack":
+        if (self._owner is not None and not self._owner._released
+                and len(self._owner.stores) == 1):
+            return self._owner
+        if self._stack is None or self._stack._released \
+                or self._stack is not self._owner:
+            self._stack = DeviceStack([self])
+        return self._stack
+
+    def build_seg(self, block_ids: np.ndarray,
+                  group_ids: Optional[np.ndarray] = None,
+                  mask: Optional[np.ndarray] = None,
+                  offset: int = 0) -> np.ndarray:
+        """Flatten (group, block) tags onto this store's cell axis (the
+        engine's ``flat_segments`` contract), mask-filtered, offset for
+        stacked launches.  Returns int32 segment ids aligned with the
+        POST-mask value stream (callers apply the same mask to values)."""
+        block_ids = np.asarray(block_ids).reshape(-1)
+        seg, _ = flat_segments(block_ids.astype(np.intp), self.n_blocks,
+                               group_ids, self.n_groups)
+        if mask is not None:
+            seg = seg[np.asarray(mask, dtype=bool).reshape(-1)]
+        return (seg + offset).astype(np.int32)
+
+    def ingest_tick(self, values: np.ndarray, block_ids: np.ndarray,
+                    quotas: np.ndarray, params: IslaParams, *,
+                    mode: str = "calibrated", geometry=None,
+                    group_ids: Optional[np.ndarray] = None,
+                    mask: Optional[np.ndarray] = None,
+                    count_round: bool = True, layout: str = "auto"):
+        """Single-store convenience tick: merge one tagged pass (values on
+        the shifted scale, same contract as ``MomentStore.ingest``) and
+        re-solve — one fused launch.  Returns ``(partials, rows)`` (device
+        partials in scaled shifted units; see ``DeviceStack.tick``).
+
+        ``layout="auto"`` picks the dense batched-contraction Phase 1
+        when the stream is block-major canonical and the store runs fp32;
+        float64 stores keep the tagged carry-prepend scatter (the
+        bit-exact merge contract).  Force with "dense" / "tagged".
+        """
+        import jax.numpy as jnp
+
+        values = np.asarray(values, dtype=np.float64).reshape(-1)
+        quotas_arr = np.asarray(quotas, dtype=np.int64).reshape(-1)
+        block_ids = np.asarray(block_ids).reshape(-1)
+        if layout == "auto":
+            canonical = np.array_equal(
+                block_ids, np.repeat(np.arange(self.n_blocks),
+                                     quotas_arr))
+            layout = ("dense" if canonical and self.dtype != jnp.float64
+                      else "tagged")
+        if layout == "dense":
+            out = self._own_stack().tick(
+                params, mode=mode, geometry=geometry, values=values,
+                quotas=quotas_arr, dense=([group_ids], [mask]),
+                count_round=count_round)
+        else:
+            seg = self.build_seg(block_ids, group_ids, mask)
+            if mask is not None:
+                values = values[np.asarray(mask, dtype=bool).reshape(-1)]
+            out = self._own_stack().tick(
+                params, mode=mode, geometry=geometry, values=values,
+                seg=seg, quotas=quotas_arr, count_round=count_round)
+        return out[0]
+
+    def solve_device(self, params: IslaParams, mode: str = "calibrated",
+                     geometry=None):
+        """Zero-draw re-solve of the resident moments (cached between
+        state changes; at most one launch, zero h2d)."""
+        return self._own_stack().tick(params, mode=mode,
+                                      geometry=geometry)[0]
+
+    def partials_host(self) -> np.ndarray:
+        """Last solved per-cell partial answers, un-scaled back to the
+        shifted float64 axis (these are answers, not moments)."""
+        if not self._stats_valid or self._partials is None:
+            raise ValueError("no solved partials cached; run a tick or "
+                             "solve_device first")
+        return np.asarray(self._partials, dtype=np.float64) * self.scale
+
+
+class DeviceStack:
+    """A stacked multi-store launch set: the warm stores of one mode-group
+    concatenated onto one (total_cells, 4) moments axis so N predicates'
+    continuation rounds are ONE fused kernel call.
+
+    All member stores must share the frozen anchor (boundaries / shift /
+    scale / dtype / block axis) — guaranteed in the incremental executor,
+    where the anchor is frozen before any store exists.  ``sketch0`` may
+    differ per store (re-anchoring), so the stacked Phase 2 takes a
+    per-cell sketch vector.  Stack constants (cell->block map, group-row
+    segments, catalog sizes) are uploaded once at stack build.
+    """
+
+    def __init__(self, stores: Sequence[DeviceMomentStore]) -> None:
+        import jax.numpy as jnp
+
+        if not stores:
+            raise ValueError("a device stack needs at least one store")
+        first = stores[0]
+        for st in stores:
+            if (st.n_blocks != first.n_blocks
+                    or st.boundaries != first.boundaries
+                    or st.shift != first.shift or st.scale != first.scale
+                    or st.dtype != first.dtype):
+                raise ValueError(
+                    "stacked stores must share the frozen anchor "
+                    "(boundaries, shift, scale, dtype, block axis)")
+        self.stores = list(stores)
+        self.n_blocks = first.n_blocks
+        self.dtype = first.dtype
+        cells = [st.n_cells for st in self.stores]
+        groups = [st.n_groups for st in self.stores]
+        self.offsets = np.concatenate([[0], np.cumsum(cells)])
+        self.row_offsets = np.concatenate([[0], np.cumsum(groups)])
+        self.n_cells = int(self.offsets[-1])
+        self.n_rows = int(self.row_offsets[-1])
+        self.n_groups_list = tuple(groups)
+        self._sizes = (first._sizes if len(self.stores) == 1 else
+                       jnp.concatenate([st._sizes for st in self.stores]))
+        self._bounds = first._bounds
+        self._sk_cells = None  # cached per-cell sketch vector (device)
+        # Adopt the stores: the stacked tensors become the authoritative
+        # resident state (built once — steady ticks donate them in place,
+        # no per-tick concat/split churn).  A store reads its slice
+        # through ``state_slice``; ``release`` materializes the slices
+        # back when the stack dissolves.
+        for st in self.stores:
+            st._detach()
+        if len(self.stores) == 1:
+            st = self.stores[0]
+            self._state = (st._mom_s, st._mom_l, st._totals, st._ns_dev)
+        else:
+            self._state = (
+                jnp.concatenate([st._mom_s for st in self.stores]),
+                jnp.concatenate([st._mom_l for st in self.stores]),
+                jnp.concatenate([st._totals for st in self.stores]),
+                jnp.concatenate([st._ns_dev for st in self.stores]))
+        self._released = False
+        for st in self.stores:
+            st._mom_s = st._mom_l = st._totals = st._ns_dev = None
+            st._owner = self
+
+    # -- state plumbing ----------------------------------------------------
+
+    def state_slice(self, store: DeviceMomentStore, idx: int):
+        """One adopted store's view of the stacked state (idx: 0 mom_s,
+        1 mom_l, 2 totals, 3 device draw ledger) — an eager device slice,
+        for diagnostics/downloads, never on the tick path."""
+        k = next(i for i, st in enumerate(self.stores) if st is store)
+        if idx < 3:
+            return self._state[idx][int(self.offsets[k]):
+                                    int(self.offsets[k + 1])]
+        b = self.n_blocks
+        return self._state[3][k * b:(k + 1) * b]
+
+    def release(self) -> None:
+        """Dissolve the stack: write every store's slices back so each
+        owns its state again (e.g. before a store joins a new stack when
+        the warm key set changes)."""
+        if self._released:
+            return
+        mom_s, mom_l, totals, ns = self._state
+        b = self.n_blocks
+        for k, st in enumerate(self.stores):
+            o0, o1 = int(self.offsets[k]), int(self.offsets[k + 1])
+            st._mom_s, st._mom_l = mom_s[o0:o1], mom_l[o0:o1]
+            st._totals = totals[o0:o1]
+            st._ns_dev = ns[k * b:(k + 1) * b]
+            st._owner = None
+        # Drop the stacked tensors: slicing copied, so keeping them (e.g.
+        # through a stale executor cache entry) would pin a dead copy of
+        # every store's moments in device memory.
+        self._state = None
+        self._sk_cells = None
+        self._released = True
+
+    def _install_stats(self, partials, rows, cfg):
+        rows_np = np.asarray(rows, dtype=np.float64)  # d2h: stats, O(rows)
+        if len(self.stores) == 1:
+            st = self.stores[0]
+            st._partials, st._rows = partials, rows_np
+            st._stats_valid = True
+            st._stats_cfg = cfg
+            return [(partials, rows_np)]
+        out = []
+        for k, st in enumerate(self.stores):
+            o0, o1 = int(self.offsets[k]), int(self.offsets[k + 1])
+            r0, r1 = int(self.row_offsets[k]), int(self.row_offsets[k + 1])
+            st._partials = partials[o0:o1]
+            st._rows = rows_np[r0:r1]
+            st._stats_valid = True
+            st._stats_cfg = cfg
+            out.append((st._partials, st._rows))
+        return out
+
+    # fp32 accumulators lose integer exactness at 2^24; warn with margin
+    # so an eternal serving loop cannot silently stop accumulating.
+    _FP32_COUNT_HEADROOM = 1 << 22
+
+    def _check_fp32_headroom(self, quotas: np.ndarray) -> None:
+        import jax.numpy as jnp
+        if self.dtype == jnp.float64 or getattr(self, "_sat_warned",
+                                                False):
+            return
+        # Per-block cells accumulate per-block draws; the group-stat rows
+        # additionally sum matched counts across a whole store, bounded
+        # by its TOTAL draws — both must stay inside fp32's exact-integer
+        # range (2^24, checked with margin).
+        worst_block = max(int(st.n_sampled.max()) for st in self.stores)
+        worst_total = max(int(st.n_sampled.sum()) for st in self.stores)
+        if (worst_block + int(quotas.max()) > self._FP32_COUNT_HEADROOM
+                or worst_total + int(quotas.sum())
+                > 4 * self._FP32_COUNT_HEADROOM):
+            import warnings
+            warnings.warn(
+                "device store draw counts are approaching the float32 "
+                "accumulator limit (2^24); further merges will degrade "
+                "silently — run under jax_enable_x64 or reset_stores() "
+                "to re-anchor", RuntimeWarning, stacklevel=3)
+            self._sat_warned = True
+
+    def _sketch0_cells(self):
+        # Broadcast from each store's resident device scalar — a plain
+        # device op (cached across ticks), so warm ticks create no
+        # scalar h2d transfers.
+        import jax.numpy as jnp
+        if self._sk_cells is None:
+            if len(self.stores) == 1:
+                st = self.stores[0]
+                self._sk_cells = jnp.broadcast_to(st._sketch0_dev,
+                                                  (st.n_cells,))
+            else:
+                self._sk_cells = jnp.concatenate([
+                    jnp.broadcast_to(st._sketch0_dev, (st.n_cells,))
+                    for st in self.stores])
+        return self._sk_cells
+
+    # -- the tick ----------------------------------------------------------
+
+    def tick(self, params: IslaParams, mode: str = "calibrated",
+             geometry=None, values: Optional[np.ndarray] = None,
+             seg: Optional[np.ndarray] = None,
+             quotas: Optional[np.ndarray] = None,
+             dense=None, count_round: bool = True):
+        """One continuation round for every store in the stack.
+
+        Two sample payloads, one launch either way:
+
+         * tagged — ``values`` (shifted scale, float64 host, matched
+           samples only) aligned with ``seg`` (stacked cell ids from
+           ``DeviceMomentStore.build_seg`` with this stack's offsets);
+           the carry-prepend scatter, bit-identical to the host fold
+           when the store runs float64.
+         * dense — ``values`` is the FULL block-major chunk stream and
+           ``dense=(key_gids, key_valids)`` carries per-store (m,) GROUP
+           BY codes / predicate masks (None where absent); Phase 1 runs
+           as one batched contraction (``fused_tick_dense``) — the fast
+           fp32 serving layout.
+
+        ``quotas`` is the pass's per-block draw count.  With no draw the
+        resident moments are re-solved (served from the stats cache when
+        nothing changed — zero launches, zero transfers).
+
+        Returns ``[(partials, rows), ...]`` per store — device partial
+        answers and the numpy group-stat rows, both in scaled shifted
+        units (``DeviceMomentStore.partials_host`` / the executor's
+        composer un-scale).
+        """
+        import jax.numpy as jnp
+
+        from . import distributed as D
+
+        scale = self.stores[0].scale
+        if geometry is not None:
+            # kappa is dimensionless; b0 lives on the value axis and rides
+            # the same scale normalization as the moments.
+            geometry = (float(geometry[0]), float(geometry[1]) / scale)
+        if scale != 1.0:
+            # thr is an ABSOLUTE iteration threshold on the value axis:
+            # left unscaled it would stop the shrink log2(scale) rounds
+            # early on the normalized moments (ISLA's scale equivariance
+            # covers the estimator, not the stopping rule).
+            params = params.replace(thr=params.thr / scale)
+        if self._released:
+            raise ValueError("stack was released (a store joined another "
+                             "stack); build a fresh DeviceStack")
+        cfg = (params, mode, geometry)
+        n_draw = 0 if quotas is None else int(np.sum(quotas))
+        if values is None or n_draw == 0:
+            if all(st._stats_valid and st._stats_cfg == cfg
+                   for st in self.stores):
+                return [(st._partials, st._rows) for st in self.stores]
+            mom_s, mom_l, totals, ns = self._state
+            partials, rows = D.fused_solve(
+                mom_s, mom_l, totals, ns, self._sketch0_cells(),
+                self._sizes, params=params, mode=mode, geometry=geometry,
+                n_groups_list=self.n_groups_list)
+            return self._install_stats(partials, rows, cfg)
+
+        values = np.asarray(values, dtype=np.float64).reshape(-1)
+        quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
+        if quotas.shape != (self.n_blocks,):
+            raise ValueError(f"quotas must be ({self.n_blocks},), got "
+                             f"{quotas.shape}")
+        self._check_fp32_headroom(quotas)
+        mom_s, mom_l, totals, ns = self._state
+        # All h2d crossings below are the tick's fresh samples and their
+        # tags — moments never cross (the per-store tiling of the quota
+        # row happens inside the launch).
+        q_dev = D.h2d(quotas.astype(np.float64), self.dtype)
+        if dense is not None:
+            key_gids, key_valids = dense
+            v2d, pad, vmask = _dense_panes(values / scale, quotas)
+            # Dedupe shared panes by host-array identity into slot
+            # tuples: one upload per distinct pane, and the STATIC slot
+            # indices let the fused program batch keys that share a
+            # GROUP BY pane into one contraction (traced-operand
+            # identity is invisible inside jit).
+            gid_panes, valid_panes = [], []
+            gid_slots, valid_slots = [], []
+            seen_g, seen_v = {}, {}
+            for gids, valid in zip(key_gids, key_valids):
+                if gids is None:
+                    gid_slots.append(-1)
+                elif id(gids) in seen_g:
+                    gid_slots.append(seen_g[id(gids)])
+                else:
+                    g2d = np.zeros(v2d.shape, dtype=np.int32)
+                    g2d[vmask] = np.asarray(gids).reshape(-1)
+                    seen_g[id(gids)] = len(gid_panes)
+                    gid_slots.append(len(gid_panes))
+                    gid_panes.append(D.h2d(g2d, jnp.int32))
+                if valid is None:
+                    valid_slots.append(-1)
+                elif id(valid) in seen_v:
+                    valid_slots.append(seen_v[id(valid)])
+                else:
+                    m2d = np.zeros(v2d.shape, dtype=np.float64)
+                    m2d[vmask] = np.asarray(valid, dtype=np.float64
+                                            ).reshape(-1)
+                    seen_v[id(valid)] = len(valid_panes)
+                    valid_slots.append(len(valid_panes))
+                    valid_panes.append(D.h2d(m2d, self.dtype))
+            mom_s, mom_l, totals, ns, partials, rows = D.fused_tick_dense(
+                mom_s, mom_l, totals, ns, D.h2d(v2d, self.dtype),
+                D.h2d(pad, self.dtype), q_dev, tuple(gid_panes),
+                tuple(valid_panes), self._bounds, self._sketch0_cells(),
+                self._sizes, params=params, mode=mode, geometry=geometry,
+                n_groups_list=self.n_groups_list,
+                gid_slots=tuple(gid_slots),
+                valid_slots=tuple(valid_slots))
+        else:
+            seg = np.asarray(seg, dtype=np.int32).reshape(-1)
+            if values.shape != seg.shape:
+                raise ValueError("values and seg must align")
+            m = values.size
+            bucket = _bucket(m)
+            v_pad = np.zeros(bucket, dtype=np.float64)
+            v_pad[:m] = values / scale
+            s_pad = np.full(bucket, self.n_cells, dtype=np.int32)  # drop
+            s_pad[:m] = seg
+            mom_s, mom_l, totals, ns, partials, rows = D.fused_tick(
+                mom_s, mom_l, totals, ns, D.h2d(v_pad, self.dtype),
+                D.h2d(s_pad, jnp.int32), q_dev, self._bounds,
+                self._sketch0_cells(), self._sizes, params=params,
+                mode=mode, geometry=geometry,
+                n_groups_list=self.n_groups_list)
+        self._state = (mom_s, mom_l, totals, ns)
+        for st in self.stores:
+            st.n_sampled = st.n_sampled + quotas
+            if count_round:
+                st.rounds += 1
+        return self._install_stats(partials, rows, cfg)
 
 
 def proportional_allocate(amounts: np.ndarray, budget: int) -> np.ndarray:

@@ -66,7 +66,8 @@ import numpy as np
 from .boundaries import make_boundaries
 from .engine import (MODES, IslaQuery, block_quotas,
                      phase2_iteration_batch, resolve_mode_and_geometry)
-from .moment_store import (MomentStore, proportional_allocate,
+from .moment_store import (DeviceMomentStore, DeviceStack, MomentStore,
+                           iter_chunked_draws, proportional_allocate,
                            split_budget)
 from .preestimation import (required_sample_size, run_pilot, sampling_rate,
                             z_score)
@@ -277,14 +278,65 @@ class MultiQueryExecutor:
         self._anchor = None
         self._sigma_cache = {}  # (group_by, where) -> per-group sigmas,
         #                         valid only against the frozen anchor pilot
+        # Device-resident serving state (route="device", incremental):
+        # per-StoreKey device mirrors holding the authoritative moments,
+        # and the stacked launch sets built over them per mode-group.
+        self._device_stores: "dict[StoreKey, DeviceMomentStore]" = {}
+        self._device_stacks: dict = {}
 
     def reset_stores(self) -> None:
-        """Drop all warm stores and the pilot anchor (e.g. after the
-        underlying table changed enough that frozen boundaries went stale).
-        The next incremental run re-pilots and starts cold."""
+        """Drop all warm stores (host and device-resident) and the pilot
+        anchor (e.g. after the underlying table changed enough that frozen
+        boundaries went stale).  The next incremental run re-pilots and
+        starts cold."""
         self._stores.clear()
         self._anchor = None
         self._sigma_cache.clear()
+        self._device_stores.clear()
+        self._device_stacks.clear()
+
+    # -- staleness ---------------------------------------------------------
+
+    # Drift-guard defaults: pilot re-draw size and the sigma-ratio band a
+    # stable table should stay inside.
+    _DRIFT_PILOT = 512
+    _DRIFT_SIGMA_RATIO = 2.0
+
+    def check_drift(self, rng: np.random.Generator,
+                    n: Optional[int] = None,
+                    z_thresh: float = 6.0,
+                    sigma_ratio: Optional[float] = None) -> bool:
+        """Cheap staleness probe against the frozen anchor: re-draw a
+        small pilot (block-proportional, like ``run_pilot``) and compare
+        its mean/sigma with the stored ``sketch0``/``sigma``.
+
+        Returns True when the anchor no longer describes the table — the
+        re-drawn mean sits more than ``z_thresh`` standard errors from the
+        frozen sketch (under the larger of the two sigmas, so a variance
+        blow-up cannot mask a mean shift), or the sigma ratio leaves
+        ``[1/sigma_ratio, sigma_ratio]``.  False (no drift) when no
+        anchor is frozen yet.
+        """
+        if self._anchor is None:
+            return False
+        pilot = self._anchor[0]
+        n = self._DRIFT_PILOT if n is None else int(n)
+        sigma_ratio = (self._DRIFT_SIGMA_RATIO if sigma_ratio is None
+                       else float(sigma_ratio))
+        total = float(sum(self.block_sizes))
+        draws = []
+        for s, bs in zip(self.block_samplers, self.block_sizes):
+            nj = max(1, int(round(n * bs / total)))
+            draws.append(self._measure_of(self._as_rows(s(nj, rng))))
+        probe = np.concatenate(draws)
+        m = float(np.mean(probe))
+        sig = (float(np.std(probe, ddof=1)) if probe.size > 1
+               else pilot.sigma)
+        sig_ref = max(pilot.sigma, sig, 1e-12)
+        z_obs = abs(m - pilot.sketch0) / (sig_ref / math.sqrt(probe.size))
+        ratio = max(sig, 1e-12) / max(pilot.sigma, 1e-12)
+        return bool(z_obs > z_thresh
+                    or ratio > sigma_ratio or ratio < 1.0 / sigma_ratio)
 
     # -- row plumbing ------------------------------------------------------
 
@@ -313,21 +365,33 @@ class MultiQueryExecutor:
         are never materialized whole, and the store's carry contract keeps
         the accumulated moments bit-identical to the unchunked draw.
         """
-        n_b = len(self.block_samplers)
-        quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
-        step = n_b if chunk_blocks is None else int(chunk_blocks)
-        if step < 1:
-            raise ValueError(f"chunk_blocks must be >= 1, got {chunk_blocks}")
-        expected_cols = None  # column agreement holds across the WHOLE pass
         counted = set()       # one logical round per store per pass
-        for start in range(0, n_b, step):
-            end = min(start + step, n_b)
-            idx = [j for j in range(start, end) if quotas[j] > 0]
-            if not idx:
-                continue
-            raws = [self._as_rows(self.block_samplers[j](int(quotas[j]),
-                                                         rng))
-                    for j in idx]
+        for chunk, columns, block_ids in self._iter_row_chunks(
+                quotas, rng, chunk_blocks):
+            values = self._measure_of(columns) + shift
+            for key, store in group_stores.items():
+                where, group_by = key
+                mask = where.mask(columns) if where is not None else None
+                gids = (self._group_ids(group_by, columns)[0]
+                        if group_by is not None else None)
+                store.ingest(values, block_ids, chunk.chunk_quotas,
+                             group_ids=gids, mask=mask,
+                             count_round=id(store) not in counted)
+                counted.add(id(store))
+
+    def _iter_row_chunks(self, quotas: np.ndarray,
+                         rng: np.random.Generator,
+                         chunk_blocks: Optional[int]):
+        """Row-sampler adapter over the SHARED chunked draw loop
+        (``moment_store.iter_chunked_draws`` — the same RNG-order /
+        quota-padding / round-count contract ``MomentStore.
+        continue_rounds`` obeys): yields ``(chunk, columns, block_ids)``
+        per chunk with cross-chunk column-agreement validation."""
+        quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
+        expected_cols = None  # column agreement holds across the WHOLE pass
+        for chunk in iter_chunked_draws(self.block_samplers, quotas, rng,
+                                        chunk_blocks):
+            raws = [self._as_rows(r) for r in chunk.raws]
             for r in raws:
                 if expected_cols is None:
                     expected_cols = set(r)
@@ -337,20 +401,9 @@ class MultiQueryExecutor:
                         f"{sorted(expected_cols)} vs {sorted(r)}")
             columns = {k: np.concatenate([r[k] for r in raws])
                        for k in expected_cols}
-            block_ids = np.repeat(np.asarray(idx, dtype=np.intp),
-                                  [int(quotas[j]) for j in idx])
-            values = self._measure_of(columns) + shift
-            chunk_quotas = np.zeros(n_b, dtype=np.int64)
-            chunk_quotas[start:end] = quotas[start:end]
-            for key, store in group_stores.items():
-                where, group_by = key
-                mask = where.mask(columns) if where is not None else None
-                gids = (self._group_ids(group_by, columns)[0]
-                        if group_by is not None else None)
-                store.ingest(values, block_ids, chunk_quotas,
-                             group_ids=gids, mask=mask,
-                             count_round=id(store) not in counted)
-                counted.add(id(store))
+            block_ids = np.repeat(np.asarray(chunk.idx, dtype=np.intp),
+                                  [int(quotas[j]) for j in chunk.idx])
+            yield chunk, columns, block_ids
 
     def _group_ids(self, key: str, columns: Mapping[str, np.ndarray]
                    ) -> Tuple[np.ndarray, int]:
@@ -635,7 +688,11 @@ class MultiQueryExecutor:
         if geometry is not None:
             kappa, b0 = geometry
             dev_geometry = (jnp.float32(kappa), jnp.float32(b0 / scale))
-        avg = phase2(mom_s, mom_l, jnp.float32(sketch0 / scale), params,
+        # thr is an absolute stopping threshold on the value axis — it
+        # must ride the same normalization or the shrink stops
+        # log2(scale) rounds early.
+        avg = phase2(mom_s, mom_l, jnp.float32(sketch0 / scale),
+                     params.replace(thr=params.thr / scale),
                      mode=dev_mode, geometry=dev_geometry)
         return np.asarray(avg, dtype=np.float64) * scale
 
@@ -779,6 +836,198 @@ class MultiQueryExecutor:
             plain_mean_all=(tot_mean if n_all else float("nan")),
             n_all=n_all, w_all=w_all,
             degraded_all=bool(degraded_g.any()))
+
+    # -- device-resident execution -----------------------------------------
+
+    @staticmethod
+    def _device_mode(mode: str) -> str:
+        """Host mode -> branchless jnp Phase 2 mode (the loop-based
+        "faithful_cf" alias maps onto the device case table)."""
+        return "faithful" if mode == "faithful_cf" else mode
+
+    def _ensure_device_store(self, mg: ModeGroup, key,
+                             host_store: MomentStore) -> DeviceMomentStore:
+        """The device-resident mirror of one ``StoreKey``.  Created fresh
+        on device (no upload at all) for a cold key; a host store that
+        already accumulated moments (e.g. earlier host-route ticks) is
+        promoted with a one-time cold-start upload.  After this the
+        device copy is authoritative — moments never come back."""
+        skey = StoreKey(where=key[0], group_by=key[1], mode=mg.mode)
+        dst = self._device_stores.get(skey)
+        if dst is None:
+            warm = (host_store.mom_s.any() or host_store.totals.any()
+                    or host_store.n_sampled.any())
+            if warm:
+                dst = DeviceMomentStore.from_host(host_store,
+                                                  self.block_sizes)
+            else:
+                dst = DeviceMomentStore.fresh_device(
+                    host_store.n_blocks, host_store.boundaries,
+                    host_store.sketch0, self.block_sizes,
+                    shift=host_store.shift,
+                    n_groups=host_store.n_groups)
+            self._device_stores[skey] = dst
+        return dst
+
+    def _device_group(self, mg: ModeGroup, group_stores: Mapping
+                      ) -> Tuple[list, dict, DeviceStack]:
+        """One mode-group's stacked launch set: every key's device store
+        concatenated onto one cell axis (``DeviceStack``), cached across
+        ticks so steady state re-uploads nothing."""
+        keys = list(group_stores)
+        dstores = {k: self._ensure_device_store(mg, k, group_stores[k])
+                   for k in keys}
+        ck = (mg.mode,
+              tuple(StoreKey(where=k[0], group_by=k[1], mode=mg.mode)
+                    for k in keys))
+        stack = self._device_stacks.get(ck)
+        if (stack is None or stack._released
+                or [id(s) for s in stack.stores]
+                != [id(dstores[k]) for k in keys]):
+            stack = DeviceStack([dstores[k] for k in keys])
+            # Evict entries the adoption released (a key-set change must
+            # not pin dead stacked-state copies in device memory).
+            self._device_stacks = {
+                k: s for k, s in self._device_stacks.items()
+                if not s._released}
+            self._device_stacks[ck] = stack
+        return keys, dstores, stack
+
+    def _draw_and_tick_device(self, stack: DeviceStack, keys: list,
+                              dstores: dict, draw: np.ndarray,
+                              rng: np.random.Generator, shift: float,
+                              mg: ModeGroup,
+                              chunk_blocks: Optional[int]) -> None:
+        """The device-resident pass: the SAME chunked row draw as the
+        host path (shared ``iter_chunked_draws`` contract — identical RNG
+        stream), but each chunk is folded into every key's store by ONE
+        fused launch over the stacked cells instead of per-key host
+        bincounts."""
+        import jax.numpy as jnp
+
+        dev_mode = self._device_mode(mg.mode)
+        dense = stack.dtype != jnp.float64
+        for chunk, columns, block_ids in self._iter_row_chunks(
+                draw, rng, chunk_blocks):
+            values = self._measure_of(columns) + shift
+            if dense:
+                # Dense block-major payload: the full chunk stream once,
+                # plus each key's (m,) GROUP BY codes / predicate mask —
+                # one batched-contraction launch for the whole stack.
+                key_gids, key_valids = [], []
+                gid_cache, mask_cache = {}, {}  # shared panes dedupe
+                for key in keys:
+                    where, group_by = key
+                    if where is None:
+                        key_valids.append(None)
+                    else:
+                        if where not in mask_cache:
+                            mask_cache[where] = where.mask(columns)
+                        key_valids.append(mask_cache[where])
+                    if group_by is None:
+                        key_gids.append(None)
+                    else:
+                        if group_by not in gid_cache:
+                            gid_cache[group_by] = self._group_ids(
+                                group_by, columns)[0]
+                        key_gids.append(gid_cache[group_by])
+                stack.tick(self.params, mode=dev_mode,
+                           geometry=mg.geometry, values=values,
+                           quotas=chunk.chunk_quotas,
+                           dense=(key_gids, key_valids),
+                           count_round=chunk.first)
+                continue
+            segs, vals = [], []
+            for k_i, key in enumerate(keys):
+                where, group_by = key
+                mask = where.mask(columns) if where is not None else None
+                gids = (self._group_ids(group_by, columns)[0]
+                        if group_by is not None else None)
+                segs.append(dstores[key].build_seg(
+                    block_ids, gids, mask,
+                    offset=int(stack.offsets[k_i])))
+                vals.append(values if mask is None else values[mask])
+            stack.tick(self.params, mode=dev_mode, geometry=mg.geometry,
+                       values=np.concatenate(vals),
+                       seg=np.concatenate(segs),
+                       quotas=chunk.chunk_quotas,
+                       count_round=chunk.first)
+
+    def _keyed_stats_device(self, dst: DeviceMomentStore) -> KeyedPass:
+        """``_keyed_stats`` served from the device tick's group-stat rows:
+        the host reads O(groups) reduced statistics, never per-cell
+        moments.  Per-cell fields of the ``KeyedPass`` are None — the
+        composers only read group-level fields."""
+        rows = dst._rows
+        s = dst.scale
+        n_g = rows[:, 0]
+        w_g = rows[:, 1]
+        populated = w_g > 0
+        safe_w = np.where(populated, w_g, 1.0)
+        mean_g = np.where(populated, rows[:, 2] * s / safe_w, np.nan)
+        ex2_g = np.where(populated, rows[:, 3] * s * s / safe_w, np.nan)
+        s1 = rows[:, 4] * s
+        s2 = rows[:, 5] * s * s
+        safe_n = np.maximum(n_g, 1.0)
+        samp_mean = s1 / safe_n
+        samp_var = np.maximum(s2 / safe_n - samp_mean ** 2, 0.0)
+        sigma_g = np.where(
+            n_g >= 2,
+            np.sqrt(samp_var * safe_n / np.maximum(safe_n - 1.0, 1.0)),
+            np.nan)
+        degraded_g = rows[:, 6] > 0
+        w_all = float(w_g.sum())
+        n_all = int(round(float(n_g.sum())))
+        if w_all > 0:
+            mean_all = float(rows[:, 2].sum()) * s / w_all
+            ex2_all = float(rows[:, 3].sum()) * s * s / w_all
+        else:
+            mean_all, ex2_all = float("nan"), float("nan")
+        tot_mean = float(s1.sum() / max(n_all, 1))
+        tot_var = max(float(s2.sum() / max(n_all, 1)) - tot_mean ** 2, 0.0)
+        sigma_all = (math.sqrt(tot_var * n_all / max(n_all - 1, 1))
+                     if n_all >= 2 else float("nan"))
+        return KeyedPass(
+            n_groups=dst.n_groups, partials=None, cell_counts=None,
+            cell_weights=None, mean_g=mean_g, ex2_g=ex2_g, sigma_g=sigma_g,
+            plain_mean_g=np.where(n_g > 0, samp_mean, np.nan),
+            n_g=np.round(n_g).astype(np.int64), w_g=w_g,
+            degraded_g=degraded_g, mean_all=mean_all, ex2_all=ex2_all,
+            sigma_all=sigma_all,
+            plain_mean_all=(tot_mean if n_all else float("nan")),
+            n_all=n_all, w_all=w_all,
+            degraded_all=bool(degraded_g.any()))
+
+    def _base_stats_device(self, plan: QueryPlan, mg: ModeGroup,
+                           dst: DeviceMomentStore) -> SharedPass:
+        """``_base_stats`` for a device-resident plain key: the host
+        fetches only the (n_blocks,) partial answers and the catalog-
+        weighted E[x^2] scalar; provenance carries avg-only blocks
+        (moments stay resident — reported as zeros, like the device
+        route's alpha/sketch diagnostics)."""
+        pilot = plan.pilot
+        partials = dst.partials_host()           # answers, shifted scale
+        mean_shifted = summarize(partials, self.block_sizes)
+        rows = dst._rows
+        den = float(rows[0, 8])
+        ex2 = (float(rows[0, 7]) * dst.scale ** 2 / den if den > 0
+               else float("nan"))
+        n = len(self.block_sizes)
+        sample_size = dst.total_sampled
+        blocks = BlockResultsBatch(
+            avg=partials, alpha=np.zeros(n), sketch=np.zeros(n),
+            case=np.zeros(n, dtype=np.int64), n_iter=np.zeros(n),
+            mom_s=np.zeros((n, 4)), mom_l=np.zeros((n, 4)),
+            n_sampled=dst.n_sampled.copy())
+        result = AggregateResult(
+            answer=mean_shifted - pilot.shift, sketch0=pilot.sketch0,
+            sigma=pilot.sigma, sampling_rate=mg.rate,
+            sample_size=sample_size, blocks=blocks,
+            boundaries=plan.boundaries)
+        return SharedPass(result=result, mean=result.answer, ex2=ex2,
+                          mean_shifted=mean_shifted,
+                          data_size=self.data_size, rate=mg.rate,
+                          sample_size=sample_size)
 
     # -- composition -------------------------------------------------------
 
@@ -957,16 +1206,34 @@ class MultiQueryExecutor:
             block_quotas(self.block_sizes, mg.rate, deadline_samples),
             dtype=np.int64)
         group_stores, key_aggs = prebuilt
+        # Device-resident serving: persistent stores on route="device"
+        # keep their moments as jax arrays between ticks; the whole tick
+        # is one fused launch per mode-group and the host reads only
+        # scalar answers / group stats.
+        device_resident = bool(persistent and route == "device")
+        if device_resident:
+            keys, dstores, stack = self._device_group(mg, group_stores)
         if persistent:
             draw = np.zeros(len(self.block_sizes), dtype=np.int64)
-            for st in group_stores.values():
-                draw = np.maximum(draw, st.deficit(target))
+            for key, st in group_stores.items():
+                led = dstores[key] if device_resident else st
+                draw = np.maximum(draw, led.deficit(target))
             if budget_alloc is not None:
                 draw = _scale_quotas(draw, int(budget_alloc))
         else:
             draw = target
         new_samples = int(draw.sum())
-        if new_samples:
+        if device_resident:
+            if new_samples:
+                self._draw_and_tick_device(stack, keys, dstores, draw, rng,
+                                           plan.pilot.shift, mg,
+                                           chunk_blocks)
+            else:
+                # Warm repeat: re-solve resident moments (served from the
+                # stats cache when nothing changed — zero transfers).
+                stack.tick(self.params, mode=self._device_mode(mg.mode),
+                           geometry=mg.geometry)
+        elif new_samples:
             self._draw_and_ingest(group_stores, draw, rng,
                                   plan.pilot.shift,
                                   chunk_blocks=chunk_blocks)
@@ -980,16 +1247,22 @@ class MultiQueryExecutor:
             st = group_stores[key]
             if key == (None, None):
                 if sp is None:
-                    sp = self._base_stats(plan, mg, st, route)
+                    sp = (self._base_stats_device(plan, mg, dstores[key])
+                          if device_resident
+                          else self._base_stats(plan, mg, st, route))
                 ans = self._compose_plain(q, sp, mg, pass_id)
             else:
                 if key not in keyed:
-                    keyed[key] = self._keyed_stats(
-                        plan, mg, st, route,
-                        need_mean=(key_aggs[key] != {"COUNT"}))
+                    keyed[key] = (
+                        self._keyed_stats_device(dstores[key])
+                        if device_resident
+                        else self._keyed_stats(
+                            plan, mg, st, route,
+                            need_mean=(key_aggs[key] != {"COUNT"})))
+                n_drawn = (dstores[key].total_sampled if device_resident
+                           else st.total_sampled)
                 ans = self._compose_keyed(
-                    q, keyed[key], mg, pass_id, plan.pilot.shift,
-                    st.total_sampled)
+                    q, keyed[key], mg, pass_id, plan.pilot.shift, n_drawn)
             ans.new_samples = new_samples
             out.append((i, ans))
         return out
@@ -1012,11 +1285,17 @@ class MultiQueryExecutor:
                 dtype=np.int64)
             union = np.zeros(len(self.block_sizes), dtype=np.int64)
             lo_n, hi_sig = None, float("nan")
-            for st in group_stores.values():
-                union = np.maximum(union, st.deficit(target))
-                n = float(st.totals[:, 0].sum())
+            for key, st in group_stores.items():
+                # Device-resident keys budget off the device mirror (the
+                # authoritative ledger); its stats come from the cached
+                # group rows, so this stays transfer-free.
+                led = self._device_stores.get(
+                    StoreKey(where=key[0], group_by=key[1], mode=mg.mode),
+                    st)
+                union = np.maximum(union, led.deficit(target))
+                n = float(led.matched_total())
                 lo_n = n if lo_n is None else min(lo_n, n)
-                s = st.sample_sigma()
+                s = led.sample_sigma()
                 if math.isfinite(s) and not math.isfinite(hi_sig):
                     hi_sig = s
                 elif math.isfinite(s):
@@ -1059,7 +1338,8 @@ class MultiQueryExecutor:
             deadline_samples: Optional[int] = None,
             incremental: bool = False,
             budget: Optional[int] = None,
-            chunk_blocks: Optional[int] = None) -> "list[QueryAnswer]":
+            chunk_blocks: Optional[int] = None,
+            drift_check: Optional[float] = None) -> "list[QueryAnswer]":
         """Answer every query from one shared pass per mode-group.
 
         ``mode``/``route`` select the default Phase 2 solver and where it
@@ -1078,12 +1358,41 @@ class MultiQueryExecutor:
         samples, split across passes by marginal-error reduction — the
         deadline-aware tick path.  ``chunk_blocks`` streams the row draw
         through block chunks (O(one-chunk) row memory, bit-identical).
+
+        ``route="device"`` with ``incremental=True`` is the DEVICE-
+        RESIDENT serving path: every ``StoreKey``'s moments live as jax
+        arrays between runs, a mode-group's tick is one fused launch over
+        all its keys' stacked cells (Phase 1 merge + Phase 2 + group
+        stats), and the host reads only scalar answers and O(groups)
+        statistics — moments never cross the host boundary in steady
+        state.  Answers match the host float64 path within float32
+        tolerances (bit-exactly when jax runs in x64); per-block
+        provenance is avg-only (moment columns report zeros).  The route
+        must stay consistent for a given warm state — call
+        ``reset_stores()`` before switching an executor between warm host
+        and device serving.
+
+        ``drift_check`` (incremental only) guards the frozen anchor
+        against table churn: before planning, a cheap pilot re-draw is
+        compared with the stored sketch0/sigma (``check_drift``) and on
+        drift ALL warm stores are dropped — the run re-pilots and starts
+        cold instead of refining against a changed table forever.  Pass a
+        z-threshold (``True`` uses the default 6.0).
         """
         if budget is not None and not incremental:
             raise ValueError(
                 "budget caps the incremental deficit top-up; without "
                 "incremental=True there is no store ledger to budget "
                 "against (use deadline_samples for a per-block quota cap)")
+        if drift_check is not None and not incremental:
+            raise ValueError(
+                "drift_check probes the frozen incremental anchor; it "
+                "requires incremental=True")
+        if incremental and drift_check is not None \
+                and self._anchor is not None:
+            z = 6.0 if drift_check is True else float(drift_check)
+            if self.check_drift(rng, z_thresh=z):
+                self.reset_stores()
         if incremental and self._anchor is not None:
             pilot, pilot_columns = self._anchor
             plan = self.plan(queries, rng, mode=mode, route=route,

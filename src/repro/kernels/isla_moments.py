@@ -211,6 +211,46 @@ def isla_moments_grouped_pallas(values4d: jnp.ndarray, bounds: jnp.ndarray,
     return out.reshape(n_groups, n_blocks, 2, 4)
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "mode", "geometry", "tm", "stride",
+                     "interpret"),
+    donate_argnums=(2,))
+def isla_fused_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
+                      prior: jnp.ndarray, sketch0: jnp.ndarray,
+                      params, mode: str = "calibrated", geometry=None,
+                      tm: int = DEFAULT_TM, stride: int = 1,
+                      interpret: bool = False):
+    """Fused Phase 1 + Phase 2: one launch from samples to answers.
+
+    Chains the batched Pallas moment accumulation (seeded from the
+    DONATED ``prior`` accumulator — the device-resident continuation)
+    straight into the branchless Phase 2 solve
+    (``repro.core.distributed.phase2``) inside one jit, so a dense-layout
+    continuation round costs a single launch instead of
+    moments -> host -> phase2.
+
+    values3d: (n_cells, rows, 128) — the flattened (group, block) cell
+    axis; bounds (4,) and ``sketch0`` (scalar or (n_cells,)) on the same
+    (pre-scaled) value axis as ``values3d``; ``prior`` (n_cells, 2, 4) is
+    consumed and replaced by the merged moments.
+
+    Returns ``(moments, partials)``: the merged (n_cells, 2, 4) state —
+    feed it back as the next round's ``prior`` — and the (n_cells,)
+    Phase 2 partial answers.
+    """
+    from repro.core.distributed import phase2
+
+    mom = isla_moments_batched_pallas(values3d, bounds, tm=tm,
+                                      stride=stride, interpret=interpret,
+                                      prior=prior)
+    if geometry is not None:
+        geometry = (jnp.float32(geometry[0]), jnp.float32(geometry[1]))
+    partials = phase2(mom[:, 0, :], mom[:, 1, :], sketch0, params,
+                      mode=mode, geometry=geometry)
+    return mom, partials
+
+
 def _pilot_kernel(x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)
 

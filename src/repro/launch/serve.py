@@ -22,6 +22,17 @@ by marginal-error reduction (answers refine over later ticks):
 
   PYTHONPATH=src python -m repro.launch.serve --workload isla --smoke \
       --incremental --deadline-samples 20000
+
+``--route device`` with ``--incremental`` runs the DEVICE-RESIDENT tick:
+per-(where, group_by, mode) moments live as jax arrays between ticks, each
+tick is one fused launch per mode-group (Phase 1 merge + Phase 2 + group
+stats), and only scalar answers cross back to the host.  ``--drift-check Z``
+probes the frozen anchor with a cheap pilot re-draw each tick and resets
+the warm stores when the underlying table drifted more than Z standard
+errors:
+
+  PYTHONPATH=src python -m repro.launch.serve --workload isla --smoke \
+      --incremental --route device --drift-check 6.0
 """
 from __future__ import annotations
 
@@ -75,7 +86,8 @@ class IslaAdmissionLoop:
     def __init__(self, executor, rng: np.random.Generator,
                  mode: str = "calibrated", route: str = "host",
                  max_batch: int = 64, incremental: bool = False,
-                 deadline_samples: Optional[int] = None):
+                 deadline_samples: Optional[int] = None,
+                 drift_check: Optional[float] = None):
         self.executor = executor
         self.rng = rng
         self.mode = mode
@@ -88,7 +100,12 @@ class IslaAdmissionLoop:
                 "across warm stores by marginal error); without "
                 "incremental=True there is no deficit ledger to budget "
                 "against — pass incremental=True or drop the deadline")
+        if drift_check is not None and not self.incremental:
+            raise ValueError(
+                "drift_check probes the frozen incremental anchor; it "
+                "requires incremental=True")
         self.deadline_samples = deadline_samples
+        self.drift_check = drift_check
         self._pending = collections.deque()
         self._next_tid = 0
         self._tick = 0
@@ -118,7 +135,8 @@ class IslaAdmissionLoop:
         answers = self.executor.run(
             [t.query for t in batch], self.rng, mode=self.mode,
             route=self.route, incremental=self.incremental,
-            budget=self.deadline_samples if self.incremental else None)
+            budget=self.deadline_samples if self.incremental else None,
+            drift_check=self.drift_check)
         seen_passes = set()
         for t, a in zip(batch, answers):
             t.answer = a
@@ -207,7 +225,8 @@ def serve_isla(args) -> None:
     loop = IslaAdmissionLoop(ex, np.random.default_rng(args.seed + 1),
                              mode="auto", route=args.route,
                              incremental=args.incremental,
-                             deadline_samples=args.deadline_samples)
+                             deadline_samples=args.deadline_samples,
+                             drift_check=args.drift_check)
     qrng = np.random.default_rng(args.seed + 2)
     t0 = time.perf_counter()
     total = 0
@@ -288,12 +307,19 @@ def main():
     ap.add_argument("--deadline-samples", type=int, default=None,
                     help="deadline-aware tick budget: max NEW samples per "
                          "tick, split across stores by marginal error")
+    ap.add_argument("--drift-check", type=float, default=None,
+                    help="staleness guard (incremental): pilot re-draw per "
+                         "tick; reset warm stores when the anchor drifts "
+                         "beyond this many standard errors")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI smoke runs")
     args = ap.parse_args()
     if args.deadline_samples is not None and not args.incremental:
         ap.error("--deadline-samples budgets the incremental deficit "
                  "ledger; it requires --incremental")
+    if args.drift_check is not None and not args.incremental:
+        ap.error("--drift-check probes the frozen incremental anchor; it "
+                 "requires --incremental")
     if args.workload == "isla":
         serve_isla(args)
     else:

@@ -2,6 +2,13 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "transfer_guard: steady-state device-resident ticks asserted to "
+        "perform zero host<->device moment transfers (tier-1)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

@@ -187,3 +187,70 @@ def test_kernel_feeds_phase2(rng):
     ps, pl = phase1_sampling(vals, b)
     host = phase2_iteration(ps, pl, 100.0, params, mode="calibrated")
     assert dev_avg == pytest.approx(host.avg, rel=1e-4)
+
+
+def test_grouped_kernel_prior_ragged_cells(rng):
+    """Prior operand on ragged shapes: G*B = 15 cells (not a multiple of
+    any tile/lane width) each merge their own prior cell, including an
+    all-zero prior row (a cold cell merged into a warm launch)."""
+    g_n, b_n = 3, 5
+    x1 = jnp.asarray(rng.normal(100, 20, size=(g_n, b_n, 64 * 2, 128)),
+                     jnp.float32)
+    x2 = jnp.asarray(rng.normal(100, 20, size=(g_n, b_n, 64 * 3, 128)),
+                     jnp.float32)
+    round1 = isla_moments_grouped_pallas(x1, BOUNDS_ARR, tm=64,
+                                         interpret=True)
+    # Cold cell inside a warm launch: zero out one prior row entirely.
+    prior = np.asarray(round1).copy()
+    prior[1, 2] = 0.0
+    merged = isla_moments_grouped_pallas(
+        x2, BOUNDS_ARR, tm=64, interpret=True,
+        prior=jnp.asarray(prior))
+    whole = isla_moments_grouped_pallas(
+        jnp.concatenate([x1, x2], axis=2), BOUNDS_ARR, tm=64,
+        interpret=True)
+    for g in range(g_n):
+        for b in range(b_n):
+            if (g, b) == (1, 2):
+                # The zeroed cell must equal x2's moments alone.
+                want = ref.isla_moments_ref(x2[g, b], *BOUNDS)
+            else:
+                want = whole[g, b]
+            np.testing.assert_allclose(np.asarray(merged[g, b]),
+                                       np.asarray(want), rtol=1e-5)
+
+
+def test_grouped_kernel_prior_shape_guard(rng):
+    x = jnp.asarray(rng.normal(100, 20, size=(2, 3, 64, 128)),
+                    jnp.float32)
+    with pytest.raises(ValueError, match="prior"):
+        isla_moments_grouped_pallas(x, BOUNDS_ARR, tm=64, interpret=True,
+                                    prior=jnp.zeros((3, 2, 2, 4)))
+
+
+def test_fused_pallas_one_launch_matches_split(rng):
+    """isla_fused_pallas == (batched moments kernel + branchless Phase 2)
+    with the prior merged — and the donated prior is consumed."""
+    from repro.core.distributed import phase2
+    from repro.core.types import IslaParams
+    from repro.kernels.isla_moments import isla_fused_pallas
+
+    params = IslaParams()
+    cells = 7  # not a multiple of any tile width
+    x = jnp.asarray(rng.normal(100, 20, size=(cells, 64 * 3, 128)),
+                    jnp.float32)
+    prior = jnp.asarray(rng.uniform(0, 10, size=(cells, 2, 4)),
+                        jnp.float32)
+    prior_copy = jnp.array(prior)
+    mom, partials = isla_fused_pallas(x, BOUNDS_ARR, prior,
+                                      jnp.float32(100.0), params,
+                                      tm=64, interpret=True)
+    want = isla_moments_batched_pallas(x, BOUNDS_ARR, tm=64,
+                                       interpret=True, prior=prior_copy)
+    np.testing.assert_allclose(np.asarray(mom), np.asarray(want),
+                               rtol=1e-6)
+    want_p = phase2(want[:, 0], want[:, 1], jnp.float32(100.0), params,
+                    mode="calibrated")
+    np.testing.assert_allclose(np.asarray(partials), np.asarray(want_p),
+                               rtol=1e-6)
+    assert prior.is_deleted()  # donated: the launch was in-place
