@@ -1,5 +1,6 @@
 """Online-refinement benchmark: continuation rounds vs one-shot resampling,
-and warm-store reuse in the incremental executor.
+warm-store reuse in the incremental executor, and per-key anchor
+refinement under a measure-correlated predicate.
 
 Headlines (recorded in ``BENCH_online.json``):
  * **merge parity** — k continuation rounds through ``MomentStore`` are
@@ -12,7 +13,13 @@ Headlines (recorded in ``BENCH_online.json``):
  * **warm-store reuse** — a repeated predicate through
    ``run(incremental=True)`` draws STRICTLY fewer new samples than a cold
    ``execute()`` of the same query (zero when the deficit is <= 0) — the
-   acceptance criterion of the incremental serving path.
+   acceptance criterion of the incremental serving path;
+ * **refined anchors** — under a measure-correlated WHERE (the predicate
+   selects the measure's own upper tail) the per-key refined anchor
+   earns the (e, beta) bound with FEWER samples than the global anchor
+   at (much better) accuracy: the global boundaries leave the matching
+   sub-population's S region empty, so the global path degrades to the
+   relaxed sketch while still paying the pooled-sigma sample bill.
 
 Contract: rows print as ``(name, us_per_call, derived)`` like the other
 benches; ``--smoke`` shrinks sizes so CI keeps the entrypoint alive;
@@ -199,6 +206,82 @@ def warm_store_reuse(smoke=False):
     return rows, report
 
 
+def refined_anchor_predicate(smoke=False):
+    """The acceptance experiment for per-key leverage anchors: AVG over a
+    measure-correlated WHERE (value >= mu + 1.5 sigma), refined vs global
+    anchor, multi-seed.  Records samples drawn, whether the (e, beta)
+    bound was earned, and the absolute error against the population
+    truth of the with-replacement sampling model."""
+    n_blocks, rows_per = (4, 4000) if smoke else (8, 40000)
+    e = 1.0 if smoke else 0.5
+    seeds = range(2 if smoke else 8)
+    cut = MU + 1.5 * SIGMA
+    where = Predicate(column="value", lo=cut)
+    sizes = [10 ** 7] * n_blocks
+
+    stats = {True: {"samples": [], "err": [], "earned": [], "us": 0.0},
+             False: {"samples": [], "err": [], "earned": [], "us": 0.0}}
+    for seed in seeds:
+        rng = np.random.default_rng(100 + seed)
+        tables = [{"value": rng.normal(MU, SIGMA, size=rows_per)}
+                  for _ in range(n_blocks)]
+        match = np.concatenate([t["value"][t["value"] >= cut]
+                                for t in tables])
+        truth = float(np.mean(match))
+        for refine in (True, False):
+            ex = MultiQueryExecutor(
+                [table_sampler(t) for t in tables], sizes,
+                params=IslaParams(e=e), refine_anchors=refine,
+                anchor_min_support=24)
+            t0 = time.perf_counter()
+            (ans,) = ex.run([IslaQuery(e=e, agg="AVG", where=where)],
+                            np.random.default_rng(200 + seed))
+            stats[refine]["us"] += (time.perf_counter() - t0) * 1e6
+            stats[refine]["samples"].append(int(ans.sample_size))
+            stats[refine]["err"].append(abs(float(ans.value) - truth))
+            stats[refine]["earned"].append(ans.error_bound is not None)
+
+    n = len(stats[True]["samples"])
+    ref_s = float(np.mean(stats[True]["samples"]))
+    glo_s = float(np.mean(stats[False]["samples"]))
+    ref_err = float(np.mean(stats[True]["err"]))
+    glo_err = float(np.mean(stats[False]["err"]))
+    if not ref_s < glo_s:
+        raise AssertionError(
+            f"refined anchors drew {ref_s} samples >= global {glo_s} — "
+            "the matching-rows sigma is not steering the rate")
+    if not ref_err < glo_err:
+        raise AssertionError(
+            f"refined anchors erred {ref_err} >= global {glo_err} at "
+            "fewer samples — refinement is not helping accuracy")
+    earned_ref = float(np.mean(stats[True]["earned"]))
+    earned_glo = float(np.mean(stats[False]["earned"]))
+    if n >= 4 and not earned_ref > earned_glo:
+        raise AssertionError(
+            f"refined anchors earned the bound on {earned_ref:.0%} of "
+            f"seeds vs global {earned_glo:.0%} — the S/L regions are "
+            "not being repopulated")
+    rows = [
+        (f"refined_anchor/b{n_blocks}", stats[True]["us"] / n, ref_s),
+        (f"global_anchor/b{n_blocks}", stats[False]["us"] / n, glo_s),
+        ("refined_sample_ratio", stats[True]["us"] / n, glo_s / ref_s),
+    ]
+    report = {
+        "n_blocks": n_blocks, "e": e, "seeds": n,
+        "predicate": where.describe(),
+        "refined_mean_samples": ref_s,
+        "global_mean_samples": glo_s,
+        "global_over_refined_samples": glo_s / ref_s,
+        "refined_mean_abs_err": ref_err,
+        "global_mean_abs_err": glo_err,
+        "refined_bound_earned_frac": float(
+            np.mean(stats[True]["earned"])),
+        "global_bound_earned_frac": float(
+            np.mean(stats[False]["earned"])),
+    }
+    return rows, report
+
+
 # Row-only wrappers for the run.py harness (its contract has no report).
 def online_merge_parity():
     return merge_parity()[0]
@@ -210,6 +293,10 @@ def online_progressive_refine():
 
 def online_warm_store():
     return warm_store_reuse()[0]
+
+
+def online_refined_anchor():
+    return refined_anchor_predicate()[0]
 
 
 def main():
@@ -224,7 +311,8 @@ def main():
     report = {"smoke": bool(args.smoke)}
     for section, bench in (("merge", merge_parity),
                            ("refine", rounds_to_target),
-                           ("warm", warm_store_reuse)):
+                           ("warm", warm_store_reuse),
+                           ("anchor", refined_anchor_predicate)):
         rows, rep = bench(smoke=args.smoke)
         for name, us, derived in rows:
             print(f"{name},{us:.1f},{derived:.6g}", flush=True)
@@ -236,7 +324,10 @@ def main():
     print(f"# wrote {path} (warm repeat drew "
           f"{report['warm']['warm_repeat_new_samples']} new samples vs "
           f"{report['warm']['cold_samples']} cold; online refine used "
-          f"{report['refine']['oneshot_over_online']:.2f}x fewer samples)",
+          f"{report['refine']['oneshot_over_online']:.2f}x fewer samples; "
+          f"refined anchors hit the bound with "
+          f"{report['anchor']['global_over_refined_samples']:.2f}x fewer "
+          f"samples than the global anchor)",
           flush=True)
 
 

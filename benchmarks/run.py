@@ -16,6 +16,7 @@ def main() -> None:
         online_bench.online_merge_parity,
         online_bench.online_progressive_refine,
         online_bench.online_warm_store,
+        online_bench.online_refined_anchor,
         paper_tables.table3_leverage_effects,
         paper_tables.table4_accuracy,
         paper_tables.table5_modulation,

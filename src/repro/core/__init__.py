@@ -4,7 +4,7 @@ Host path (float64, numpy): engine.aggregate / run_block.
 Device path (fp32, jit/shard_map-safe): distributed.isla_mean.
 Telemetry API for training loops: metrics.loss_stats etc.
 """
-from .types import (AggregateResult, BlockResult, BlockResultsBatch,
+from .types import (AggregateResult, Anchor, BlockResult, BlockResultsBatch,
                     Boundaries, IslaParams, Predicate, RegionMoments,
                     StoreKey, REGION_TS, REGION_S, REGION_N, REGION_L,
                     REGION_TL, classify, classify_np, region_of)
@@ -38,7 +38,8 @@ from .multiquery import (GroupAnswer, MultiQueryExecutor, QueryAnswer,
 from . import distributed, metrics
 
 __all__ = [
-    "AggregateResult", "BlockResult", "BlockResultsBatch", "Boundaries",
+    "AggregateResult", "Anchor", "BlockResult", "BlockResultsBatch",
+    "Boundaries",
     "IslaParams", "IslaQuery", "Predicate", "flat_segments",
     "RegionMoments", "REGION_TS", "REGION_S", "REGION_N", "REGION_L",
     "REGION_TL", "classify", "classify_np", "region_of", "choose_q",

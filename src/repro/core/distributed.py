@@ -115,7 +115,7 @@ def _lambda_star(p1: float, p2: float) -> float:
 
 def phase2(mom_s: jnp.ndarray, mom_l: jnp.ndarray, sketch0: jnp.ndarray,
            params: IslaParams, mode: str = "calibrated",
-           geometry=None) -> jnp.ndarray:
+           geometry=None, thr=None) -> jnp.ndarray:
     """Branchless Phase 2.  Returns the block's partial answer.
 
     Fully elementwise: feed one (4,) moment pair for a scalar answer, or
@@ -131,8 +131,15 @@ def phase2(mom_s: jnp.ndarray, mom_l: jnp.ndarray, sketch0: jnp.ndarray,
     mode="empirical"  — ISLA-E: geometry=(kappa, b0) measured from the pilot.
     mode="faithful"   — §V-C case table, algebraic form (== host closed form).
     Falls back to sketch0 when u or v is 0, to c when k ~ 0.
+
+    ``thr`` optionally overrides ``params.thr`` with an array broadcast
+    against the cell axis — the per-cell stopping threshold of stacks
+    whose cells run at different anchor scales (thr is ABSOLUTE on the
+    value axis, so each cell's normalized frame needs its own).  The
+    ISLA-E ``b0`` may likewise be per-cell.
     """
-    eta, lam, thr = params.eta, params.lam, params.thr
+    eta, lam = params.eta, params.lam
+    thr = params.thr if thr is None else thr
     u, v = mom_s[..., 0], mom_l[..., 0]
     q = choose_q(u / jnp.maximum(v, 1.0), params)
     k, c = theorem3_kc(mom_s, mom_l, q)
@@ -265,6 +272,38 @@ def group_row_stats(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
     return jnp.concatenate(out) if len(out) > 1 else out[0]
 
 
+def _scaled_solve_args(params: IslaParams, geometry, inv_scale):
+    """Per-cell Phase 2 stopping threshold and ISLA-E geometry.
+
+    ``thr`` (and the empirical ``b0``) are ABSOLUTE quantities on the
+    value axis; cells normalized by their own anchor scale need them
+    divided by that scale.  ``inv_scale`` is the per-cell 1/scale vector
+    (all-ones for float64 stores — exact passthrough); ``None`` keeps the
+    scalar params (pre-scaled by the caller, the legacy contract).
+    """
+    if inv_scale is None:
+        return params.thr, geometry
+    thr = params.thr * inv_scale
+    if geometry is not None:
+        geometry = (geometry[0], geometry[1] * inv_scale)
+    return thr, geometry
+
+
+def _sample_bounds(bounds: jnp.ndarray, seg: jnp.ndarray):
+    """Region cuts aligned with a tagged sample stream.
+
+    ``bounds`` is either one broadcast row ((4,) or (1, 4) — every cell
+    shares the anchor) or a per-cell table ((n_cells + 1, 4), the per-key
+    anchor path; the +1 pad row holds +inf cuts so bucket-padding drop
+    samples match no region).  Returns the four cut operands, scalar or
+    per-sample."""
+    b = bounds.reshape(-1, 4)
+    if b.shape[0] == 1:
+        return b[0, 0], b[0, 1], b[0, 2], b[0, 3]
+    bs = b[seg]
+    return bs[:, 0], bs[:, 1], bs[:, 2], bs[:, 3]
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("params", "mode", "geometry", "n_groups_list"),
@@ -273,7 +312,8 @@ def fused_tick(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
                totals: jnp.ndarray, n_sampled: jnp.ndarray,
                values: jnp.ndarray, seg: jnp.ndarray, quotas: jnp.ndarray,
                bounds: jnp.ndarray, sketch0: jnp.ndarray,
-               sizes: jnp.ndarray, *, params: IslaParams,
+               sizes: jnp.ndarray, inv_scale: jnp.ndarray = None, *,
+               params: IslaParams,
                mode: str = "calibrated", geometry=None,
                n_groups_list=(1,)):
     """One device-resident continuation round as a single fused launch.
@@ -284,12 +324,15 @@ def fused_tick(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
     ``quotas`` sample upload is the only h2d crossing, and only the
     per-group stats rows and per-cell partial answers come back.
 
-    ``values`` are pre-scaled/shifted on the host (sample prep, not
-    moments); ``seg`` may contain ``n_cells`` as a drop segment for
-    bucket padding (``n_cells + 1`` segments are reduced, the overflow
-    row discarded) so the jit does not retrace on every tick's matched-
-    sample count.  ``sketch0`` is per-cell, so stacked stores that
-    re-anchored independently still solve in one launch.
+    ``values`` are pre-scaled/shifted on the host into each cell's anchor
+    frame (sample prep, not moments); ``seg`` may contain ``n_cells`` as
+    a drop segment for bucket padding (``n_cells + 1`` segments are
+    reduced, the overflow row discarded) so the jit does not retrace on
+    every tick's matched-sample count.  ``sketch0`` is per-cell, so
+    stacked stores that re-anchored independently still solve in one
+    launch; ``bounds`` is one broadcast row for a shared-anchor stack or
+    a per-cell (+pad) table for per-key anchors, and ``inv_scale`` is the
+    per-cell anchor-scale vector the stopping threshold rides.
 
     Returns ``(mom_s', mom_l', totals', n_sampled', partials, rows)`` —
     ``rows`` per ``group_row_stats``.
@@ -300,7 +343,7 @@ def fused_tick(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
     # identical to the host bincount carry (bit-exact in float64).  The
     # extra pad row is the bucket-padding drop segment.
     v = values
-    s_lo, s_hi, l_lo, l_hi = bounds[0], bounds[1], bounds[2], bounds[3]
+    s_lo, s_hi, l_lo, l_hi = _sample_bounds(bounds, seg)
     m_s = ((v > s_lo) & (v < s_hi)).astype(v.dtype)
     m_l = ((v > l_lo) & (v < l_hi)).astype(v.dtype)
     v2 = v * v
@@ -316,8 +359,9 @@ def fused_tick(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
     mom_s, mom_l = merged[:, 0:4], merged[:, 4:8]
     totals = merged[:, 8:11]
     n_sampled = n_sampled + jnp.tile(quotas, len(n_groups_list))
+    thr, geometry = _scaled_solve_args(params, geometry, inv_scale)
     partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
-                      geometry=geometry)
+                      geometry=geometry, thr=thr)
     rows = group_row_stats(mom_s, mom_l, totals, partials, n_sampled,
                            sizes, n_groups_list,
                            float(params.min_region_count))
@@ -327,17 +371,20 @@ def fused_tick(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
 @functools.partial(
     jax.jit,
     static_argnames=("params", "mode", "geometry", "n_groups_list",
-                     "gid_slots", "valid_slots"),
+                     "gid_slots", "valid_slots", "key_affine",
+                     "bound_slots"),
     donate_argnums=(0, 1, 2, 3))
 def fused_tick_dense(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
                      totals: jnp.ndarray, n_sampled: jnp.ndarray,
                      values2d: jnp.ndarray, pad_valid: jnp.ndarray,
                      quotas: jnp.ndarray, gid_panes, valid_panes,
                      bounds: jnp.ndarray, sketch0: jnp.ndarray,
-                     sizes: jnp.ndarray, *, params: IslaParams,
+                     sizes: jnp.ndarray, inv_scale: jnp.ndarray = None, *,
+                     params: IslaParams,
                      mode: str = "calibrated", geometry=None,
                      n_groups_list=(1,), gid_slots=(-1,),
-                     valid_slots=(-1,)):
+                     valid_slots=(-1,), key_affine=None,
+                     bound_slots=None):
     """``fused_tick`` on the dense block-major layout: Phase 1 as one
     batched contraction instead of a scatter.
 
@@ -360,34 +407,61 @@ def fused_tick_dense(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
     GEMM, not k (identity of traced operands cannot be detected inside
     jit, hence the static slots).  ``n_groups_list`` gives each store's
     static cardinality.
+
+    Per-key anchors ride the same static-slot idiom: the value pane is
+    uploaded ONCE on a reference axis, ``key_affine[k] = (ratio, offset)``
+    recovers key k's own scaled-shifted frame as ``v * ratio + offset``,
+    and ``bound_slots[k]`` picks its anchor's row out of the deduplicated
+    ``bounds`` table ((n_distinct_anchors, 4)).  Keys sharing an anchor
+    slot AND affine share one weight pane (python-level CSE), so a
+    uniform-anchor stack traces the identical graph as before;
+    ``inv_scale`` is the per-cell anchor-scale vector the stopping
+    threshold and ISLA-E ``b0`` ride.
     """
     dt = mom_s.dtype
-    v = values2d
-    s_lo, s_hi, l_lo, l_hi = bounds[0], bounds[1], bounds[2], bounds[3]
-    ms = ((v > s_lo) & (v < s_hi)).astype(dt) * pad_valid
-    ml = ((v > l_lo) & (v < l_hi)).astype(dt) * pad_valid
-    v2 = v * v
-    v3 = v2 * v
-    w = jnp.stack([ms, v * ms, v2 * ms, v3 * ms,
-                   ml, v * ml, v2 * ml, v3 * ml,
-                   pad_valid, v * pad_valid, v2 * pad_valid], axis=-1)
+    n_keys = len(n_groups_list)
+    if key_affine is None:
+        key_affine = ((1.0, 0.0),) * n_keys
+    if bound_slots is None:
+        bound_slots = (0,) * n_keys
+    brows = bounds.reshape(-1, 4)
     n_b = values2d.shape[0]
-    parts = [None] * len(n_groups_list)
+    w_cache = {}  # (affine, bound slot) -> shared weight pane
+
+    def w_for(i):
+        ck = (key_affine[i], bound_slots[i])
+        if ck not in w_cache:
+            ratio, off = key_affine[i]
+            v = (values2d if ratio == 1.0 and off == 0.0
+                 else values2d * dt.type(ratio) + dt.type(off))
+            row = brows[bound_slots[i]]
+            ms = ((v > row[0]) & (v < row[1])).astype(dt) * pad_valid
+            ml = ((v > row[2]) & (v < row[3])).astype(dt) * pad_valid
+            v2 = v * v
+            v3 = v2 * v
+            w_cache[ck] = jnp.stack(
+                [ms, v * ms, v2 * ms, v3 * ms,
+                 ml, v * ml, v2 * ml, v3 * ml,
+                 pad_valid, v * pad_valid, v2 * pad_valid], axis=-1)
+        return w_cache[ck]
+
+    parts = [None] * n_keys
     shared = {}  # gid slot -> [(key index, valid slot), ...]
     for i, (gslot, vslot, g) in enumerate(zip(gid_slots, valid_slots,
                                               n_groups_list)):
         if g == 1:
             # Ungrouped key: a plain quota-axis reduction, no one-hot.
             vk = pad_valid if vslot < 0 else valid_panes[vslot]
-            parts[i] = (w * vk[..., None]).sum(axis=1)         # (B, 11)
+            parts[i] = (w_for(i) * vk[..., None]).sum(axis=1)  # (B, 11)
         else:
             shared.setdefault(gslot, []).append((i, vslot))
     for gslot, members in shared.items():
         g = n_groups_list[members[0][0]]
         oh = jax.nn.one_hot(gid_panes[gslot], g, dtype=dt)
         w_cat = jnp.concatenate(
-            [w if vslot < 0 else w * valid_panes[vslot][..., None]
-             for _, vslot in members], axis=2)          # (B, q, 11k)
+            [w_for(i) if vslot < 0
+             else w_for(i) * valid_panes[vslot][..., None]
+             for i, vslot in members], axis=2)          # (B, q, 11k)
         blk = jax.lax.dot_general(
             w_cat, oh, (((1,), (1,)), ((0,), (0,))))    # (B, 11k, G)
         for j, (i, _) in enumerate(members):
@@ -398,8 +472,9 @@ def fused_tick_dense(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
     mom_l = mom_l + delta[:, 4:8]
     totals = totals + delta[:, 8:11]
     n_sampled = n_sampled + jnp.tile(quotas, len(n_groups_list))
+    thr, geometry = _scaled_solve_args(params, geometry, inv_scale)
     partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
-                      geometry=geometry)
+                      geometry=geometry, thr=thr)
     rows = group_row_stats(mom_s, mom_l, totals, partials, n_sampled,
                            sizes, n_groups_list,
                            float(params.min_region_count))
@@ -411,14 +486,18 @@ def fused_tick_dense(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
     static_argnames=("params", "mode", "geometry", "n_groups_list"))
 def fused_solve(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
                 totals: jnp.ndarray, n_sampled: jnp.ndarray,
-                sketch0: jnp.ndarray, sizes: jnp.ndarray, *,
+                sketch0: jnp.ndarray, sizes: jnp.ndarray,
+                inv_scale: jnp.ndarray = None, *,
                 params: IslaParams, mode: str = "calibrated",
                 geometry=None, n_groups_list=(1,)):
     """The zero-draw tick: re-solve resident moments without touching the
     state (a warm repeat whose deficit is <= 0).  No donation — the
-    resident buffers stay live — and no h2d operand at all."""
+    resident buffers stay live — and no h2d operand at all.
+    ``inv_scale`` is the per-cell anchor-scale vector (see
+    ``fused_tick``)."""
+    thr, geometry = _scaled_solve_args(params, geometry, inv_scale)
     partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
-                      geometry=geometry)
+                      geometry=geometry, thr=thr)
     rows = group_row_stats(mom_s, mom_l, totals, partials, n_sampled,
                            sizes, n_groups_list,
                            float(params.min_region_count))

@@ -538,19 +538,42 @@ class IslaQuery:
     """SELECT <agg>(measure) [WHERE ...] [GROUP BY key] with precision=e
     (paper §II-B, extended to the BlinkDB-style relational workload).
 
-    ``e`` is the precision target on the *mean* scale for every aggregate
-    (a SUM answer therefore carries an absolute bound of M * e); ``agg`` is
-    one of AVG / SUM / COUNT / VAR — see ``repro.core.multiquery`` for how
-    non-AVG aggregates compose from the leverage-based mean and the shared
-    block moments.
-
-    ``where`` is an optional ``Predicate`` evaluated on the sampled rows;
-    ``group_by`` names an integer-coded column whose cardinality the
-    executor knows (``group_domains``); ``mode`` optionally pins this
-    query's Phase 2 solver (None = the executor default) — the planner
-    groups queries by resolved mode and runs one shared sampling pass per
-    mode-group.  Frozen/hashable so planners can key shared work off
+    Frozen/hashable so planners can key shared work off
     ``(where, group_by)``.
+
+    Parameters
+    ----------
+    e : float
+        Precision target on the *mean* scale for every aggregate — a SUM
+        answer therefore carries an absolute bound of ``M * e``.
+    beta : float
+        Confidence level of the ``(e, beta)`` claim, in (0, 1).
+    agg : str
+        One of ``"AVG"`` / ``"SUM"`` / ``"COUNT"`` / ``"VAR"`` — see
+        ``repro.core.multiquery`` for how non-AVG aggregates compose from
+        the leverage-based mean and the shared block moments.  Plain
+        unpredicated COUNT is exact from catalog metadata; under WHERE /
+        GROUP BY it becomes an estimate with a normal-binomial bound.
+    where : Predicate, optional
+        WHERE clause evaluated on the sampled rows.  Each distinct
+        predicate gets its own moment store and — when the matching pilot
+        support allows — its own refined leverage anchor
+        (``Anchor.refine_for_predicate``), so measure-correlated filters
+        keep their S/L regions populated.
+    group_by : str, optional
+        Integer-coded column whose cardinality the executor knows
+        (``group_domains``); the answer carries per-group rows.
+    mode : str, optional
+        Pins this query's Phase 2 solver (None = the executor default).
+        The planner groups queries by RESOLVED mode and runs one shared
+        sampling pass per mode-group.
+
+    Examples
+    --------
+    >>> q = IslaQuery(e=0.5, agg="AVG", where=Predicate(lo=100.0),
+    ...               group_by="region")
+    >>> q.where.describe()
+    'value >= 100'
     """
     e: float = 0.1
     beta: float = 0.95

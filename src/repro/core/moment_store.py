@@ -30,9 +30,13 @@ The DEVICE-RESIDENT layer (PR 4) keeps that state where the compute is:
 ``DeviceStack`` concatenates the warm stores of a mode-group onto one
 stacked cell axis, and a continuation round is ONE fused donated launch
 (``distributed.fused_tick`` / ``fused_tick_dense``) — the host touches
-only scalar answers and O(groups) statistics in steady state.
-``iter_chunked_draws`` is the SHARED chunked draw loop both serving draw
-paths ride (the RNG-order / quota-padding / round-count contract).
+only scalar answers and O(groups) statistics in steady state.  Stores
+may carry PER-KEY refined anchors (``types.Anchor``): the stack groups
+its cells by anchor (per-cell bounds table, inverse-anchor-scale
+vector, per-key dense-pane affines) so hetero-anchor keys still share
+the single launch.  ``iter_chunked_draws`` is the SHARED chunked draw
+loop both serving draw paths ride (the RNG-order / quota-padding /
+round-count contract).
 """
 from __future__ import annotations
 
@@ -47,7 +51,7 @@ from .engine import (Sampler, block_quotas, flat_segments,
                      sample_moments_batch)
 from .modulation import ModulationBatchResult
 from .summarize import summarize
-from .types import Boundaries, IslaParams
+from .types import Anchor, Boundaries, IslaParams
 
 
 @dataclasses.dataclass
@@ -137,12 +141,16 @@ class MomentStore:
     has_regions: bool = True  # False: totals-only store (COUNT-only keys)
     has_totals: bool = True   # False: regions-only (plain AVG/SUM passes
                               # — nothing reads weights/ex2/sample_sigma)
+    anchor: Optional[Anchor] = None  # provenance of the frozen frame; its
+                              # fingerprint keys warm-store reuse (a key
+                              # whose anchor changed cannot merge moments)
 
     @staticmethod
     def fresh(n_blocks: int, boundaries: Boundaries, sketch0: float,
               shift: float = 0.0, n_groups: int = 1,
               has_regions: bool = True,
-              has_totals: bool = True) -> "MomentStore":
+              has_totals: bool = True,
+              anchor: Optional[Anchor] = None) -> "MomentStore":
         if n_blocks < 1 or n_groups < 1:
             raise ValueError(f"need n_blocks, n_groups >= 1; got "
                              f"({n_blocks}, {n_groups})")
@@ -156,7 +164,18 @@ class MomentStore:
             mom_s=np.zeros((n_cells, 4)), mom_l=np.zeros((n_cells, 4)),
             totals=np.zeros((n_cells, 3)),
             n_sampled=np.zeros(n_blocks, dtype=np.int64),
-            has_regions=has_regions, has_totals=has_totals)
+            has_regions=has_regions, has_totals=has_totals, anchor=anchor)
+
+    @staticmethod
+    def from_anchor(n_blocks: int, anchor: Anchor, n_groups: int = 1,
+                    has_regions: bool = True,
+                    has_totals: bool = True) -> "MomentStore":
+        """``fresh`` with the frame taken wholesale from an ``Anchor`` —
+        the per-key construction path of the incremental executor."""
+        return MomentStore.fresh(
+            n_blocks, anchor.boundaries, anchor.sketch0,
+            shift=anchor.shift, n_groups=n_groups,
+            has_regions=has_regions, has_totals=has_totals, anchor=anchor)
 
     @property
     def n_cells(self) -> int:
@@ -266,11 +285,45 @@ class MomentStore:
         ``rate`` (per block, block order — the engine's RNG stream), merge
         it into the store, and re-run the batched Phase 2.
 
-        ``chunk_blocks`` folds the draw away that many blocks at a time so
-        the round's stream is never materialized whole (bit-identical via
-        the carry contract); ``reanchor=True`` refreshes ``sketch0`` from
-        the merged answer after solving, so the NEXT round iterates against
-        the refined picture.
+        Parameters
+        ----------
+        block_samplers : sequence of callables
+            ``sampler(n, rng) -> (n,) values`` per block, invoked in block
+            order (the engine's RNG-stream contract).
+        block_sizes : sequence of int
+            Catalog block sizes (drive the per-block quotas).
+        rate : float
+            Sampling rate for this round (Eq. 1 scale; per-block quota is
+            ``ceil(rate * block_size)``).
+        params : IslaParams
+            Phase 2 tunables.
+        rng : numpy.random.Generator
+            Host RNG the draw consumes.
+        mode : str, optional
+            Phase 2 solver ("faithful" maps onto its algebraic closed
+            form — the batched path never runs a data-dependent loop).
+        geometry : tuple, optional
+            ``(kappa, b0)`` pilot geometry, required for
+            ``mode="empirical"``.
+        max_samples : int, optional
+            Per-block quota cap (the §VII-F time-constraint extension).
+        reanchor : bool, optional
+            Refresh ``sketch0`` from the merged answer after solving, so
+            the NEXT round iterates against the refined picture instead of
+            the round-0 rough sketch.  The frozen part of the anchor
+            (boundaries, shift) never moves.
+        chunk_blocks : int, optional
+            Draw and fold the round that many blocks at a time — the
+            stream is never materialized whole, bit-identical via the
+            carry contract.
+        chunk_size : int, optional
+            Phase 1 prefix-chunking within an ingest (same bit-identity).
+
+        Returns
+        -------
+        ModulationBatchResult
+            Per-block partial answers over the MERGED moments (shifted
+            scale; ``answer`` composes the un-shifted grand mean).
         """
         if len(block_samplers) != self.n_blocks:
             raise ValueError(f"store holds {self.n_blocks} blocks, got "
@@ -367,7 +420,8 @@ class DeviceMomentStore:
 
     def __init__(self, n_blocks: int, n_groups: int, boundaries: Boundaries,
                  sketch0: float, shift: float, scale: float,
-                 block_sizes: Sequence[int], dtype) -> None:
+                 block_sizes: Sequence[int], dtype,
+                 anchor: Optional[Anchor] = None) -> None:
         import jax.numpy as jnp
 
         from . import distributed as D
@@ -381,6 +435,7 @@ class DeviceMomentStore:
         self.sketch0 = float(sketch0)
         self.shift = float(shift)
         self.scale = float(scale)
+        self.anchor = anchor
         self.block_sizes = [int(b) for b in block_sizes]
         self.dtype = dtype
         n_cells = self.n_groups * self.n_blocks
@@ -483,7 +538,8 @@ class DeviceMomentStore:
     def fresh_device(n_blocks: int, boundaries: Boundaries, sketch0: float,
                      block_sizes: Sequence[int], shift: float = 0.0,
                      n_groups: int = 1, scale: Optional[float] = None,
-                     dtype=None) -> "DeviceMomentStore":
+                     dtype=None,
+                     anchor: Optional[Anchor] = None) -> "DeviceMomentStore":
         import jax.numpy as jnp
         if dtype is None:
             dtype = DeviceMomentStore.default_dtype()
@@ -498,7 +554,7 @@ class DeviceMomentStore:
                                                          sketch0))
         return DeviceMomentStore(n_blocks, n_groups, boundaries,
                                  float(sketch0), float(shift), float(scale),
-                                 block_sizes, dtype)
+                                 block_sizes, dtype, anchor=anchor)
 
     @staticmethod
     def from_host(store: MomentStore, block_sizes: Sequence[int],
@@ -511,7 +567,7 @@ class DeviceMomentStore:
         dst = DeviceMomentStore.fresh_device(
             store.n_blocks, store.boundaries, store.sketch0, block_sizes,
             shift=store.shift, n_groups=store.n_groups, scale=scale,
-            dtype=dtype)
+            dtype=dtype, anchor=store.anchor)
         p4 = dst.scale ** np.arange(4)
         dst.mom_s = D.h2d(store.mom_s / p4, dst.dtype)
         dst.mom_l = D.h2d(store.mom_l / p4, dst.dtype)
@@ -533,7 +589,8 @@ class DeviceMomentStore:
             mom_s=np.asarray(self.mom_s, dtype=np.float64) * p4,
             mom_l=np.asarray(self.mom_l, dtype=np.float64) * p4,
             totals=np.asarray(self.totals, dtype=np.float64) * p4[:3],
-            n_sampled=self.n_sampled.copy(), rounds=self.rounds)
+            n_sampled=self.n_sampled.copy(), rounds=self.rounds,
+            anchor=self.anchor)
 
     # -- properties / planning mirror --------------------------------------
 
@@ -628,8 +685,14 @@ class DeviceMomentStore:
             layout = ("dense" if canonical and self.dtype != jnp.float64
                       else "tagged")
         if layout == "dense":
+            # The stack's dense pane takes RAW measure values; this
+            # single-store convenience API takes shifted ones (the
+            # MomentStore contract), so un-shift before handing off —
+            # a float64 round-trip well inside the fp32 tolerance the
+            # dense layout runs at.
             out = self._own_stack().tick(
-                params, mode=mode, geometry=geometry, values=values,
+                params, mode=mode, geometry=geometry,
+                values=values - self.shift,
                 quotas=quotas_arr, dense=([group_ids], [mask]),
                 count_round=count_round)
         else:
@@ -637,7 +700,8 @@ class DeviceMomentStore:
             if mask is not None:
                 values = values[np.asarray(mask, dtype=bool).reshape(-1)]
             out = self._own_stack().tick(
-                params, mode=mode, geometry=geometry, values=values,
+                params, mode=mode, geometry=geometry,
+                values=values / self.scale,
                 seg=seg, quotas=quotas_arr, count_round=count_round)
         return out[0]
 
@@ -662,28 +726,35 @@ class DeviceStack:
     concatenated onto one (total_cells, 4) moments axis so N predicates'
     continuation rounds are ONE fused kernel call.
 
-    All member stores must share the frozen anchor (boundaries / shift /
-    scale / dtype / block axis) — guaranteed in the incremental executor,
-    where the anchor is frozen before any store exists.  ``sketch0`` may
-    differ per store (re-anchoring), so the stacked Phase 2 takes a
+    Member stores must share the block axis and dtype, but each store may
+    carry its OWN anchor (boundaries / shift / scale) — the per-key
+    boundary-refinement path, where a predicate's store classifies against
+    cuts derived from its matching pilot rows.  The stack groups its
+    stacked cells by anchor: the fused launch receives a per-cell bounds
+    table, a per-cell inverse-scale vector (the fp32 pre-scaling and the
+    Phase 2 stopping threshold ride it), and per-key value affines for the
+    dense layout, so every cell classifies and solves in its own anchor's
+    frame inside the single launch.  A stack whose stores all share one
+    anchor collapses back to the scalar-broadcast constants (bit-identical
+    to the pre-refinement launch).  ``sketch0`` may additionally differ
+    per store (re-anchoring), so the stacked Phase 2 always takes a
     per-cell sketch vector.  Stack constants (cell->block map, group-row
-    segments, catalog sizes) are uploaded once at stack build.
+    segments, catalog sizes, anchor tables) are uploaded once at stack
+    build.
     """
 
     def __init__(self, stores: Sequence[DeviceMomentStore]) -> None:
         import jax.numpy as jnp
 
+        from . import distributed as D
+
         if not stores:
             raise ValueError("a device stack needs at least one store")
         first = stores[0]
         for st in stores:
-            if (st.n_blocks != first.n_blocks
-                    or st.boundaries != first.boundaries
-                    or st.shift != first.shift or st.scale != first.scale
-                    or st.dtype != first.dtype):
+            if st.n_blocks != first.n_blocks or st.dtype != first.dtype:
                 raise ValueError(
-                    "stacked stores must share the frozen anchor "
-                    "(boundaries, shift, scale, dtype, block axis)")
+                    "stacked stores must share the block axis and dtype")
         self.stores = list(stores)
         self.n_blocks = first.n_blocks
         self.dtype = first.dtype
@@ -696,7 +767,46 @@ class DeviceStack:
         self.n_groups_list = tuple(groups)
         self._sizes = (first._sizes if len(self.stores) == 1 else
                        jnp.concatenate([st._sizes for st in self.stores]))
-        self._bounds = first._bounds
+        # -- anchor tables (built once; uniform stacks keep the scalar
+        #    broadcast forms so the launch graph is unchanged) ------------
+        self._uniform = all(
+            st.boundaries == first.boundaries and st.shift == first.shift
+            and st.scale == first.scale for st in self.stores)
+        if self._uniform:
+            # One (1, 4) bounds row — fused_tick broadcasts it.
+            self._bounds = first._bounds.reshape(1, 4)
+            self._bound_rows = first._bounds.reshape(1, 4)
+            self._bound_slots = (0,) * len(self.stores)
+        else:
+            # Tagged layout: per-cell cuts (+1 inert pad row for the
+            # bucket-padding drop segment — +inf matches no sample).
+            self._bounds = jnp.concatenate(
+                [jnp.broadcast_to(st._bounds, (st.n_cells, 4))
+                 for st in self.stores]
+                + [jnp.full((1, 4), jnp.inf, self.dtype)])
+            # Dense layout: one row per DISTINCT anchor, static slots per
+            # key (lets XLA CSE the shared-anchor weight panes).
+            seen = {}
+            rows, slots = [], []
+            for st in self.stores:
+                bkey = (st.boundaries, st.scale)
+                if bkey not in seen:
+                    seen[bkey] = len(rows)
+                    rows.append(st._bounds)
+                slots.append(seen[bkey])
+            self._bound_rows = jnp.stack(rows)
+            self._bound_slots = tuple(slots)
+        # Per-cell inverse anchor scale: pre-scales the Phase 2 stopping
+        # threshold (and the ISLA-E b0) into each cell's normalized frame.
+        self._inv_scale = D.h2d(np.concatenate(
+            [np.full(st.n_cells, 1.0 / st.scale) for st in self.stores]),
+            self.dtype)
+        # Dense value affines: pane holds raw/ref values; key k recovers
+        # its own frame as v * ratio_k + off_k inside the launch.
+        self._ref_scale = max(st.scale for st in self.stores)
+        self._key_affine = tuple(
+            (self._ref_scale / st.scale, st.shift / st.scale)
+            for st in self.stores)
         self._sk_cells = None  # cached per-cell sketch vector (device)
         # Adopt the stores: the stacked tensors become the authoritative
         # resident state (built once — steady ticks donate them in place,
@@ -825,15 +935,18 @@ class DeviceStack:
 
         Two sample payloads, one launch either way:
 
-         * tagged — ``values`` (shifted scale, float64 host, matched
-           samples only) aligned with ``seg`` (stacked cell ids from
-           ``DeviceMomentStore.build_seg`` with this stack's offsets);
-           the carry-prepend scatter, bit-identical to the host fold
-           when the store runs float64.
-         * dense — ``values`` is the FULL block-major chunk stream and
-           ``dense=(key_gids, key_valids)`` carries per-store (m,) GROUP
-           BY codes / predicate masks (None where absent); Phase 1 runs
-           as one batched contraction (``fused_tick_dense``) — the fast
+         * tagged — ``values`` (each store's OWN scaled shifted frame —
+           ``(raw + store.shift) / store.scale`` per key slice, float64
+           host, matched samples only) aligned with ``seg`` (stacked cell
+           ids from ``DeviceMomentStore.build_seg`` with this stack's
+           offsets); the carry-prepend scatter, bit-identical to the host
+           fold when the store runs float64 (scale 1.0).
+         * dense — ``values`` is the FULL block-major chunk stream of RAW
+           (unshifted) measure values and ``dense=(key_gids, key_valids)``
+           carries per-store (m,) GROUP BY codes / predicate masks (None
+           where absent); Phase 1 runs as one batched contraction
+           (``fused_tick_dense``), each key recovering its own anchor
+           frame from the shared pane via its static affine — the fast
            fp32 serving layout.
 
         ``quotas`` is the pass's per-block draw count.  With no draw the
@@ -841,25 +954,18 @@ class DeviceStack:
         nothing changed — zero launches, zero transfers).
 
         Returns ``[(partials, rows), ...]`` per store — device partial
-        answers and the numpy group-stat rows, both in scaled shifted
-        units (``DeviceMomentStore.partials_host`` / the executor's
-        composer un-scale).
+        answers and the numpy group-stat rows, both in EACH STORE'S scaled
+        shifted units (``DeviceMomentStore.partials_host`` / the
+        executor's composer un-scale per store).
         """
         import jax.numpy as jnp
 
         from . import distributed as D
 
-        scale = self.stores[0].scale
         if geometry is not None:
-            # kappa is dimensionless; b0 lives on the value axis and rides
-            # the same scale normalization as the moments.
-            geometry = (float(geometry[0]), float(geometry[1]) / scale)
-        if scale != 1.0:
-            # thr is an ABSOLUTE iteration threshold on the value axis:
-            # left unscaled it would stop the shrink log2(scale) rounds
-            # early on the normalized moments (ISLA's scale equivariance
-            # covers the estimator, not the stopping rule).
-            params = params.replace(thr=params.thr / scale)
+            # kappa is dimensionless; b0 lives on the value axis — the
+            # launch rescales it per cell via the inv_scale vector.
+            geometry = (float(geometry[0]), float(geometry[1]))
         if self._released:
             raise ValueError("stack was released (a store joined another "
                              "stack); build a fresh DeviceStack")
@@ -872,8 +978,8 @@ class DeviceStack:
             mom_s, mom_l, totals, ns = self._state
             partials, rows = D.fused_solve(
                 mom_s, mom_l, totals, ns, self._sketch0_cells(),
-                self._sizes, params=params, mode=mode, geometry=geometry,
-                n_groups_list=self.n_groups_list)
+                self._sizes, self._inv_scale, params=params, mode=mode,
+                geometry=geometry, n_groups_list=self.n_groups_list)
             return self._install_stats(partials, rows, cfg)
 
         values = np.asarray(values, dtype=np.float64).reshape(-1)
@@ -889,7 +995,17 @@ class DeviceStack:
         q_dev = D.h2d(quotas.astype(np.float64), self.dtype)
         if dense is not None:
             key_gids, key_valids = dense
-            v2d, pad, vmask = _dense_panes(values / scale, quotas)
+            if self._uniform:
+                # One shared anchor: prepare the pane in its frame on the
+                # host (float64 — the pre-refinement numerics) and let the
+                # identity affine pass it through.
+                st0 = self.stores[0]
+                pane_vals = (values + st0.shift) / st0.scale
+                key_affine = ((1.0, 0.0),) * len(self.stores)
+            else:
+                pane_vals = values / self._ref_scale
+                key_affine = self._key_affine
+            v2d, pad, vmask = _dense_panes(pane_vals, quotas)
             # Dedupe shared panes by host-array identity into slot
             # tuples: one upload per distinct pane, and the STATIC slot
             # indices let the fused program batch keys that share a
@@ -923,11 +1039,14 @@ class DeviceStack:
             mom_s, mom_l, totals, ns, partials, rows = D.fused_tick_dense(
                 mom_s, mom_l, totals, ns, D.h2d(v2d, self.dtype),
                 D.h2d(pad, self.dtype), q_dev, tuple(gid_panes),
-                tuple(valid_panes), self._bounds, self._sketch0_cells(),
-                self._sizes, params=params, mode=mode, geometry=geometry,
+                tuple(valid_panes), self._bound_rows,
+                self._sketch0_cells(), self._sizes, self._inv_scale,
+                params=params, mode=mode, geometry=geometry,
                 n_groups_list=self.n_groups_list,
                 gid_slots=tuple(gid_slots),
-                valid_slots=tuple(valid_slots))
+                valid_slots=tuple(valid_slots),
+                key_affine=key_affine,
+                bound_slots=self._bound_slots)
         else:
             seg = np.asarray(seg, dtype=np.int32).reshape(-1)
             if values.shape != seg.shape:
@@ -935,14 +1054,14 @@ class DeviceStack:
             m = values.size
             bucket = _bucket(m)
             v_pad = np.zeros(bucket, dtype=np.float64)
-            v_pad[:m] = values / scale
+            v_pad[:m] = values
             s_pad = np.full(bucket, self.n_cells, dtype=np.int32)  # drop
             s_pad[:m] = seg
             mom_s, mom_l, totals, ns, partials, rows = D.fused_tick(
                 mom_s, mom_l, totals, ns, D.h2d(v_pad, self.dtype),
                 D.h2d(s_pad, jnp.int32), q_dev, self._bounds,
-                self._sketch0_cells(), self._sizes, params=params,
-                mode=mode, geometry=geometry,
+                self._sketch0_cells(), self._sizes, self._inv_scale,
+                params=params, mode=mode, geometry=geometry,
                 n_groups_list=self.n_groups_list)
         self._state = (mom_s, mom_l, totals, ns)
         for st in self.stores:
@@ -974,7 +1093,8 @@ def proportional_allocate(amounts: np.ndarray, budget: int) -> np.ndarray:
 
 
 def split_budget(n_now: Sequence[float], sigmas: Sequence[float],
-                 deficits: Sequence[int], budget: int) -> np.ndarray:
+                 deficits: Sequence[int], budget: int,
+                 min_per_store: int = 0) -> np.ndarray:
     """Split a tick's sample budget across stores by marginal-error
     reduction (deadline-aware QoS).
 
@@ -984,6 +1104,45 @@ def split_budget(n_now: Sequence[float], sigmas: Sequence[float],
     sigma_i / (n_i + x_i)^(3/2) is level — subject to 0 <= x_i <= deficit_i.
     Solved by bisection on the level; stores with unknown sigma (no samples
     yet) are treated as maximally uncertain and filled first.
+
+    Parameters
+    ----------
+    n_now : sequence of float
+        Matching samples each store has already accumulated.
+    sigmas : sequence of float
+        Observed sample sigma per store (NaN = no evidence yet, treated as
+        maximally uncertain).
+    deficits : sequence of int
+        Samples each store still owes against its target quota.
+    budget : int
+        Total new samples this tick may draw.
+    min_per_store : int, optional
+        Per-store budget FLOOR (admission-loop QoS): before the waterfill
+        runs, every store with a positive deficit is guaranteed
+        ``min(deficit_i, min_per_store)`` samples, so a flood of new
+        cold predicates (unknown sigma — filled first by the waterfill)
+        cannot starve a nearly-converged store's small top-up forever.
+        When the budget cannot cover even the floors, the floors
+        themselves are split proportionally.
+
+    Returns
+    -------
+    numpy.ndarray
+        int64 allocation per store; never exceeds a store's deficit and
+        sums to at most ``budget``.
+
+    Examples
+    --------
+    A converged store's 10-sample top-up survives a cold flood:
+
+    >>> cold = [float("nan")] * 3
+    >>> split_budget([9000, 1, 1, 1], [0.5] + cold,
+    ...              [10, 5000, 5000, 5000], 300).tolist()
+    [0, 100, 100, 100]
+    >>> split_budget([9000, 1, 1, 1], [0.5] + cold,
+    ...              [10, 5000, 5000, 5000], 300,
+    ...              min_per_store=10).tolist()
+    [10, 97, 97, 96]
     """
     n_now = np.maximum(np.asarray(n_now, dtype=np.float64).reshape(-1), 1.0)
     sigmas = np.asarray(sigmas, dtype=np.float64).reshape(-1)
@@ -995,6 +1154,14 @@ def split_budget(n_now: Sequence[float], sigmas: Sequence[float],
     total = int(deficits.sum())
     if budget >= total or total == 0:
         return deficits.copy()
+    if min_per_store > 0:
+        base = np.minimum(deficits, int(min_per_store))
+        covered = int(base.sum())
+        if covered >= budget:
+            return proportional_allocate(base, budget)
+        rest = split_budget(n_now + base, sigmas, deficits - base,
+                            budget - covered)
+        return base + rest
     # Unknown sigma (cold store, NaN) -> dominate every known marginal.
     # A KNOWN zero sigma stays zero: its error cannot shrink, so it is
     # served last, not first.

@@ -50,10 +50,23 @@ shift) is frozen on first use, repeat predicates are answered from the warm
 moments, and a new query's (e, beta) tops up only the per-block sample
 DEFICIT its Eq. 1 quota still demands (zero new samples when the deficit is
 <= 0).  A tick ``budget`` is split across passes by marginal-error
-reduction (``moment_store.split_budget``) — the deadline-aware serving
-path.  ``chunk_blocks`` streams the row draw through block-sized chunks so
+reduction (``moment_store.split_budget``; ``budget_floor`` guarantees
+every pass a QoS floor) — the deadline-aware serving path.
+``chunk_blocks`` streams the row draw through block-sized chunks so
 row columns are never materialized whole (bit-identical via the engine's
 carry contract).
+
+Per-key leverage anchors: the anchor is a per-``StoreKey`` object
+(``types.Anchor``) — each distinct ``(where, group_by)`` key derives its
+own boundaries/shift/sketch0 from the pilot rows MATCHING its predicate
+(``Anchor.refine_for_predicate``; global fallback below
+``anchor_min_support`` matching rows), so leverage separation survives
+selective and measure-correlated WHEREs.  The planner rates refined keys
+at their matching-rows sigma, warm-store reuse is keyed on the anchor
+FINGERPRINT (frozen part only), and the drift guard checks each refined
+key against its own anchor — a drifted sub-population resets only its
+key (``drifted_keys``) while every other warm store survives.  See
+docs/ARCHITECTURE.md "Per-key leverage anchors".
 """
 from __future__ import annotations
 
@@ -63,7 +76,6 @@ from typing import Callable, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .boundaries import make_boundaries
 from .engine import (MODES, IslaQuery, block_quotas,
                      phase2_iteration_batch, resolve_mode_and_geometry)
 from .moment_store import (DeviceMomentStore, DeviceStack, MomentStore,
@@ -72,7 +84,7 @@ from .moment_store import (DeviceMomentStore, DeviceStack, MomentStore,
 from .preestimation import (required_sample_size, run_pilot, sampling_rate,
                             z_score)
 from .summarize import summarize
-from .types import (AggregateResult, BlockResultsBatch, Boundaries,
+from .types import (AggregateResult, Anchor, BlockResultsBatch, Boundaries,
                     IslaParams, Predicate, StoreKey)
 
 AGGREGATES = ("AVG", "SUM", "COUNT", "VAR")
@@ -223,20 +235,36 @@ class ModeGroup:
 @dataclasses.dataclass
 class QueryPlan:
     """The planner's output: one pilot, one mode-group per resolved Phase 2
-    mode, each with a shared predicate-aware sampling rate."""
+    mode, each with a shared predicate-aware sampling rate, and one
+    ``Anchor`` per distinct (where, group_by) pass key — refined from the
+    predicate-matching pilot rows where support allows, the global anchor
+    otherwise."""
 
     queries: list
     pilot: "object"               # PilotResult
     pilot_columns: Mapping[str, np.ndarray]
-    boundaries: Boundaries
+    boundaries: Boundaries        # the GLOBAL anchor's boundaries
     shifted_sketch0: float
     mode_groups: list
+    anchor: Optional[Anchor] = None        # global anchor
+    anchors: Optional[dict] = None         # pass key -> Anchor
+
+    def key_anchor(self, key) -> Anchor:
+        """The anchor a (where, group_by) pass key classifies under."""
+        if self.anchors and key in self.anchors:
+            return self.anchors[key]
+        return self.anchor
 
     def describe(self) -> str:
         lines = [f"plan: {len(self.queries)} queries -> "
                  f"{len(self.mode_groups)} shared pass(es)"]
         for i, mg in enumerate(self.mode_groups):
             lines.append(f"  pass {i}: {mg.describe()}")
+        if self.anchors:
+            for key, a in self.anchors.items():
+                if a.source == "refined":
+                    where = key[0].describe() if key[0] else "TRUE"
+                    lines.append(f"  key[{where}]: {a.describe()}")
         return "\n".join(lines)
 
 
@@ -258,7 +286,9 @@ class MultiQueryExecutor:
                  block_sizes: Sequence[int],
                  params: Optional[IslaParams] = None,
                  measure: str = "value",
-                 group_domains: Optional[Mapping[str, int]] = None):
+                 group_domains: Optional[Mapping[str, int]] = None,
+                 refine_anchors: bool = True,
+                 anchor_min_support: int = 64):
         if len(block_samplers) != len(block_sizes):
             raise ValueError("one sampler per block required")
         self.block_samplers = list(block_samplers)
@@ -271,6 +301,13 @@ class MultiQueryExecutor:
             if int(card) < 1:
                 raise ValueError(f"group domain {key!r} needs cardinality "
                                  f">= 1, got {card}")
+        # Per-key boundary refinement: every distinct (where, group_by)
+        # pass key derives its own Anchor from the pilot rows matching its
+        # predicate (Anchor.refine_for_predicate), so leverage separation
+        # survives selective and measure-correlated WHERE clauses; keys
+        # with thin matching pilot support fall back to the global anchor.
+        self.refine_anchors = bool(refine_anchors)
+        self.anchor_min_support = int(anchor_min_support)
         # Incremental serving state: persistent per-key moment stores plus
         # the pilot anchor (boundaries / sketch0 / shift are frozen on the
         # first incremental run — merged moments cannot be re-classified).
@@ -278,6 +315,8 @@ class MultiQueryExecutor:
         self._anchor = None
         self._sigma_cache = {}  # (group_by, where) -> per-group sigmas,
         #                         valid only against the frozen anchor pilot
+        self._key_anchors = {}  # where -> refined Anchor, frozen with the
+        #                         pilot; per-key drift may re-derive an entry
         # Device-resident serving state (route="device", incremental):
         # per-StoreKey device mirrors holding the authoritative moments,
         # and the stacked launch sets built over them per mode-group.
@@ -292,6 +331,7 @@ class MultiQueryExecutor:
         self._stores.clear()
         self._anchor = None
         self._sigma_cache.clear()
+        self._key_anchors.clear()
         self._device_stores.clear()
         self._device_stacks.clear()
 
@@ -302,10 +342,54 @@ class MultiQueryExecutor:
     _DRIFT_PILOT = 512
     _DRIFT_SIGMA_RATIO = 2.0
 
+    def _draw_probe(self, rng: np.random.Generator,
+                    n: Optional[int] = None) -> Mapping[str, np.ndarray]:
+        """Block-proportional probe rows (like ``run_pilot``'s draw) —
+        full columns kept so per-key predicates can be re-evaluated."""
+        n = self._DRIFT_PILOT if n is None else int(n)
+        total = float(sum(self.block_sizes))
+        draws = []
+        for s, bs in zip(self.block_samplers, self.block_sizes):
+            nj = max(1, int(round(n * bs / total)))
+            draws.append(self._as_rows(s(nj, rng)))
+        keys = set(draws[0])
+        return {k: np.concatenate([r[k] for r in draws if k in r])
+                for k in keys}
+
+    @staticmethod
+    def _stats_drifted(mean_ref: float, sigma_ref: float, probe: np.ndarray,
+                       z_thresh: float, sigma_ratio: float,
+                       ref_support: Optional[int] = None) -> bool:
+        """THE drift criterion, shared by the global and per-key guards:
+        probe mean more than ``z_thresh`` standard errors from the
+        reference (under the larger of the two sigmas, so a variance
+        blow-up cannot mask a mean shift), or a sigma ratio outside
+        ``[1/sigma_ratio, sigma_ratio]``.  Fewer than two probe rows
+        carry no evidence.
+
+        ``ref_support`` is the row count the REFERENCE mean itself was
+        estimated from: the comparison is then two-sample (se over
+        ``1/n_probe + 1/ref_support``), so a refined anchor derived from
+        a few dozen matching pilot rows is not flagged as drifted merely
+        because a large probe resolves its own estimation noise."""
+        if probe.size < 2:
+            return False
+        m = float(np.mean(probe))
+        sig = float(np.std(probe, ddof=1))
+        sig_max = max(sigma_ref, sig, 1e-12)
+        n_eff = 1.0 / probe.size
+        if ref_support:
+            n_eff += 1.0 / float(ref_support)
+        z_obs = abs(m - mean_ref) / (sig_max * math.sqrt(n_eff))
+        ratio = max(sig, 1e-12) / max(sigma_ref, 1e-12)
+        return bool(z_obs > z_thresh
+                    or ratio > sigma_ratio or ratio < 1.0 / sigma_ratio)
+
     def check_drift(self, rng: np.random.Generator,
                     n: Optional[int] = None,
                     z_thresh: float = 6.0,
-                    sigma_ratio: Optional[float] = None) -> bool:
+                    sigma_ratio: Optional[float] = None,
+                    probe_columns: Optional[Mapping] = None) -> bool:
         """Cheap staleness probe against the frozen anchor: re-draw a
         small pilot (block-proportional, like ``run_pilot``) and compare
         its mean/sigma with the stored ``sketch0``/``sigma``.
@@ -315,28 +399,81 @@ class MultiQueryExecutor:
         frozen sketch (under the larger of the two sigmas, so a variance
         blow-up cannot mask a mean shift), or the sigma ratio leaves
         ``[1/sigma_ratio, sigma_ratio]``.  False (no drift) when no
-        anchor is frozen yet.
+        anchor is frozen yet.  ``probe_columns`` reuses an already-drawn
+        probe (the per-key guard shares one draw).
         """
         if self._anchor is None:
             return False
         pilot = self._anchor[0]
-        n = self._DRIFT_PILOT if n is None else int(n)
         sigma_ratio = (self._DRIFT_SIGMA_RATIO if sigma_ratio is None
                        else float(sigma_ratio))
-        total = float(sum(self.block_sizes))
-        draws = []
-        for s, bs in zip(self.block_samplers, self.block_sizes):
-            nj = max(1, int(round(n * bs / total)))
-            draws.append(self._measure_of(self._as_rows(s(nj, rng))))
-        probe = np.concatenate(draws)
-        m = float(np.mean(probe))
-        sig = (float(np.std(probe, ddof=1)) if probe.size > 1
-               else pilot.sigma)
-        sig_ref = max(pilot.sigma, sig, 1e-12)
-        z_obs = abs(m - pilot.sketch0) / (sig_ref / math.sqrt(probe.size))
-        ratio = max(sig, 1e-12) / max(pilot.sigma, 1e-12)
-        return bool(z_obs > z_thresh
-                    or ratio > sigma_ratio or ratio < 1.0 / sigma_ratio)
+        if probe_columns is None:
+            probe_columns = self._draw_probe(rng, n)
+        probe = self._measure_of(probe_columns)
+        return self._stats_drifted(pilot.sketch0, pilot.sigma, probe,
+                                   z_thresh, sigma_ratio,
+                                   ref_support=pilot.pilot_size)
+
+    def drifted_keys(self, probe_columns: Mapping[str, np.ndarray],
+                     z_thresh: float = 6.0,
+                     sigma_ratio: Optional[float] = None) -> "list":
+        """Warm ``StoreKey``s whose own REFINED anchor the probe rows
+        contradict — the predicate-matching probe mean/sigma is compared
+        against the key's anchor (not the global one), so a drift confined
+        to one predicate's sub-population invalidates only that key.
+        Keys riding the global anchor are covered by ``check_drift``."""
+        sigma_ratio = (self._DRIFT_SIGMA_RATIO if sigma_ratio is None
+                       else float(sigma_ratio))
+        out = []
+        warm = {**{k: s.anchor for k, s in self._stores.items()},
+                **{k: s.anchor for k, s in self._device_stores.items()}}
+        measure = (self._measure_of(probe_columns) if warm
+                   else np.zeros(0))
+        for skey, anchor in warm.items():
+            if anchor is None or anchor.source != "refined" \
+                    or skey.where is None:
+                continue
+            try:
+                m = skey.where.mask(probe_columns)
+            except KeyError:
+                continue  # probe lacks the predicate column: no evidence
+            probe = measure[m]
+            if self._stats_drifted(anchor.sketch0 - anchor.shift,
+                                   anchor.sigma, probe, z_thresh,
+                                   sigma_ratio,
+                                   ref_support=anchor.support):
+                out.append(skey)
+        return out
+
+    def _drop_key_state(self, skey: StoreKey,
+                        stores: Optional[dict] = None) -> None:
+        """Tear down ONE key's warm state everywhere it lives — host
+        store, device mirror (releasing its stack so surviving members
+        get their state back), per-key sigma cache.  Every other key's
+        store survives untouched."""
+        (self._stores if stores is None else stores).pop(skey, None)
+        dst = self._device_stores.pop(skey, None)
+        if dst is not None and dst._owner is not None:
+            dst._owner.release()
+        self._sigma_cache.pop((skey.group_by, skey.where), None)
+
+    def _reset_key(self, skey: StoreKey,
+                   probe_columns: Optional[Mapping] = None) -> None:
+        """Drop ONE key's warm state (host store, device mirror, cached
+        refined anchor) — every other key's store survives untouched.
+        When probe rows are given, the key's anchor is re-derived from
+        them immediately (fallback: the frozen global anchor), so the
+        key's next store classifies against the drifted sub-population's
+        actual frame."""
+        self._drop_key_state(skey)
+        self._key_anchors.pop(skey.where, None)
+        if probe_columns is not None and self._anchor is not None \
+                and skey.where is not None and self.refine_anchors:
+            g = Anchor.from_pilot(self._anchor[0], self.params)
+            self._key_anchors[skey.where] = g.refine_for_predicate(
+                probe_columns, skey.where, self.params,
+                measure=self.measure,
+                min_support=self.anchor_min_support)
 
     # -- row plumbing ------------------------------------------------------
 
@@ -353,10 +490,10 @@ class MultiQueryExecutor:
 
     def _draw_and_ingest(self, group_stores: Mapping[Tuple, MomentStore],
                          quotas: np.ndarray, rng: np.random.Generator,
-                         shift: float,
                          chunk_blocks: Optional[int] = None) -> None:
         """One tagged pass at explicit per-block quotas, folded into every
-        key's store.
+        key's store — each store receiving the stream translated by ITS
+        OWN anchor shift (per-key anchors may shift differently).
 
         Per-block draws run in block order (the identical RNG stream the
         plain engine consumes); zero-quota blocks are skipped (deficit
@@ -368,9 +505,13 @@ class MultiQueryExecutor:
         counted = set()       # one logical round per store per pass
         for chunk, columns, block_ids in self._iter_row_chunks(
                 quotas, rng, chunk_blocks):
-            values = self._measure_of(columns) + shift
+            raw = self._measure_of(columns)
+            shifted = {}      # shift value -> translated stream (shared)
             for key, store in group_stores.items():
                 where, group_by = key
+                if store.shift not in shifted:
+                    shifted[store.shift] = raw + store.shift
+                values = shifted[store.shift]
                 mask = where.mask(columns) if where is not None else None
                 gids = (self._group_ids(group_by, columns)[0]
                         if group_by is not None else None)
@@ -480,7 +621,8 @@ class MultiQueryExecutor:
         return out
 
     def _query_rate(self, q: IslaQuery, sigma: float,
-                    pilot_columns: Mapping[str, np.ndarray]) -> float:
+                    pilot_columns: Mapping[str, np.ndarray],
+                    anchor: Optional[Anchor] = None) -> float:
         """Predicate-aware Eq. 1: base rate for (e, beta), times the group
         cardinality (each group needs its own m), over the estimated
         selectivity (only matching samples count toward any group's m).
@@ -490,7 +632,18 @@ class MultiQueryExecutor:
         gets the m its variance actually demands.  The pooled sigma stays
         a floor: the same pass also answers the grand (ungrouped)
         aggregate, whose bound the pooled sigma drives.
+
+        A REFINED per-key ``anchor`` replaces the pooled pilot sigma with
+        the matching rows' own sigma — at its upper-confidence value
+        (``Anchor.planning_sigma``), since it was estimated from few
+        matching rows: a measure-correlated predicate that selects a
+        low-variance slice is no longer planned at the whole table's
+        variance (the sample-budget half of boundary refinement; the
+        boundary half keeps the S/L regions populated so the bound is
+        actually earned at that smaller m).
         """
+        if anchor is not None and anchor.source == "refined":
+            sigma = anchor.planning_sigma(q.beta)
         base = sampling_rate(q.e, sigma, q.beta, self.data_size)
         factor = 1.0
         if q.group_by is not None:
@@ -505,16 +658,20 @@ class MultiQueryExecutor:
         return min(1.0, base * factor)
 
     def plan_rate(self, queries: Sequence[IslaQuery], sigma: float,
-                  pilot_columns: Optional[Mapping[str, np.ndarray]] = None
-                  ) -> float:
+                  pilot_columns: Optional[Mapping[str, np.ndarray]] = None,
+                  anchors: Optional[dict] = None) -> float:
         """max over the sample-consuming queries of the predicate-aware
-        Eq. 1 rate — the shared sample must satisfy the strictest demand."""
+        Eq. 1 rate — the shared sample must satisfy the strictest demand.
+        ``anchors`` (pass key -> Anchor) supplies refined per-key sigmas."""
         sampled = self.sampled_queries(queries)
         if not sampled:  # all-exact batch: one minimal probe pass
             return sampling_rate(self.params.e, sigma, self.params.beta,
                                  self.data_size)
         cols = pilot_columns if pilot_columns is not None else {}
-        return max(self._query_rate(q, sigma, cols) for q in sampled)
+        anchors = anchors or {}
+        return max(self._query_rate(q, sigma, cols,
+                                    anchor=anchors.get(_pass_key(q)))
+                   for q in sampled)
 
     def validate(self, queries: Sequence[IslaQuery]) -> None:
         if not queries:
@@ -629,8 +786,13 @@ class MultiQueryExecutor:
                 self._pilot_stats_fn(route))
         elif pilot_columns is None:
             pilot_columns = {}
-        shifted_sketch0 = pilot.sketch0 + pilot.shift
-        boundaries = make_boundaries(shifted_sketch0, pilot.sigma, params)
+        global_anchor = Anchor.from_pilot(pilot, params)
+        shifted_sketch0 = global_anchor.sketch0
+        boundaries = global_anchor.boundaries
+        anchors = {_pass_key(q): None for q in queries}
+        for key in anchors:
+            anchors[key] = self._key_anchor(key, global_anchor,
+                                            pilot_columns, params)
 
         # Resolve each distinct requested mode once (the "auto" heuristic
         # and the ISLA-E geometry fit live in resolve_mode_and_geometry).
@@ -648,13 +810,40 @@ class MultiQueryExecutor:
         for resolved, (geometry, ids) in buckets.items():
             rate = (rate_override if rate_override is not None
                     else self.plan_rate([queries[i] for i in ids],
-                                        pilot.sigma, pilot_columns))
+                                        pilot.sigma, pilot_columns,
+                                        anchors=anchors))
             mode_groups.append(ModeGroup(mode=resolved, geometry=geometry,
                                          rate=rate, query_ids=ids))
         return QueryPlan(queries=list(queries), pilot=pilot,
                          pilot_columns=pilot_columns, boundaries=boundaries,
                          shifted_sketch0=shifted_sketch0,
-                         mode_groups=mode_groups)
+                         mode_groups=mode_groups, anchor=global_anchor,
+                         anchors=anchors)
+
+    def _key_anchor(self, key, global_anchor: Anchor,
+                    pilot_columns: Mapping[str, np.ndarray],
+                    params: IslaParams) -> Anchor:
+        """One pass key's anchor: refined from the predicate-matching
+        pilot rows when enabled and supported, the global anchor
+        otherwise.  Refined anchors are cached against the FROZEN pilot
+        (same identity check as the sigma cache), so warm incremental
+        ticks re-plan under byte-identical frames — except where a
+        per-key drift reset re-derived the entry from fresher probe rows
+        (``_reset_key``), which deliberately wins over re-refining from
+        the stale pilot."""
+        where, _ = key
+        if not self.refine_anchors or where is None:
+            return global_anchor
+        cacheable = (self._anchor is not None
+                     and pilot_columns is self._anchor[1])
+        if cacheable and where in self._key_anchors:
+            return self._key_anchors[where]
+        a = global_anchor.refine_for_predicate(
+            pilot_columns, where, params, measure=self.measure,
+            min_support=self.anchor_min_support)
+        if cacheable:
+            self._key_anchors[where] = a
+        return a
 
     # -- execution ---------------------------------------------------------
 
@@ -747,7 +936,7 @@ class MultiQueryExecutor:
             else:
                 ex2 = float("nan")
         result = AggregateResult(
-            answer=mean_shifted - pilot.shift, sketch0=pilot.sketch0,
+            answer=mean_shifted - store.shift, sketch0=pilot.sketch0,
             sigma=pilot.sigma, sampling_rate=mg.rate,
             sample_size=sample_size, blocks=blocks,
             boundaries=plan.boundaries)
@@ -769,10 +958,12 @@ class MultiQueryExecutor:
         n_b = store.n_blocks
         n_groups = store.n_groups
         totals = store.totals
+        sigma = (store.anchor.sigma if store.anchor is not None
+                 else plan.pilot.sigma)
         if need_mean and store.has_regions:
             mom_s, mom_l = store.mom_s, store.mom_l
             partials = self._partials(
-                mom_s, mom_l, store.sketch0, plan.pilot.sigma,
+                mom_s, mom_l, store.sketch0, sigma,
                 params, mg.mode, mg.geometry, route).reshape(n_groups, n_b)
         else:
             mom_s = mom_l = np.zeros((n_groups * n_b, 4))
@@ -854,6 +1045,16 @@ class MultiQueryExecutor:
         device copy is authoritative — moments never come back."""
         skey = StoreKey(where=key[0], group_by=key[1], mode=mg.mode)
         dst = self._device_stores.get(skey)
+        if dst is not None and dst.anchor is not None \
+                and host_store.anchor is not None \
+                and dst.anchor.fingerprint != host_store.anchor.fingerprint:
+            # Stale device mirror under a replaced anchor (per-key reset):
+            # release it from its stack (survivors keep their state) and
+            # rebuild from the fresh host store.
+            if dst._owner is not None:
+                dst._owner.release()
+            self._device_stores.pop(skey, None)
+            dst = None
         if dst is None:
             warm = (host_store.mom_s.any() or host_store.totals.any()
                     or host_store.n_sampled.any())
@@ -865,7 +1066,8 @@ class MultiQueryExecutor:
                     host_store.n_blocks, host_store.boundaries,
                     host_store.sketch0, self.block_sizes,
                     shift=host_store.shift,
-                    n_groups=host_store.n_groups)
+                    n_groups=host_store.n_groups,
+                    anchor=host_store.anchor)
             self._device_stores[skey] = dst
         return dst
 
@@ -895,21 +1097,24 @@ class MultiQueryExecutor:
 
     def _draw_and_tick_device(self, stack: DeviceStack, keys: list,
                               dstores: dict, draw: np.ndarray,
-                              rng: np.random.Generator, shift: float,
+                              rng: np.random.Generator,
                               mg: ModeGroup,
                               chunk_blocks: Optional[int]) -> None:
         """The device-resident pass: the SAME chunked row draw as the
         host path (shared ``iter_chunked_draws`` contract — identical RNG
         stream), but each chunk is folded into every key's store by ONE
         fused launch over the stacked cells instead of per-key host
-        bincounts."""
+        bincounts.  Each key's samples enter the launch in that key's OWN
+        anchor frame: the dense pane recovers it via the stack's static
+        per-key affines, the tagged path translates/scales each key's
+        slice on the host."""
         import jax.numpy as jnp
 
         dev_mode = self._device_mode(mg.mode)
         dense = stack.dtype != jnp.float64
         for chunk, columns, block_ids in self._iter_row_chunks(
                 draw, rng, chunk_blocks):
-            values = self._measure_of(columns) + shift
+            raw = self._measure_of(columns)
             if dense:
                 # Dense block-major payload: the full chunk stream once,
                 # plus each key's (m,) GROUP BY codes / predicate mask —
@@ -932,18 +1137,24 @@ class MultiQueryExecutor:
                                 group_by, columns)[0]
                         key_gids.append(gid_cache[group_by])
                 stack.tick(self.params, mode=dev_mode,
-                           geometry=mg.geometry, values=values,
+                           geometry=mg.geometry, values=raw,
                            quotas=chunk.chunk_quotas,
                            dense=(key_gids, key_valids),
                            count_round=chunk.first)
                 continue
             segs, vals = [], []
+            shifted = {}  # (shift, scale) -> prepared stream (shared)
             for k_i, key in enumerate(keys):
                 where, group_by = key
+                dst = dstores[key]
+                fkey = (dst.shift, dst.scale)
+                if fkey not in shifted:
+                    shifted[fkey] = (raw + dst.shift) / dst.scale
+                values = shifted[fkey]
                 mask = where.mask(columns) if where is not None else None
                 gids = (self._group_ids(group_by, columns)[0]
                         if group_by is not None else None)
-                segs.append(dstores[key].build_seg(
+                segs.append(dst.build_seg(
                     block_ids, gids, mask,
                     offset=int(stack.offsets[k_i])))
                 vals.append(values if mask is None else values[mask])
@@ -1020,7 +1231,7 @@ class MultiQueryExecutor:
             mom_s=np.zeros((n, 4)), mom_l=np.zeros((n, 4)),
             n_sampled=dst.n_sampled.copy())
         result = AggregateResult(
-            answer=mean_shifted - pilot.shift, sketch0=pilot.sketch0,
+            answer=mean_shifted - dst.shift, sketch0=pilot.sketch0,
             sigma=pilot.sigma, sampling_rate=mg.rate,
             sample_size=sample_size, blocks=blocks,
             boundaries=plan.boundaries)
@@ -1153,33 +1364,43 @@ class MultiQueryExecutor:
         out = {}
         for key, aggs in key_aggs.items():
             where, group_by = key
+            anchor = plan.key_anchor(key)
             n_groups = (int(self.group_domains[group_by])
                         if group_by is not None else 1)
             if stores is not None:
                 skey = StoreKey(where=where, group_by=group_by,
                                 mode=mg.mode)
                 st = stores.get(skey)
+                if st is not None and st.anchor is not None \
+                        and st.anchor.fingerprint != anchor.fingerprint:
+                    # The key's anchor changed (a per-key drift reset
+                    # re-derived it): moments classified under the old
+                    # cuts cannot merge with the new frame.  Only THIS
+                    # key goes cold — warm batch-mates are untouched —
+                    # and the new frame is pinned as the key's anchor so
+                    # later plans keep resolving to it.
+                    self._drop_key_state(skey, stores)
+                    if where is not None:
+                        self._key_anchors[where] = anchor
+                    st = None
                 if st is None:
                     # Persistent stores always accumulate regions: a later
                     # batch may add an AVG to a key first seen COUNT-only,
                     # and past samples cannot be re-classified.
-                    st = MomentStore.fresh(
-                        n_b, plan.boundaries, plan.shifted_sketch0,
-                        shift=plan.pilot.shift, n_groups=n_groups)
+                    st = MomentStore.from_anchor(n_b, anchor,
+                                                 n_groups=n_groups)
                     stores[skey] = st
             elif key == (None, None):
                 # The plain pass always keeps regions (its composed mean
                 # is the leverage answer); totals only feed VAR's ex2.
-                st = MomentStore.fresh(
-                    n_b, plan.boundaries, plan.shifted_sketch0,
-                    shift=plan.pilot.shift, n_groups=n_groups,
+                st = MomentStore.from_anchor(
+                    n_b, anchor, n_groups=n_groups,
                     has_totals=("VAR" in aggs))
             else:
                 # Keyed passes always need totals (cell weights / counts);
                 # COUNT-only keys skip the region sweep.
-                st = MomentStore.fresh(
-                    n_b, plan.boundaries, plan.shifted_sketch0,
-                    shift=plan.pilot.shift, n_groups=n_groups,
+                st = MomentStore.from_anchor(
+                    n_b, anchor, n_groups=n_groups,
                     has_regions=(aggs != {"COUNT"}))
             out[key] = st
         return out, key_aggs
@@ -1226,8 +1447,7 @@ class MultiQueryExecutor:
         if device_resident:
             if new_samples:
                 self._draw_and_tick_device(stack, keys, dstores, draw, rng,
-                                           plan.pilot.shift, mg,
-                                           chunk_blocks)
+                                           mg, chunk_blocks)
             else:
                 # Warm repeat: re-solve resident moments (served from the
                 # stats cache when nothing changed — zero transfers).
@@ -1235,7 +1455,6 @@ class MultiQueryExecutor:
                            geometry=mg.geometry)
         elif new_samples:
             self._draw_and_ingest(group_stores, draw, rng,
-                                  plan.pilot.shift,
                                   chunk_blocks=chunk_blocks)
 
         sp = None  # the plain pass is composed lazily: an all-relational
@@ -1261,8 +1480,10 @@ class MultiQueryExecutor:
                             need_mean=(key_aggs[key] != {"COUNT"})))
                 n_drawn = (dstores[key].total_sampled if device_resident
                            else st.total_sampled)
+                shift_k = (dstores[key].shift if device_resident
+                           else st.shift)
                 ans = self._compose_keyed(
-                    q, keyed[key], mg, pass_id, plan.pilot.shift, n_drawn)
+                    q, keyed[key], mg, pass_id, shift_k, n_drawn)
             ans.new_samples = new_samples
             out.append((i, ans))
         return out
@@ -1270,7 +1491,8 @@ class MultiQueryExecutor:
     def _budget_allocations(self, plan: QueryPlan,
                             deadline_samples: Optional[int],
                             budget: Optional[int],
-                            mg_stores: "list") -> dict:
+                            mg_stores: "list",
+                            budget_floor: Optional[int] = None) -> dict:
         """Split a run's NEW-sample budget across its mode-group passes by
         marginal-error reduction (``moment_store.split_budget``): the most
         uncertain stores — fewest matching samples, highest observed sigma
@@ -1303,7 +1525,8 @@ class MultiQueryExecutor:
             deficits.append(int(union.sum()))
             n_now.append(lo_n or 0.0)
             sigmas.append(hi_sig)
-        alloc = split_budget(n_now, sigmas, deficits, int(budget))
+        alloc = split_budget(n_now, sigmas, deficits, int(budget),
+                             min_per_store=int(budget_floor or 0))
         return {pass_id: int(a) for pass_id, a in enumerate(alloc)}
 
     def _shared_pass(self, queries: Sequence[IslaQuery],
@@ -1327,8 +1550,7 @@ class MultiQueryExecutor:
         quotas = np.asarray(
             block_quotas(self.block_sizes, mg.rate, deadline_samples),
             dtype=np.int64)
-        self._draw_and_ingest({(None, None): store}, quotas, rng,
-                              plan.pilot.shift)
+        self._draw_and_ingest({(None, None): store}, quotas, rng)
         return self._base_stats(plan, mg, store, route)
 
     def run(self, queries: Sequence[IslaQuery], rng: np.random.Generator,
@@ -1339,26 +1561,74 @@ class MultiQueryExecutor:
             incremental: bool = False,
             budget: Optional[int] = None,
             chunk_blocks: Optional[int] = None,
-            drift_check: Optional[float] = None) -> "list[QueryAnswer]":
-        """Answer every query from one shared pass per mode-group.
+            drift_check: Optional[float] = None,
+            budget_floor: Optional[int] = None) -> "list[QueryAnswer]":
+        """Answer every query from one shared sampling pass per mode-group.
 
-        ``mode``/``route`` select the default Phase 2 solver and where it
-        runs (a query's own ``mode`` field overrides the default); the
-        per-query (e, beta, where, group_by) drive each mode-group's shared
-        sampling rate and each answer's reported bound.  Answers come back
-        in query order.
+        Parameters
+        ----------
+        queries : sequence of IslaQuery
+            The batch; answers come back in query order.
+        rng : numpy.random.Generator
+            Host RNG every draw (pilot + passes) consumes, in block order.
+        mode : str, optional
+            Default Phase 2 solver ("faithful", "faithful_cf",
+            "calibrated", "empirical", "auto"); a query's own ``mode``
+            field overrides it.  The planner groups queries by RESOLVED
+            mode and runs one shared pass per group.
+        route : str, optional
+            Where Phase 2 (and, incrementally, the whole tick) runs:
+            ``"host"`` (float64 numpy) or ``"device"`` (jnp; fp32 with
+            anchor-scale normalization unless jax runs in x64).
+        rate_override : float, optional
+            Bypass Eq. 1 and sample at exactly this rate (experiments).
+        sigma_guess : float, optional
+            Skip the pilot's sigma bootstrap with a prior estimate.
+        deadline_samples : int, optional
+            Cap every block's quota (the §VII-F time constraint).
+            Answers below their Eq. 1 m degrade the bound honestly.
+        incremental : bool, optional
+            Serve with persistent state: the first run pilots and FREEZES
+            the anchor (per-key refined anchors included), every pass
+            merges into a per-``StoreKey`` ``MomentStore``, and later
+            runs top up only the per-block sample deficit their queries
+            still demand — a repeat predicate at the same (or looser)
+            precision is answered from the warm store with ZERO new
+            samples (``QueryAnswer.new_samples`` reports the top-up).
+        budget : int, optional
+            Incremental only: cap this run's total NEW samples, split
+            across passes by marginal-error reduction
+            (``moment_store.split_budget``) — the deadline-aware tick.
+            Budget-starved answers degrade the bound honestly and refine
+            over later ticks.
+        chunk_blocks : int, optional
+            Stream the row draw through chunks of that many blocks
+            (O(one-chunk) row memory, bit-identical via the engine's
+            carry contract).
+        drift_check : float or True, optional
+            Incremental only: probe the frozen anchors against a cheap
+            pilot re-draw before planning.  A GLOBAL drift (probe mean
+            beyond ``z`` standard errors of the frozen sketch, or a 2x
+            sigma ratio) drops every warm store and re-pilots cold; a
+            drift confined to one refined key's matching sub-population
+            resets ONLY that key (its anchor is re-derived from the probe
+            rows) while every other warm store survives.  ``True`` uses
+            the default z = 6.0.
+        budget_floor : int, optional
+            Incremental + budget only: per-pass floor handed to
+            ``split_budget(min_per_store=...)`` — a flood of new
+            predicates cannot starve a nearly-converged store's small
+            top-up (admission-loop QoS).
 
-        ``incremental=True`` turns the executor into a serving system with
-        state: the first run pilots and freezes the anchor, every pass
-        merges into a persistent per-``StoreKey`` moment store, and later
-        runs top up only the sample deficit their queries still demand —
-        a repeat predicate at the same (or looser) precision is answered
-        from the warm store with ZERO new samples (``new_samples`` on each
-        answer reports the top-up).  ``budget`` caps this run's total new
-        samples, split across passes by marginal-error reduction — the
-        deadline-aware tick path.  ``chunk_blocks`` streams the row draw
-        through block chunks (O(one-chunk) row memory, bit-identical).
+        Returns
+        -------
+        list of QueryAnswer
+            One answer per query, in query order, each carrying value,
+            bound (None = best-effort), rate/pass provenance and — under
+            WHERE / GROUP BY — per-group rows.
 
+        Notes
+        -----
         ``route="device"`` with ``incremental=True`` is the DEVICE-
         RESIDENT serving path: every ``StoreKey``'s moments live as jax
         arrays between runs, a mode-group's tick is one fused launch over
@@ -1371,19 +1641,16 @@ class MultiQueryExecutor:
         must stay consistent for a given warm state — call
         ``reset_stores()`` before switching an executor between warm host
         and device serving.
-
-        ``drift_check`` (incremental only) guards the frozen anchor
-        against table churn: before planning, a cheap pilot re-draw is
-        compared with the stored sketch0/sigma (``check_drift``) and on
-        drift ALL warm stores are dropped — the run re-pilots and starts
-        cold instead of refining against a changed table forever.  Pass a
-        z-threshold (``True`` uses the default 6.0).
         """
         if budget is not None and not incremental:
             raise ValueError(
                 "budget caps the incremental deficit top-up; without "
                 "incremental=True there is no store ledger to budget "
                 "against (use deadline_samples for a per-block quota cap)")
+        if budget_floor is not None and budget is None:
+            raise ValueError(
+                "budget_floor floors the per-pass budget split; it "
+                "requires budget=")
         if drift_check is not None and not incremental:
             raise ValueError(
                 "drift_check probes the frozen incremental anchor; it "
@@ -1391,8 +1658,15 @@ class MultiQueryExecutor:
         if incremental and drift_check is not None \
                 and self._anchor is not None:
             z = 6.0 if drift_check is True else float(drift_check)
-            if self.check_drift(rng, z_thresh=z):
+            probe = self._draw_probe(rng)
+            if self.check_drift(rng, z_thresh=z, probe_columns=probe):
                 self.reset_stores()
+            else:
+                # Global anchor still holds: check each warm REFINED key
+                # against its own anchor; a drifted predicate resets (and
+                # re-anchors) only itself.
+                for skey in self.drifted_keys(probe, z_thresh=z):
+                    self._reset_key(skey, probe_columns=probe)
         if incremental and self._anchor is not None:
             pilot, pilot_columns = self._anchor
             plan = self.plan(queries, rng, mode=mode, route=route,
@@ -1409,7 +1683,7 @@ class MultiQueryExecutor:
         mg_stores = [self._group_stores(plan, mg, stores)
                      for mg in plan.mode_groups]
         alloc = (self._budget_allocations(plan, deadline_samples, budget,
-                                          mg_stores)
+                                          mg_stores, budget_floor)
                  if incremental else {})
         answers = [None] * len(queries)
         for pass_id, mg in enumerate(plan.mode_groups):

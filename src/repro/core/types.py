@@ -8,6 +8,7 @@ crosses the wire is O(1) regardless of sample size.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Mapping, Optional, Tuple
 
 import jax
@@ -215,6 +216,162 @@ class Boundaries:
 
     def as_tuple(self) -> Tuple[float, float, float, float]:
         return (self.s_lo, self.s_hi, self.l_lo, self.l_hi)
+
+
+@dataclasses.dataclass(frozen=True)
+class Anchor:
+    """The frozen classification frame a moment store accumulates under.
+
+    An anchor bundles everything Phase 1 classification and Phase 2
+    iteration are *conditioned on*: the region ``boundaries`` (§IV-A1 cut
+    points), the ``sketch0`` Phase 2 starts from (shifted scale), the
+    footnote-1 positivity ``shift``, and the pilot ``sigma`` the rate
+    planner reads.  Boundaries and shift are FROZEN for the lifetime of any
+    store built on the anchor — merged moments cannot be re-classified —
+    while ``sketch0`` stays re-anchorable (``MomentStore.reanchor``), which
+    is why :attr:`fingerprint` deliberately excludes it.
+
+    ``refine_for_predicate`` is the per-key constructor (ROADMAP "boundary
+    refinement under selective predicates"): a heavily measure-correlated
+    ``WHERE`` starves the S/L regions of globally-derived boundaries, so a
+    key's anchor is re-derived from the pilot rows *matching that
+    predicate*, falling back to the global anchor when the matching
+    support is too thin to trust.
+
+    Parameters
+    ----------
+    boundaries : Boundaries
+        Region cut points on the shifted value axis.
+    sketch0 : float
+        Phase 2 starting sketch, shifted scale (``pilot mean + shift``).
+    shift : float
+        Footnote-1 translation applied to raw values before the math.
+    sigma : float
+        ddof-1 standard deviation of the anchor's source rows (raw scale —
+        sigma is shift-invariant).
+    support : int
+        Number of pilot rows the statistics derive from.
+    source : str
+        ``"global"`` (whole pilot) or ``"refined"`` (predicate-matching
+        pilot rows).
+
+    Examples
+    --------
+    >>> a = Anchor(Boundaries(60., 90., 110., 140.), 100.0, 0.0, 20.0,
+    ...            support=512)
+    >>> a.refine_for_predicate({}, None, IslaParams()) is a
+    True
+    """
+
+    boundaries: Boundaries
+    sketch0: float
+    shift: float
+    sigma: float
+    support: int = 0
+    source: str = "global"
+
+    @property
+    def fingerprint(self) -> Tuple:
+        """Hashable identity of the FROZEN part of the anchor.
+
+        Two stores whose anchors share a fingerprint accumulated moments
+        under identical classification frames and may merge; a differing
+        fingerprint invalidates only stores keyed on it.  ``sketch0`` and
+        ``sigma`` are excluded: re-anchoring a store's sketch (or a sigma
+        re-estimate) does not re-classify its accumulated moments.
+        """
+        return (self.boundaries.as_tuple(), self.shift)
+
+    @staticmethod
+    def from_pilot(pilot, params: "IslaParams") -> "Anchor":
+        """The global anchor — exactly the frame ``aggregate()`` derives
+        from a ``PilotResult``."""
+        from .boundaries import make_boundaries
+        sketch0 = pilot.sketch0 + pilot.shift
+        return Anchor(
+            boundaries=make_boundaries(sketch0, pilot.sigma, params),
+            sketch0=sketch0, shift=pilot.shift, sigma=pilot.sigma,
+            support=int(pilot.pilot_size), source="global")
+
+    def refine_for_predicate(self, pilot_columns: Mapping[str, np.ndarray],
+                             where: Optional["Predicate"],
+                             params: "IslaParams",
+                             measure: str = "value",
+                             min_support: int = 64) -> "Anchor":
+        """Derive a per-predicate anchor from the matching pilot rows.
+
+        Returns ``self`` (the global anchor) whenever refinement cannot
+        improve on it: no predicate, no pilot rows captured, the predicate
+        matches *every* pilot row (the refined frame would be the global
+        frame re-estimated), fewer than ``min_support`` matching rows, or
+        a degenerate (non-positive) matching sigma.
+
+        Parameters
+        ----------
+        pilot_columns : mapping of str to ndarray
+            The captured pilot rows (equal-length column arrays).
+        where : Predicate or None
+            The key's WHERE clause.
+        params : IslaParams
+            Supplies the ``p1``/``p2`` boundary factors.
+        measure : str
+            Name of the aggregated column inside ``pilot_columns``.
+        min_support : int
+            Minimum matching pilot rows before the refined statistics are
+            trusted over the global ones.
+
+        Returns
+        -------
+        Anchor
+            A ``source="refined"`` anchor over the matching rows, or
+            ``self`` on fallback.
+        """
+        if where is None or not pilot_columns or measure not in pilot_columns:
+            return self
+        m = np.asarray(where.mask(pilot_columns), dtype=bool)
+        if m.size == 0 or bool(np.all(m)):
+            return self
+        vals = np.asarray(pilot_columns[measure], dtype=np.float64)[m]
+        if vals.size < max(int(min_support), 2):
+            return self
+        sigma = float(np.std(vals, ddof=1))
+        if not np.isfinite(sigma) or sigma <= 0:
+            return self
+        mean = float(np.mean(vals))
+        lo = float(np.min(vals))
+        # Same footnote-1 rule as run_pilot: shift only when the matching
+        # rows actually reach non-positive values, with a 1-sigma margin.
+        shift = 0.0 if lo > 0.0 else -lo + sigma
+        sketch0 = mean + shift
+        from .boundaries import make_boundaries
+        return Anchor(
+            boundaries=make_boundaries(sketch0, sigma, params),
+            sketch0=sketch0, shift=shift, sigma=sigma,
+            support=int(vals.size), source="refined")
+
+    def planning_sigma(self, beta: float = 0.95) -> float:
+        """Upper-confidence sigma for Eq. 1 rate planning.
+
+        A refined anchor's sigma is estimated from its (often few)
+        matching pilot rows; planning the sample size at sigma-hat
+        exactly would under-shoot the required m about half the time
+        (se(sigma-hat) ~ sigma / sqrt(2 n)).  Inflating by that
+        estimation uncertainty keeps the earned-bound rate near beta
+        while staying far below the pooled-sigma bill the refinement
+        replaced.
+        """
+        if self.support < 2:
+            return self.sigma
+        from .preestimation import z_score
+        return self.sigma * (1.0 + z_score(beta)
+                             / math.sqrt(2.0 * self.support))
+
+    def describe(self) -> str:
+        b = self.boundaries
+        return (f"anchor[{self.source}] sketch0={self.sketch0:g} "
+                f"sigma={self.sigma:g} shift={self.shift:g} "
+                f"S=({b.s_lo:g},{b.s_hi:g}) L=({b.l_lo:g},{b.l_hi:g}) "
+                f"support={self.support}")
 
 
 @dataclasses.dataclass

@@ -130,6 +130,33 @@ def _moments_batched_kernel(bounds_ref, prior_ref, x_ref, o_ref):
     o_ref[...] += tile[None]
 
 
+def _moments_cellbounds_kernel(bounds_ref, prior_ref, x_ref, o_ref):
+    """``_moments_batched_kernel`` with PER-CELL region cuts: grid dim 0
+    additionally indexes a (1, 4) row of the stacked anchor-bounds table,
+    so cells classifying under different (per-key refined) anchors ride
+    one launch.  The cuts arrive pre-scaled into each cell's own frame
+    (the anchor-scale vector contract of ``distributed.fused_tick``)."""
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = prior_ref[...].astype(jnp.float32)
+
+    x = x_ref[...].astype(jnp.float32)
+    s_lo, s_hi = bounds_ref[0, 0], bounds_ref[0, 1]
+    l_lo, l_hi = bounds_ref[0, 2], bounds_ref[0, 3]
+
+    ms = ((x > s_lo) & (x < s_hi)).astype(jnp.float32)
+    ml = ((x > l_lo) & (x < l_hi)).astype(jnp.float32)
+    xs = x * ms
+    xl = x * ml
+    tile = jnp.stack([
+        jnp.stack([jnp.sum(ms), jnp.sum(xs), jnp.sum(xs * x),
+                   jnp.sum(xs * x * x)]),
+        jnp.stack([jnp.sum(ml), jnp.sum(xl), jnp.sum(xl * x),
+                   jnp.sum(xl * x * x)]),
+    ])
+    o_ref[...] += tile[None]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("tm", "stride", "interpret"))
 def isla_moments_batched_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
@@ -138,7 +165,10 @@ def isla_moments_batched_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
                                 prior: jnp.ndarray = None) -> jnp.ndarray:
     """Batched multi-block ISLA moments — Phase 1 for the batched engine.
 
-    values3d: (n_blocks, rows, 128), rows % tm == 0; bounds: (4,) fp32.
+    values3d: (n_blocks, rows, 128), rows % tm == 0; bounds: (4,) fp32 —
+    or (n_blocks, 4) for PER-CELL anchor cuts (the per-key boundary-
+    refinement path: each cell classifies under its own anchor's
+    boundaries, pre-scaled into its frame, in the same single launch).
     Returns (n_blocks, 2, 4) fp32 moments — one launch feeds every block's
     8 scalars straight into the vectorized Phase 2
     (``repro.core.distributed.phase2`` on stacked rows).  ``stride`` is the
@@ -160,17 +190,24 @@ def isla_moments_batched_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
         raise ValueError(f"prior must be ({n_blocks}, 2, 4), got "
                          f"{prior.shape}")
 
+    per_cell = bounds.ndim == 2
+    if per_cell and bounds.shape != (n_blocks, 4):
+        raise ValueError(f"per-cell bounds must be ({n_blocks}, 4), got "
+                         f"{bounds.shape}")
     grid_spec = pl.GridSpec(
         grid=(n_blocks, n_sel),
         in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),  # bounds: tiny, replicated
+            # bounds: tiny and replicated when shared; a (1, 4) row
+            # indexed by the block axis when per-cell.
+            (pl.BlockSpec((1, 4), lambda b, i: (b, 0)) if per_cell
+             else pl.BlockSpec(memory_space=pl.ANY)),
             pl.BlockSpec((1, 2, 4), lambda b, i: (b, 0, 0)),  # prior cells
             pl.BlockSpec((1, tm, LANE), lambda b, i: (b, i * stride, 0)),
         ],
         out_specs=pl.BlockSpec((1, 2, 4), lambda b, i: (b, 0, 0)),
     )
     return pl.pallas_call(
-        _moments_batched_kernel,
+        _moments_cellbounds_kernel if per_cell else _moments_batched_kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_blocks, 2, 4), jnp.float32),
         interpret=interpret,
@@ -201,6 +238,11 @@ def isla_moments_grouped_pallas(values4d: jnp.ndarray, bounds: jnp.ndarray,
                          f"shape {values4d.shape}")
     n_groups, n_blocks, rows, lane = values4d.shape
     flat = values4d.reshape(n_groups * n_blocks, rows, lane)
+    if bounds.ndim == 3:  # per-cell anchor cuts on the (group, block) axis
+        if bounds.shape != (n_groups, n_blocks, 4):
+            raise ValueError(f"per-cell bounds must be ({n_groups}, "
+                             f"{n_blocks}, 4), got {bounds.shape}")
+        bounds = bounds.reshape(n_groups * n_blocks, 4)
     if prior is not None:
         if prior.shape != (n_groups, n_blocks, 2, 4):
             raise ValueError(f"prior must be ({n_groups}, {n_blocks}, 2, "
@@ -220,7 +262,8 @@ def isla_fused_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
                       prior: jnp.ndarray, sketch0: jnp.ndarray,
                       params, mode: str = "calibrated", geometry=None,
                       tm: int = DEFAULT_TM, stride: int = 1,
-                      interpret: bool = False):
+                      interpret: bool = False,
+                      inv_scale: jnp.ndarray = None):
     """Fused Phase 1 + Phase 2: one launch from samples to answers.
 
     Chains the batched Pallas moment accumulation (seeded from the
@@ -231,23 +274,28 @@ def isla_fused_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
     moments -> host -> phase2.
 
     values3d: (n_cells, rows, 128) — the flattened (group, block) cell
-    axis; bounds (4,) and ``sketch0`` (scalar or (n_cells,)) on the same
-    (pre-scaled) value axis as ``values3d``; ``prior`` (n_cells, 2, 4) is
-    consumed and replaced by the merged moments.
+    axis; bounds (4,) — or (n_cells, 4) for per-key refined anchors —
+    and ``sketch0`` (scalar or (n_cells,)) on the same (pre-scaled) value
+    axis as ``values3d``; ``prior`` (n_cells, 2, 4) is consumed and
+    replaced by the merged moments.  ``inv_scale`` is the per-cell
+    anchor-scale vector: each cell's Phase 2 stopping threshold (and the
+    ISLA-E ``b0``) is divided into that cell's normalized frame, exactly
+    as in ``distributed.fused_tick``.
 
     Returns ``(moments, partials)``: the merged (n_cells, 2, 4) state —
     feed it back as the next round's ``prior`` — and the (n_cells,)
     Phase 2 partial answers.
     """
-    from repro.core.distributed import phase2
+    from repro.core.distributed import _scaled_solve_args, phase2
 
     mom = isla_moments_batched_pallas(values3d, bounds, tm=tm,
                                       stride=stride, interpret=interpret,
                                       prior=prior)
     if geometry is not None:
         geometry = (jnp.float32(geometry[0]), jnp.float32(geometry[1]))
+    thr, geometry = _scaled_solve_args(params, geometry, inv_scale)
     partials = phase2(mom[:, 0, :], mom[:, 1, :], sketch0, params,
-                      mode=mode, geometry=geometry)
+                      mode=mode, geometry=geometry, thr=thr)
     return mom, partials
 
 

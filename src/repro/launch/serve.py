@@ -67,27 +67,59 @@ class IslaAdmissionLoop:
 
     Each ``tick()`` drains up to ``max_batch`` pending queries, hands the
     batch to ``MultiQueryExecutor.run`` — which plans one shared sampling
-    pass per resolved Phase 2 mode-group — and returns the finished tickets.
-    Every answer carries provenance: the shared rate its pass sampled at,
-    the pass id it shared with its batch-mates, and the resolved mode.
+    pass per resolved Phase 2 mode-group — and returns the finished
+    tickets.  Every answer carries provenance: the shared rate its pass
+    sampled at, the pass id it shared with its batch-mates, and the
+    resolved mode.
 
-    ``incremental=True`` turns ticks into continuation rounds: every pass
-    merges into the executor's persistent per-(where, group_by, mode)
-    moment stores, so a repeat predicate in a later tick is served from the
-    warm store and draws only its sample deficit (zero when the store is
-    already ahead).  ``deadline_samples`` is the deadline-aware tick
-    budget: at most that many NEW samples per tick, split across the
-    tick's passes by marginal-error reduction
-    (``moment_store.split_budget``) — starved stores absorb the budget
-    first, and answers that could not earn their (e, beta) this tick
-    report a best-effort bound and refine on later ticks.
+    Parameters
+    ----------
+    executor : MultiQueryExecutor
+        The executor whose (possibly persistent) stores serve the ticks.
+    rng : numpy.random.Generator
+        RNG every tick's draws consume.
+    mode : str, optional
+        Default Phase 2 mode handed to ``run`` (queries may override).
+    route : str, optional
+        ``"host"`` or ``"device"``; with ``incremental=True`` the device
+        route keeps every store's moments resident between ticks and runs
+        each tick as one fused launch per mode-group.
+    max_batch : int, optional
+        Most queries admitted per tick; overflow waits for the next tick.
+    incremental : bool, optional
+        Turn ticks into continuation rounds: every pass merges into the
+        executor's persistent per-(where, group_by, mode) moment stores,
+        so a repeat predicate in a later tick is served from the warm
+        store and draws only its sample deficit (zero when the store is
+        already ahead).
+    deadline_samples : int, optional
+        Deadline-aware tick budget: at most that many NEW samples per
+        tick, split across the tick's passes by marginal-error reduction
+        (``moment_store.split_budget``) — starved stores absorb the
+        budget first, and answers that could not earn their (e, beta)
+        this tick report a best-effort bound and refine on later ticks.
+    drift_check : float, optional
+        Staleness guard: probe the frozen anchors each tick; global drift
+        resets all warm stores (cold re-pilot), drift confined to one
+        refined predicate's sub-population resets only that key.
+    budget_floor : int, optional
+        Per-pass sample floor within the ``deadline_samples`` split
+        (admission-loop QoS): a flood of new predicates cannot starve a
+        nearly-converged store's small top-up.
+
+    Examples
+    --------
+    >>> loop = IslaAdmissionLoop(executor, rng, incremental=True,
+    ...                          deadline_samples=20000, budget_floor=64)
+    ... # doctest: +SKIP
     """
 
     def __init__(self, executor, rng: np.random.Generator,
                  mode: str = "calibrated", route: str = "host",
                  max_batch: int = 64, incremental: bool = False,
                  deadline_samples: Optional[int] = None,
-                 drift_check: Optional[float] = None):
+                 drift_check: Optional[float] = None,
+                 budget_floor: Optional[int] = None):
         self.executor = executor
         self.rng = rng
         self.mode = mode
@@ -104,8 +136,13 @@ class IslaAdmissionLoop:
             raise ValueError(
                 "drift_check probes the frozen incremental anchor; it "
                 "requires incremental=True")
+        if budget_floor is not None and deadline_samples is None:
+            raise ValueError(
+                "budget_floor floors the deadline_samples split; it "
+                "requires deadline_samples=")
         self.deadline_samples = deadline_samples
         self.drift_check = drift_check
+        self.budget_floor = budget_floor
         self._pending = collections.deque()
         self._next_tid = 0
         self._tick = 0
@@ -136,7 +173,8 @@ class IslaAdmissionLoop:
             [t.query for t in batch], self.rng, mode=self.mode,
             route=self.route, incremental=self.incremental,
             budget=self.deadline_samples if self.incremental else None,
-            drift_check=self.drift_check)
+            drift_check=self.drift_check,
+            budget_floor=self.budget_floor)
         seen_passes = set()
         for t, a in zip(batch, answers):
             t.answer = a
@@ -226,7 +264,8 @@ def serve_isla(args) -> None:
                              mode="auto", route=args.route,
                              incremental=args.incremental,
                              deadline_samples=args.deadline_samples,
-                             drift_check=args.drift_check)
+                             drift_check=args.drift_check,
+                             budget_floor=args.budget_floor)
     qrng = np.random.default_rng(args.seed + 2)
     t0 = time.perf_counter()
     total = 0
@@ -310,7 +349,13 @@ def main():
     ap.add_argument("--drift-check", type=float, default=None,
                     help="staleness guard (incremental): pilot re-draw per "
                          "tick; reset warm stores when the anchor drifts "
-                         "beyond this many standard errors")
+                         "beyond this many standard errors (a drift "
+                         "confined to one refined predicate resets only "
+                         "that key)")
+    ap.add_argument("--budget-floor", type=int, default=None,
+                    help="QoS floor within the --deadline-samples split: "
+                         "every pass with a deficit gets at least this "
+                         "many samples per tick")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI smoke runs")
     args = ap.parse_args()
@@ -320,6 +365,9 @@ def main():
     if args.drift_check is not None and not args.incremental:
         ap.error("--drift-check probes the frozen incremental anchor; it "
                  "requires --incremental")
+    if args.budget_floor is not None and args.deadline_samples is None:
+        ap.error("--budget-floor floors the --deadline-samples split; it "
+                 "requires --deadline-samples")
     if args.workload == "isla":
         serve_isla(args)
     else:

@@ -1,0 +1,430 @@
+"""Per-key leverage anchors (predicate-aware boundary refinement).
+
+Covers the Anchor dataclass contracts (degeneration to the global anchor,
+thin-support fallback, fingerprint semantics), per-cell bit parity of a
+refined-anchor pass against the scalar oracle run under the SAME refined
+frame, end-to-end behaviour under a measure-correlated WHERE (refined
+anchors earn the (e, beta) bound where the global anchor degrades, with
+fewer samples), warm-store survival when an unrelated key re-anchors,
+split_budget per-store floors, and the hetero-anchor device stack.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from conftest import normal_samplers
+from repro.core.boundaries import make_boundaries
+from repro.core.engine import (IslaQuery, phase1_sampling, phase2_iteration)
+from repro.core.moment_store import split_budget
+from repro.core.multiquery import MultiQueryExecutor, table_sampler
+from repro.core.types import Anchor, IslaParams, Predicate, StoreKey
+
+MU, SIGMA = 100.0, 20.0
+PARAMS = IslaParams()
+
+
+def _global_anchor(pilot_vals):
+    sigma = float(np.std(pilot_vals, ddof=1))
+    sketch0 = float(np.mean(pilot_vals))
+    return Anchor(boundaries=make_boundaries(sketch0, sigma, PARAMS),
+                  sketch0=sketch0, shift=0.0, sigma=sigma,
+                  support=pilot_vals.size, source="global")
+
+
+def _tail_tables(rng, n_blocks=6, rows=20000, cut=None):
+    """Tables whose predicate column IS the measure (the maximally
+    measure-correlated WHERE: value >= cut selects the upper tail)."""
+    cut = MU + 1.5 * SIGMA if cut is None else cut
+    tables = [{"value": rng.normal(MU, SIGMA, size=rows)}
+              for _ in range(n_blocks)]
+    return tables, Predicate(column="value", lo=cut)
+
+
+# ---------------------------------------------------------------------------
+# Anchor contracts.
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(lo_q=st.floats(min_value=0.0, max_value=0.9),
+       seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_refine_matches_all_rows_degenerates_to_global(lo_q, seed):
+    """PROPERTY: a predicate that matches every pilot row returns the
+    global anchor itself (identity, not merely equal values) — whatever
+    the threshold, as long as it sits at or below the pilot minimum."""
+    rng = np.random.default_rng(seed)
+    vals = rng.normal(MU, SIGMA, size=512)
+    g = _global_anchor(vals)
+    # Any cut at/below the minimum matches everything.
+    cut = float(np.min(vals)) - lo_q * SIGMA
+    a = g.refine_for_predicate({"value": vals},
+                               Predicate(column="value", lo=cut), PARAMS)
+    assert a is g
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_match=st.integers(min_value=0, max_value=63),
+       seed=st.integers(min_value=0, max_value=10 ** 6))
+def test_refine_thin_support_falls_back_to_global(n_match, seed):
+    """PROPERTY: fewer matching pilot rows than min_support (default 64)
+    -> the global anchor, never a noisy refined one."""
+    rng = np.random.default_rng(seed)
+    vals = np.concatenate([rng.normal(MU, SIGMA, size=512),
+                           rng.normal(MU + 100.0, 1.0, size=n_match)])
+    g = _global_anchor(vals)
+    a = g.refine_for_predicate({"value": vals},
+                               Predicate(column="value", lo=MU + 90.0),
+                               PARAMS)
+    assert a is g
+
+
+def test_refine_recentres_on_matching_rows(rng):
+    """With real support the refined anchor sits on the matching rows'
+    own frame: sketch0 near their mean, boundaries bracketing it, a
+    distinct fingerprint from the global anchor's."""
+    vals = rng.normal(MU, SIGMA, size=8192)
+    g = _global_anchor(vals)
+    where = Predicate(column="value", lo=MU + 1.5 * SIGMA)
+    a = g.refine_for_predicate({"value": vals}, where, PARAMS)
+    assert a.source == "refined"
+    match = vals[vals >= MU + 1.5 * SIGMA]
+    assert a.support == match.size >= 64
+    assert a.sketch0 - a.shift == pytest.approx(float(np.mean(match)))
+    assert a.sigma == pytest.approx(float(np.std(match, ddof=1)))
+    assert a.boundaries.s_lo < a.sketch0 < a.boundaries.l_hi
+    assert a.fingerprint != g.fingerprint
+    # Under the GLOBAL boundaries every matching sample lies beyond l_lo
+    # (the S region (s_lo, s_hi) can never be populated — starved); the
+    # refined cuts straddle the tail's own mean instead.
+    assert float(np.min(match)) > g.boundaries.l_lo
+
+
+def test_refine_shift_rule_matches_run_pilot(rng):
+    """Matching rows reaching <= 0 get the footnote-1 shift with the same
+    1-sigma margin run_pilot applies; strictly-positive rows get none."""
+    vals = rng.normal(0.0, 1.0, size=4096)  # straddles zero
+    g = _global_anchor(vals + 100.0)
+    where = Predicate(column="value", hi=0.5)
+    a = g.refine_for_predicate({"value": vals}, where, PARAMS)
+    match = vals[vals < 0.5]
+    assert a.source == "refined"
+    assert a.shift == pytest.approx(-float(np.min(match))
+                                    + float(np.std(match, ddof=1)))
+    b = g.refine_for_predicate({"value": vals + 1000.0},
+                               Predicate(column="value", hi=1000.5), PARAMS)
+    assert b.shift == 0.0
+
+
+def test_fingerprint_excludes_sketch0():
+    """Re-anchoring moves sketch0 only — the fingerprint (the FROZEN part)
+    must not move with it, or every reanchor would invalidate warm
+    stores."""
+    import dataclasses
+    a = _global_anchor(np.random.default_rng(0).normal(MU, SIGMA, 512))
+    b = dataclasses.replace(a, sketch0=a.sketch0 + 3.0, sigma=a.sigma * 2)
+    assert a.fingerprint == b.fingerprint
+    c = dataclasses.replace(a, shift=a.shift + 1.0)
+    assert a.fingerprint != c.fingerprint
+
+
+# ---------------------------------------------------------------------------
+# Per-cell bit parity under a refined anchor (acceptance criterion).
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("mode", ["faithful_cf", "calibrated"])
+def test_refined_anchor_cells_match_scalar_oracle_bitwise(mode):
+    """The executor's per-key store accumulates each (group, block) cell
+    bit-identically to the scalar Alg. 1 + Alg. 2 run over that cell's
+    masked sub-stream under the SAME refined anchor."""
+    n_blocks, n_groups, rows = 4, 2, 30000
+    rng = np.random.default_rng(7)
+    tables = []
+    for _ in range(n_blocks):
+        g = rng.integers(0, n_groups, size=rows)
+        tables.append({"value": rng.normal(MU + 5.0 * g, SIGMA),
+                       "region": g.astype(np.float64)})
+    sizes = [10 ** 6] * n_blocks
+    where = Predicate(column="value", lo=MU + 1.0 * SIGMA)
+    ex = MultiQueryExecutor([table_sampler(t) for t in tables], sizes,
+                            params=IslaParams(e=1.0),
+                            group_domains={"region": n_groups})
+    q = IslaQuery(e=1.0, agg="AVG", where=where, group_by="region",
+                  mode=mode)
+    ex.run([q], np.random.default_rng(3), incremental=True)
+    (skey,) = ex._stores
+    store = ex._stores[skey]
+    anchor = store.anchor
+    assert anchor is not None and anchor.source == "refined"
+
+    # Replay the identical pass: same RNG stream (pilot first, then the
+    # mode-group pass drawn in block order at the recorded quotas —
+    # exactly the iter_chunked_draws contract _draw_and_ingest obeys).
+    rng2 = np.random.default_rng(3)
+    ex.plan([q], rng2, mode="calibrated")
+    quotas = store.n_sampled
+    raws = [ex._as_rows(ex.block_samplers[j](int(quotas[j]), rng2))
+            for j in range(n_blocks)]
+    for g in range(n_groups):
+        for j in range(n_blocks):
+            cols = raws[j]
+            vals = np.asarray(cols["value"], dtype=np.float64) + anchor.shift
+            m = where.mask(cols) & (cols["region"].astype(np.intp) == g)
+            cell = vals[m]
+            ps, pl_ = phase1_sampling(cell, anchor.boundaries)
+            idx = g * n_blocks + j
+            assert store.mom_s[idx].tolist() == [ps.count, ps.s1, ps.s2,
+                                                 ps.s3]
+            assert store.mom_l[idx].tolist() == [pl_.count, pl_.s1, pl_.s2,
+                                                 pl_.s3]
+            ref = phase2_iteration(ps, pl_, store.sketch0, ex.params,
+                                   mode=mode)
+            batch = ex._partials(store.mom_s, store.mom_l, store.sketch0,
+                                 anchor.sigma, ex.params, mode, None,
+                                 "host")
+            assert float(batch[idx]) == ref.avg, f"cell ({g}, {j})"
+
+
+# ---------------------------------------------------------------------------
+# End to end: measure-correlated WHERE.
+# ---------------------------------------------------------------------------
+
+
+def _run_tail_query(refine, seed=11, e=0.5):
+    rng = np.random.default_rng(seed)
+    tables, where = _tail_tables(rng)
+    sizes = [10 ** 7] * len(tables)
+    ex = MultiQueryExecutor([table_sampler(t) for t in tables], sizes,
+                            params=IslaParams(e=e),
+                            refine_anchors=refine,
+                            anchor_min_support=32)
+    (ans,) = ex.run([IslaQuery(e=e, agg="AVG", where=where)],
+                    np.random.default_rng(seed + 1))
+    truth = np.mean(np.concatenate(
+        [t["value"][t["value"] >= where.lo] for t in tables]))
+    return ans, float(truth)
+
+
+def test_refined_anchor_earns_bound_global_degrades():
+    """The tentpole claim in miniature: under a tail predicate the global
+    anchor starves S (every matching sample sits beyond l_hi -> fallback,
+    bound degraded to best-effort); the refined anchor keeps both regions
+    populated, earns the (e, beta) bound, stays within e of truth, and
+    draws FEWER samples (its matching-rows sigma is the truncated one)."""
+    refined, truth = _run_tail_query(refine=True)
+    global_, truth_g = _run_tail_query(refine=False)
+    assert global_.error_bound is None          # degraded, honestly
+    assert refined.error_bound == 0.5           # earned
+    # Close to truth (3e covers the leverage estimator's residual skew
+    # bias on a truncated tail — the global answer is ~38 off)...
+    assert abs(refined.value - truth) <= 3 * 0.5
+    # ...with FEWER samples (matching-rows sigma, not the pooled one)...
+    assert refined.sample_size < global_.sample_size
+    # ...and an order of magnitude closer than the degraded global path.
+    assert abs(refined.value - truth) < abs(global_.value - truth_g) / 10
+
+
+def test_refined_anchor_matches_unpredicated_when_disabled(rng):
+    """refine_anchors=False reproduces the pre-refinement executor
+    exactly (same rates, same RNG consumption, same answers)."""
+    tables, where = _tail_tables(np.random.default_rng(5))
+    sizes = [10 ** 6] * len(tables)
+
+    def run(**kw):
+        ex = MultiQueryExecutor([table_sampler(t) for t in tables], sizes,
+                                params=IslaParams(e=1.0), **kw)
+        return ex.run([IslaQuery(e=1.0, agg="AVG")],
+                      np.random.default_rng(2))
+
+    (a,) = run()
+    (b,) = run(refine_anchors=False)
+    # No predicate in the batch: refinement never engages either way.
+    assert a.value == b.value and a.sample_size == b.sample_size
+
+
+# ---------------------------------------------------------------------------
+# Warm stores under per-key resets / re-anchors.
+# ---------------------------------------------------------------------------
+
+
+def test_warm_stores_survive_unrelated_key_reanchor():
+    """Re-anchoring (or fully resetting) one key leaves every other key's
+    warm store untouched: same object, same accumulated moments, and its
+    next run tops up zero new samples."""
+    rng = np.random.default_rng(21)
+    n_blocks, rows = 5, 30000
+    tables = [{"value": rng.normal(MU, SIGMA, size=rows),
+               "flag": rng.integers(0, 2, size=rows).astype(np.float64)}
+              for _ in range(n_blocks)]
+    sizes = [10 ** 6] * n_blocks
+    ex = MultiQueryExecutor([table_sampler(t) for t in tables], sizes,
+                            params=IslaParams(e=0.5))
+    q_a = IslaQuery(e=0.5, agg="AVG",
+                    where=Predicate(column="value", lo=MU + SIGMA))
+    q_b = IslaQuery(e=0.5, agg="AVG",
+                    where=Predicate(column="flag", eq=1.0))
+    ex.run([q_a, q_b], np.random.default_rng(1), incremental=True)
+    key_a = StoreKey(where=q_a.where, mode="calibrated")
+    key_b = StoreKey(where=q_b.where, mode="calibrated")
+    store_b = ex._stores[key_b]
+    anchor_b = store_b.anchor
+    counts_before = store_b.totals[:, 0].copy()
+
+    # Key A re-anchors its sketch (sketch0 moves, fingerprint does not)...
+    store_a = ex._stores[key_a]
+    store_a.reanchor(np.full(store_a.n_cells, store_a.sketch0 + 1.0))
+    # ...and then drifts hard enough to be reset per-key.
+    ex._reset_key(key_a)
+    assert key_a not in ex._stores
+
+    ans_a, ans_b = ex.run([q_a, q_b], np.random.default_rng(2),
+                          incremental=True)
+    # B's warm store SURVIVED the unrelated reset: same object, same
+    # frozen anchor, moments only ever grew (the shared pass that
+    # re-fills key A tops B up for free — never resets it).
+    assert ex._stores[key_b] is store_b
+    assert store_b.anchor is anchor_b
+    assert (store_b.totals[:, 0] >= counts_before).all()
+    assert not math.isnan(ans_b.value)
+
+
+def test_per_key_drift_resets_only_drifted_key():
+    """drifted_keys flags exactly the key whose matching sub-population
+    moved; _reset_key re-derives its anchor from the probe rows while the
+    other key's store (and anchor) survive."""
+    rng = np.random.default_rng(31)
+    n_blocks, rows = 4, 40000
+    state = {"bump": 0.0}
+
+    def mk(j):
+        tbl_flag = rng.integers(0, 2, size=rows).astype(np.float64)
+        base = rng.normal(MU, SIGMA, size=rows)
+
+        def s(n, r):
+            idx = r.integers(0, rows, size=n)
+            v = base[idx].copy()
+            tail = v >= MU + 1.5 * SIGMA
+            v[tail] += state["bump"]
+            return {"value": v, "flag": tbl_flag[idx]}
+        return s
+
+    sizes = [10 ** 6] * n_blocks
+    ex = MultiQueryExecutor([mk(j) for j in range(n_blocks)], sizes,
+                            params=IslaParams(e=1.0),
+                            anchor_min_support=12)
+    ex._DRIFT_PILOT = 8192  # enough probe mass to re-refine the tail key
+    q_tail = IslaQuery(e=1.0, agg="AVG",
+                       where=Predicate(column="value", lo=MU + 1.5 * SIGMA))
+    q_flag = IslaQuery(e=1.0, agg="AVG",
+                       where=Predicate(column="flag", eq=1.0))
+    ex.run([q_tail, q_flag], np.random.default_rng(1), incremental=True)
+    key_tail = StoreKey(where=q_tail.where, mode="calibrated")
+    key_flag = StoreKey(where=q_flag.where, mode="calibrated")
+    anchor_tail = ex._stores[key_tail].anchor
+    store_flag = ex._stores[key_flag]
+    assert anchor_tail.source == "refined"
+
+    # Shift ONLY the tail sub-population; the global mean barely moves.
+    state["bump"] = 15.0
+    probe = ex._draw_probe(np.random.default_rng(9), n=8192)
+    assert not ex.check_drift(np.random.default_rng(9), z_thresh=6.0,
+                              probe_columns=probe)
+    drifted = ex.drifted_keys(probe, z_thresh=6.0)
+    assert drifted == [key_tail]
+    # The new-anchor re-derivation needs probe support; check it works
+    # through the run(drift_check=) entry too.
+    ex.run([q_tail, q_flag], np.random.default_rng(3), incremental=True,
+           drift_check=6.0)
+    assert ex._stores[key_flag] is store_flag      # unrelated key warm
+    new_anchor = ex._stores[key_tail].anchor
+    assert new_anchor.fingerprint != anchor_tail.fingerprint
+    # The re-derived anchor tracks the bumped tail.
+    assert new_anchor.source == "refined"
+    assert new_anchor.sketch0 - new_anchor.shift > \
+        anchor_tail.sketch0 - anchor_tail.shift + 8.0
+
+
+# ---------------------------------------------------------------------------
+# split_budget floors (admission-loop QoS).
+# ---------------------------------------------------------------------------
+
+
+def test_split_budget_floor_protects_converged_store():
+    """Without a floor the waterfill starves a converged store's tiny
+    top-up behind a flood of cold ones; with the floor it lands first."""
+    n_now = [50000.0, 1.0, 1.0, 1.0, 1.0]
+    sigmas = [1.0] + [float("nan")] * 4
+    deficits = [20, 10 ** 5, 10 ** 5, 10 ** 5, 10 ** 5]
+    starved = split_budget(n_now, sigmas, deficits, 1000)
+    assert starved[0] == 0
+    floored = split_budget(n_now, sigmas, deficits, 1000, min_per_store=20)
+    assert floored[0] == 20
+    assert floored.sum() == 1000
+    assert (floored[1:] > 0).all()
+
+
+def test_split_budget_floor_never_exceeds_deficit_or_budget():
+    out = split_budget([1.0, 1.0], [float("nan")] * 2, [5, 10 ** 4], 100,
+                       min_per_store=50)
+    assert out[0] == 5                      # floor clipped to the deficit
+    assert out.sum() == 100
+    tiny = split_budget([1.0] * 4, [float("nan")] * 4, [100] * 4, 10,
+                        min_per_store=50)
+    assert tiny.sum() == 10                 # floors alone exceed budget:
+    assert (tiny <= 50).all()               # proportional split of floors
+
+
+def test_run_budget_floor_requires_budget():
+    ex = MultiQueryExecutor(normal_samplers(b=2), [100] * 2)
+    with pytest.raises(ValueError, match="budget_floor"):
+        ex.run([IslaQuery(e=1.0)], np.random.default_rng(0),
+               incremental=True, budget_floor=10)
+
+
+# ---------------------------------------------------------------------------
+# Device route: hetero-anchor stacks.
+# ---------------------------------------------------------------------------
+
+
+def test_device_incremental_matches_host_with_refined_anchors():
+    """route='device' serves per-key refined anchors from ONE stacked
+    launch (hetero bounds/scale/shift per key) and agrees with the host
+    route within the fp32 tolerance contract."""
+    jax = pytest.importorskip("jax")
+    n_blocks, rows = 4, 30000
+    rng = np.random.default_rng(13)
+    tables = [{"value": rng.normal(MU, SIGMA, size=rows),
+               "flag": rng.integers(0, 2, size=rows).astype(np.float64)}
+              for _ in range(n_blocks)]
+    sizes = [10 ** 6] * n_blocks
+    queries = [
+        IslaQuery(e=1.0, agg="AVG",
+                  where=Predicate(column="value", lo=MU + SIGMA)),
+        IslaQuery(e=1.0, agg="AVG",
+                  where=Predicate(column="flag", eq=1.0)),
+        IslaQuery(e=1.0, agg="AVG"),
+    ]
+
+    def mk():
+        return MultiQueryExecutor([table_sampler(t) for t in tables],
+                                  sizes, params=IslaParams(e=1.0))
+
+    host_ex, dev_ex = mk(), mk()
+    host, dev = None, None
+    for seed in (2, 3):
+        host = host_ex.run(queries, np.random.default_rng(seed),
+                           incremental=True, route="host")
+        dev = dev_ex.run(queries, np.random.default_rng(seed),
+                         incremental=True, route="device")
+    stacked = {id(st._owner) for st in dev_ex._device_stores.values()}
+    anchors = {st.anchor.fingerprint
+               for st in dev_ex._device_stores.values()}
+    assert len(anchors) >= 2               # genuinely hetero anchors...
+    assert len(stacked) == 1               # ...served by ONE stack
+    tol = 1e-4 if not jax.config.jax_enable_x64 else 1e-12
+    for h, d in zip(host, dev):
+        assert d.value == pytest.approx(h.value, rel=tol, abs=tol * MU)
+        assert d.new_samples == h.new_samples
+        assert (d.error_bound is None) == (h.error_bound is None)

@@ -350,7 +350,7 @@ def test_draw_loops_lockstep_parity():
     from repro.core.engine import block_quotas
     quotas = np.asarray(block_quotas(sizes, rate), dtype=np.int64)
     ex._draw_and_ingest({(None, None): store_b}, quotas,
-                        np.random.default_rng(42), 0.0, chunk_blocks=2)
+                        np.random.default_rng(42), chunk_blocks=2)
 
     assert log_a == log_b  # identical call sequence -> identical RNG use
     assert np.array_equal(store_a.mom_s, store_b.mom_s)

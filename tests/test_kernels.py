@@ -254,3 +254,53 @@ def test_fused_pallas_one_launch_matches_split(rng):
     np.testing.assert_allclose(np.asarray(partials), np.asarray(want_p),
                                rtol=1e-6)
     assert prior.is_deleted()  # donated: the launch was in-place
+
+
+@pytest.mark.parametrize("n_blocks", [1, 4])
+def test_moments_batched_kernel_per_cell_bounds(n_blocks, rng):
+    """(n_blocks, 4) bounds: every cell classifies under its OWN anchor
+    cuts (the per-key refined-anchor launch) == per-block oracle runs."""
+    x = jnp.asarray(rng.normal(100, 20, size=(n_blocks, 64 * 2, 128)),
+                    jnp.float32)
+    rows = np.stack([np.asarray(BOUNDS) + 7.0 * b
+                     for b in range(n_blocks)])
+    got = isla_moments_batched_pallas(x, jnp.asarray(rows, jnp.float32),
+                                      tm=64, interpret=True)
+    for b in range(n_blocks):
+        want = ref.isla_moments_ref(x[b], *rows[b])
+        np.testing.assert_allclose(np.asarray(got[b]), np.asarray(want),
+                                   rtol=1e-5)
+    with pytest.raises(ValueError, match="per-cell bounds"):
+        isla_moments_batched_pallas(x, jnp.zeros((n_blocks + 1, 4)),
+                                    tm=64, interpret=True)
+
+
+def test_fused_pallas_per_cell_bounds_and_inv_scale(rng):
+    """The fused kernel under hetero anchors: per-cell bounds rows plus
+    the inv_scale vector scaling the stopping threshold per cell — each
+    cell's partial equals a standalone phase2 run in that cell's frame."""
+    from repro.core.distributed import phase2
+    from repro.core.types import IslaParams
+    from repro.kernels.isla_moments import isla_fused_pallas
+
+    params = IslaParams()
+    cells = 3
+    scales = np.array([1.0, 2.0, 4.0], dtype=np.float32)
+    x = jnp.asarray(rng.normal(100, 20, size=(cells, 64 * 2, 128)),
+                    jnp.float32) / scales[:, None, None]
+    rows = jnp.asarray(np.asarray(BOUNDS)[None, :] / scales[:, None],
+                       jnp.float32)
+    sk = jnp.asarray(100.0 / scales, jnp.float32)
+    inv = jnp.asarray(1.0 / scales, jnp.float32)
+    mom, partials = isla_fused_pallas(
+        x, rows, jnp.zeros((cells, 2, 4), jnp.float32), sk, params,
+        tm=64, interpret=True, inv_scale=inv)
+    for c in range(cells):
+        want_m = ref.isla_moments_ref(x[c], *np.asarray(rows[c]))
+        np.testing.assert_allclose(np.asarray(mom[c]),
+                                   np.asarray(want_m), rtol=1e-5)
+        want_p = phase2(mom[c, 0], mom[c, 1], sk[c],
+                        params.replace(thr=params.thr / float(scales[c])),
+                        mode="calibrated")
+        np.testing.assert_allclose(np.asarray(partials[c]),
+                                   np.asarray(want_p), rtol=1e-5)

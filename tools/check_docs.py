@@ -1,0 +1,85 @@
+#!/usr/bin/env python
+"""Markdown link/anchor checker for the docs tier (CI docs job).
+
+Scans README.md and docs/*.md for inline links:
+
+ * relative file links must point at an existing file or directory
+   (checked relative to the markdown file's own location);
+ * ``#anchor`` fragments must match a heading in the target file,
+   GitHub-slugified (lowercase, punctuation stripped, spaces -> dashes);
+ * http(s)/mailto links are skipped (no network in CI).
+
+Exits non-zero listing every broken link.  No dependencies beyond the
+standard library.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop everything but word chars,
+    spaces and dashes, then spaces -> dashes."""
+    h = heading.strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def anchors_of(md: Path) -> set:
+    text = md.read_text(encoding="utf-8")
+    text = FENCE_RE.sub("", text)  # headings inside code fences don't count
+    return {slugify(m.group(1)) for m in HEADING_RE.finditer(text)}
+
+
+def check_file(md: Path) -> "list[str]":
+    errors = []
+    text = md.read_text(encoding="utf-8")
+    scan = FENCE_RE.sub("", text)  # links inside code fences aren't links
+    for m in LINK_RE.finditer(scan):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        path_part, _, frag = target.partition("#")
+        if path_part:
+            dest = (md.parent / path_part).resolve()
+            if not dest.exists():
+                errors.append(f"{md.relative_to(ROOT)}: broken link "
+                              f"-> {target} (no such file)")
+                continue
+        else:
+            dest = md
+        if frag:
+            if dest.suffix.lower() not in (".md", ".markdown"):
+                continue
+            if slugify(frag) not in anchors_of(dest):
+                errors.append(f"{md.relative_to(ROOT)}: broken anchor "
+                              f"-> {target} (no heading "
+                              f"'#{frag}' in {dest.name})")
+    return errors
+
+
+def main() -> int:
+    files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    files = [f for f in files if f.exists()]
+    if not files:
+        print("check_docs: no markdown files found", file=sys.stderr)
+        return 1
+    errors = []
+    for md in files:
+        errors.extend(check_file(md))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"check_docs: {len(files)} file(s), "
+          f"{len(errors)} broken link(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
