@@ -304,39 +304,17 @@ def _sample_bounds(bounds: jnp.ndarray, seg: jnp.ndarray):
     return bs[:, 0], bs[:, 1], bs[:, 2], bs[:, 3]
 
 
-@functools.partial(
-    jax.jit,
-    static_argnames=("params", "mode", "geometry", "n_groups_list"),
-    donate_argnums=(0, 1, 2, 3))
-def fused_tick(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+def _tick_core(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
                totals: jnp.ndarray, n_sampled: jnp.ndarray,
                values: jnp.ndarray, seg: jnp.ndarray, quotas: jnp.ndarray,
                bounds: jnp.ndarray, sketch0: jnp.ndarray,
-               sizes: jnp.ndarray, inv_scale: jnp.ndarray = None, *,
-               params: IslaParams,
-               mode: str = "calibrated", geometry=None,
-               n_groups_list=(1,)):
-    """One device-resident continuation round as a single fused launch.
-
-    The four leading state operands are DONATED: the tick consumes the
-    resident buffers and returns their successors, so steady state never
-    re-ships moments host<->device — the fresh ``values``/``seg``/
-    ``quotas`` sample upload is the only h2d crossing, and only the
-    per-group stats rows and per-cell partial answers come back.
-
-    ``values`` are pre-scaled/shifted on the host into each cell's anchor
-    frame (sample prep, not moments); ``seg`` may contain ``n_cells`` as
-    a drop segment for bucket padding (``n_cells + 1`` segments are
-    reduced, the overflow row discarded) so the jit does not retrace on
-    every tick's matched-sample count.  ``sketch0`` is per-cell, so
-    stacked stores that re-anchored independently still solve in one
-    launch; ``bounds`` is one broadcast row for a shared-anchor stack or
-    a per-cell (+pad) table for per-key anchors, and ``inv_scale`` is the
-    per-cell anchor-scale vector the stopping threshold rides.
-
-    Returns ``(mom_s', mom_l', totals', n_sampled', partials, rows)`` —
-    ``rows`` per ``group_row_stats``.
-    """
+               sizes: jnp.ndarray, inv_scale: jnp.ndarray, *,
+               params: IslaParams, mode: str, geometry,
+               n_groups_list):
+    """The tagged tick body shared by the single-device ``fused_tick``
+    and the per-shard program of the mesh launch (``mesh_tick_fn``) —
+    the rows come back UNREDUCED across shards (the mesh wrapper psums
+    them; single-device they already cover every cell)."""
     n_cells = mom_s.shape[0]
     # One 11-column carry-prepend scatter folds the whole pass: S and L
     # region moments plus the plain totals, each column's fold order
@@ -370,23 +348,55 @@ def fused_tick(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("params", "mode", "geometry", "n_groups_list",
-                     "gid_slots", "valid_slots", "key_affine",
-                     "bound_slots"),
+    static_argnames=("params", "mode", "geometry", "n_groups_list"),
     donate_argnums=(0, 1, 2, 3))
-def fused_tick_dense(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
-                     totals: jnp.ndarray, n_sampled: jnp.ndarray,
-                     values2d: jnp.ndarray, pad_valid: jnp.ndarray,
-                     quotas: jnp.ndarray, gid_panes, valid_panes,
-                     bounds: jnp.ndarray, sketch0: jnp.ndarray,
-                     sizes: jnp.ndarray, inv_scale: jnp.ndarray = None, *,
-                     params: IslaParams,
-                     mode: str = "calibrated", geometry=None,
-                     n_groups_list=(1,), gid_slots=(-1,),
-                     valid_slots=(-1,), key_affine=None,
-                     bound_slots=None):
-    """``fused_tick`` on the dense block-major layout: Phase 1 as one
-    batched contraction instead of a scatter.
+def fused_tick(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+               totals: jnp.ndarray, n_sampled: jnp.ndarray,
+               values: jnp.ndarray, seg: jnp.ndarray, quotas: jnp.ndarray,
+               bounds: jnp.ndarray, sketch0: jnp.ndarray,
+               sizes: jnp.ndarray, inv_scale: jnp.ndarray = None, *,
+               params: IslaParams,
+               mode: str = "calibrated", geometry=None,
+               n_groups_list=(1,)):
+    """One device-resident continuation round as a single fused launch.
+
+    The four leading state operands are DONATED: the tick consumes the
+    resident buffers and returns their successors, so steady state never
+    re-ships moments host<->device — the fresh ``values``/``seg``/
+    ``quotas`` sample upload is the only h2d crossing, and only the
+    per-group stats rows and per-cell partial answers come back.
+
+    ``values`` are pre-scaled/shifted on the host into each cell's anchor
+    frame (sample prep, not moments); ``seg`` may contain ``n_cells`` as
+    a drop segment for bucket padding (``n_cells + 1`` segments are
+    reduced, the overflow row discarded) so the jit does not retrace on
+    every tick's matched-sample count.  ``sketch0`` is per-cell, so
+    stacked stores that re-anchored independently still solve in one
+    launch; ``bounds`` is one broadcast row for a shared-anchor stack or
+    a per-cell (+pad) table for per-key anchors, and ``inv_scale`` is the
+    per-cell anchor-scale vector the stopping threshold rides.
+
+    Returns ``(mom_s', mom_l', totals', n_sampled', partials, rows)`` —
+    ``rows`` per ``group_row_stats``.
+    """
+    return _tick_core(mom_s, mom_l, totals, n_sampled, values, seg,
+                      quotas, bounds, sketch0, sizes, inv_scale,
+                      params=params, mode=mode, geometry=geometry,
+                      n_groups_list=n_groups_list)
+
+
+def _dense_core(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+                totals: jnp.ndarray, n_sampled: jnp.ndarray,
+                values2d: jnp.ndarray, pad_valid: jnp.ndarray,
+                quotas: jnp.ndarray, gid_panes, valid_panes,
+                bounds: jnp.ndarray, sketch0: jnp.ndarray,
+                sizes: jnp.ndarray, inv_scale: jnp.ndarray, *,
+                params: IslaParams, mode: str, geometry,
+                n_groups_list, gid_slots, valid_slots, key_affine,
+                bound_slots):
+    """The dense tick body shared by the single-device
+    ``fused_tick_dense`` and the per-shard program of the mesh launch
+    (``mesh_tick_dense_fn``); rows come back unreduced across shards.
 
     The serving draw is per-block contiguous, so the tick's samples pack
     into a (n_blocks, quota_max) pane (``pad_valid`` zeroes the ragged
@@ -483,6 +493,34 @@ def fused_tick_dense(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
 
 @functools.partial(
     jax.jit,
+    static_argnames=("params", "mode", "geometry", "n_groups_list",
+                     "gid_slots", "valid_slots", "key_affine",
+                     "bound_slots"),
+    donate_argnums=(0, 1, 2, 3))
+def fused_tick_dense(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+                     totals: jnp.ndarray, n_sampled: jnp.ndarray,
+                     values2d: jnp.ndarray, pad_valid: jnp.ndarray,
+                     quotas: jnp.ndarray, gid_panes, valid_panes,
+                     bounds: jnp.ndarray, sketch0: jnp.ndarray,
+                     sizes: jnp.ndarray, inv_scale: jnp.ndarray = None, *,
+                     params: IslaParams,
+                     mode: str = "calibrated", geometry=None,
+                     n_groups_list=(1,), gid_slots=(-1,),
+                     valid_slots=(-1,), key_affine=None,
+                     bound_slots=None):
+    """``fused_tick`` on the dense block-major layout (see
+    ``_dense_core`` for the batched-contraction Phase 1 and the
+    static-slot pane sharing; this wrapper owns the jit + donation)."""
+    return _dense_core(mom_s, mom_l, totals, n_sampled, values2d,
+                       pad_valid, quotas, gid_panes, valid_panes, bounds,
+                       sketch0, sizes, inv_scale, params=params, mode=mode,
+                       geometry=geometry, n_groups_list=n_groups_list,
+                       gid_slots=gid_slots, valid_slots=valid_slots,
+                       key_affine=key_affine, bound_slots=bound_slots)
+
+
+@functools.partial(
+    jax.jit,
     static_argnames=("params", "mode", "geometry", "n_groups_list"))
 def fused_solve(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
                 totals: jnp.ndarray, n_sampled: jnp.ndarray,
@@ -502,6 +540,203 @@ def fused_solve(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
                            sizes, n_groups_list,
                            float(params.min_region_count))
     return partials, rows
+
+
+# ---------------------------------------------------------------------------
+# Mesh launch: the fused tick sharded over the (group, block) cell axis.
+# ---------------------------------------------------------------------------
+#
+# The cell axis is the natural unit to distribute (partition-level summary
+# state, a la partitioned AQP): each shard owns a contiguous run of blocks
+# for EVERY (store, group), keeps its moment / total / ledger rows resident,
+# and runs the identical ``_tick_core`` / ``_dense_core`` program on its
+# local slice.  The only cross-device traffic the steady state permits is
+#
+#   * the replicated sample upload (``mesh_h2d`` -- the sanctioned h2d of
+#     the device tier, now placed once per device), and
+#   * one ``psum`` of the O(groups) stat rows (9 columns per (store,
+#     group) -- never per-cell moments).
+#
+# ``group_row_stats`` columns are all plain sums over the block axis, so
+# per-shard rows psum to exactly the full-table rows (up to float
+# association -- the x64 bit-parity contract for the mesh tier covers the
+# resident state and per-cell partials, not the psum'd rows).
+
+
+def cell_axis(mesh) -> str:
+    """Name of the (single) mesh axis the cell dimension shards over."""
+    return mesh.axis_names[0]
+
+
+def mesh_h2d(mesh, x, spec, dtype=None) -> jnp.ndarray:
+    """``h2d`` for the mesh tier: the single sanctioned host->mesh upload.
+
+    ``spec`` is the ``PartitionSpec`` placing the array — ``P(ax, ...)``
+    for cell-sharded operands, ``P()`` for the replicated sample stream.
+    Everything the steady-state mesh tick ships to devices goes through
+    here so tests can wrap the rest in ``jax.transfer_guard``.
+    """
+    from jax.sharding import NamedSharding
+    with jax.transfer_guard("allow"):
+        return jax.device_put(jnp.asarray(x, dtype=dtype),
+                              NamedSharding(mesh, spec))
+
+
+def _mesh_shard_map(f, mesh, in_specs, out_specs):
+    """``compat.shard_map`` across the ``check_rep`` signature change.
+
+    Replication of the psum'd rows output is guaranteed by construction,
+    so the check is disabled where the installed jax still takes the
+    flag (0.4.x) and simply omitted where it does not.
+    """
+    from ..compat import shard_map
+    try:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+    except TypeError:
+        return shard_map(f, mesh=mesh, in_specs=in_specs,
+                         out_specs=out_specs)
+
+
+@functools.lru_cache(maxsize=64)
+def mesh_tick_fn(mesh, params: IslaParams, mode: str, geometry,
+                 n_groups_list, per_cell_bounds: bool):
+    """Compiled mesh launch of the tagged fused tick.
+
+    Returns a jitted function with the ``fused_tick`` operand order
+    (state quadruple donated).  ``seg`` carries GLOBAL mesh cell ids and
+    is replicated; each shard keeps the samples whose id falls in its
+    own ``[s*L, (s+1)*L)`` window and retags the rest to its local drop
+    row, so the per-cell fold order matches the single-device launch
+    bit-for-bit in float64.  ``per_cell_bounds`` picks the hetero-anchor
+    layout: a cell-sharded (N, 4) cuts table whose +inf pad row is
+    appended per shard inside the body (uniform stacks replicate one
+    row).  Rows are psum'd across the axis and come back replicated.
+    """
+    from jax.sharding import PartitionSpec as P
+    ax = cell_axis(mesh)
+    row, vec, rep = P(ax, None), P(ax), P()
+    bspec = P(ax, None) if per_cell_bounds else P(None, None)
+
+    def body(mom_s, mom_l, totals, ns, values, seg, quotas, bounds,
+             sketch0, sizes, inv_scale):
+        n_local = mom_s.shape[0]
+        lo = jax.lax.axis_index(ax).astype(seg.dtype) * n_local
+        own = (seg >= lo) & (seg < lo + n_local)
+        lseg = jnp.where(own, seg - lo, n_local).astype(seg.dtype)
+        if per_cell_bounds:
+            bounds = jnp.concatenate(
+                [bounds, jnp.full((1, 4), jnp.inf, bounds.dtype)])
+        mom_s, mom_l, totals, ns, partials, rows = _tick_core(
+            mom_s, mom_l, totals, ns, values, lseg, quotas, bounds,
+            sketch0, sizes, inv_scale, params=params, mode=mode,
+            geometry=geometry, n_groups_list=n_groups_list)
+        return mom_s, mom_l, totals, ns, partials, jax.lax.psum(rows, ax)
+
+    sharded = _mesh_shard_map(
+        body, mesh,
+        in_specs=(row, row, row, vec, rep, rep, vec, bspec, vec, vec,
+                  vec),
+        out_specs=(row, row, row, vec, vec, P(None, None)))
+    return jax.jit(sharded, donate_argnums=(0, 1, 2, 3))
+
+
+@functools.lru_cache(maxsize=64)
+def mesh_tick_dense_fn(mesh, params: IslaParams, mode: str, geometry,
+                       n_groups_list, gid_slots, valid_slots, key_affine,
+                       bound_slots, n_gid_panes: int, n_valid_panes: int):
+    """Compiled mesh launch of the dense fused tick.
+
+    The block axis IS the sharded axis in the dense layout: the value
+    pane, pad mask, quotas and GROUP BY / predicate panes are all
+    block-major, so every operand shards as ``P(ax, ...)`` and the body
+    is ``_dense_core`` verbatim on the local slice — no retagging at
+    all.  Group ids stay global (every shard holds all groups; only
+    blocks split).  ``n_gid_panes`` / ``n_valid_panes`` fix the static
+    pytree arity of the shared pane tuples.
+    """
+    from jax.sharding import PartitionSpec as P
+    ax = cell_axis(mesh)
+    row, vec = P(ax, None), P(ax)
+
+    def body(mom_s, mom_l, totals, ns, values2d, pad_valid, quotas,
+             gid_panes, valid_panes, bounds, sketch0, sizes, inv_scale):
+        mom_s, mom_l, totals, ns, partials, rows = _dense_core(
+            mom_s, mom_l, totals, ns, values2d, pad_valid, quotas,
+            gid_panes, valid_panes, bounds, sketch0, sizes, inv_scale,
+            params=params, mode=mode, geometry=geometry,
+            n_groups_list=n_groups_list, gid_slots=gid_slots,
+            valid_slots=valid_slots, key_affine=key_affine,
+            bound_slots=bound_slots)
+        return mom_s, mom_l, totals, ns, partials, jax.lax.psum(rows, ax)
+
+    sharded = _mesh_shard_map(
+        body, mesh,
+        in_specs=(row, row, row, vec, row, row, vec,
+                  (vec,) * n_gid_panes, (row,) * n_valid_panes,
+                  P(None, None), vec, vec, vec),
+        out_specs=(row, row, row, vec, vec, P(None, None)))
+    return jax.jit(sharded, donate_argnums=(0, 1, 2, 3))
+
+
+@functools.lru_cache(maxsize=64)
+def mesh_solve_fn(mesh, params: IslaParams, mode: str, geometry,
+                  n_groups_list):
+    """Compiled mesh launch of the zero-draw re-solve (``fused_solve``).
+
+    No donation — the resident shards stay live — and the only
+    collective is the stat-row psum.
+    """
+    from jax.sharding import PartitionSpec as P
+    ax = cell_axis(mesh)
+    row, vec = P(ax, None), P(ax)
+
+    def body(mom_s, mom_l, totals, ns, sketch0, sizes, inv_scale):
+        thr, geo = _scaled_solve_args(params, geometry, inv_scale)
+        partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
+                          geometry=geo, thr=thr)
+        rows = group_row_stats(mom_s, mom_l, totals, partials, ns,
+                               sizes, n_groups_list,
+                               float(params.min_region_count))
+        return partials, jax.lax.psum(rows, ax)
+
+    sharded = _mesh_shard_map(
+        body, mesh,
+        in_specs=(row, row, row, vec, vec, vec, vec),
+        out_specs=(vec, P(None, None)))
+    return jax.jit(sharded)
+
+
+_COLLECTIVE_OPS = ("all-reduce", "all-gather", "all-to-all",
+                   "collective-permute", "reduce-scatter")
+
+
+def collective_footprint(hlo_text: str):
+    """Cross-device collectives in a compiled module, as a list of
+    ``(op_name, total_elements)``.
+
+    Parsed from the optimized HLO text (``lowered.compile().as_text()``)
+    — the transfer-audit analogue of the device tier's
+    ``transfer_guard``: the zero-moment-traffic contract holds iff every
+    entry's element count is O(groups) stat rows, never O(cells) moment
+    state.
+    """
+    import re
+    shape = re.compile(r"\w+\[([0-9,]*)\]")
+    head = re.compile(
+        r"=\s*((?:\([^)]*\))|(?:\S+))\s+(%s)" %
+        "|".join(_COLLECTIVE_OPS))
+    out = []
+    for m in head.finditer(hlo_text):
+        total = 0
+        for dims in shape.findall(m.group(1)):
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n
+        out.append((m.group(2), total))
+    return out
 
 
 # ---------------------------------------------------------------------------

@@ -387,6 +387,34 @@ def phase2_iteration_batch(mom_s: np.ndarray, mom_l: np.ndarray,
                                  n_iter=n_iter, case=case.astype(np.int64))
 
 
+def sample_skew(values) -> float:
+    """Standardized third moment of a sample, clamped to 0 when the slice
+    is degenerate.
+
+    The naive estimator divides by ``np.std(pv) + eps``; on a
+    (near-)constant slice the measured spread is float64 rounding noise
+    at the data's own magnitude, and dividing by it amplifies that noise
+    into an arbitrary |skew| > 0.5 — flipping auto-mode to "empirical"
+    on data that carries no shape information at all.  A slice whose
+    spread is below ~1e-7 of its magnitude therefore reports skew 0
+    (treated as symmetric -> "calibrated").
+    """
+    pv = np.asarray(values, dtype=np.float64).reshape(-1)
+    if pv.size < 3:
+        return 0.0
+    mean = float(np.mean(pv))
+    sd = float(np.std(pv))
+    if sd <= 1e-7 * max(abs(mean), 1.0):
+        return 0.0
+    return float(np.mean(((pv - mean) / sd) ** 3))
+
+
+# |skew| above this resolves mode="auto" to "empirical" (below: the
+# analytic calibrated geometry is lowest-variance).  Shared by the global
+# resolution here and the per-key resolution in the multi-query planner.
+AUTO_SKEW_THRESHOLD = 0.5
+
+
 def resolve_mode_and_geometry(pilot: PilotResult, params: IslaParams,
                               mode: str):
     """Shared pre-estimation tail: resolve mode="auto" from pilot skew
@@ -396,10 +424,9 @@ def resolve_mode_and_geometry(pilot: PilotResult, params: IslaParams,
     executor so the heuristic lives in exactly one place."""
     shifted_sketch0 = pilot.sketch0 + pilot.shift
     if mode == "auto":
-        pv = pilot.values
-        skew = float(np.mean(((pv - np.mean(pv)) / (np.std(pv) + 1e-12))
-                             ** 3))
-        mode = "empirical" if abs(skew) > 0.5 else "calibrated"
+        skew = sample_skew(pilot.values)
+        mode = "empirical" if abs(skew) > AUTO_SKEW_THRESHOLD \
+            else "calibrated"
     geometry = None
     if mode == "empirical":
         geometry = empirical_geometry(pilot.values + pilot.shift,

@@ -684,22 +684,25 @@ class DeviceMomentStore:
                                      quotas_arr))
             layout = ("dense" if canonical and self.dtype != jnp.float64
                       else "tagged")
+        stack = self._own_stack()
         if layout == "dense":
             # The stack's dense pane takes RAW measure values; this
             # single-store convenience API takes shifted ones (the
             # MomentStore contract), so un-shift before handing off —
             # a float64 round-trip well inside the fp32 tolerance the
             # dense layout runs at.
-            out = self._own_stack().tick(
+            out = stack.tick(
                 params, mode=mode, geometry=geometry,
                 values=values - self.shift,
                 quotas=quotas_arr, dense=([group_ids], [mask]),
                 count_round=count_round)
         else:
-            seg = self.build_seg(block_ids, group_ids, mask)
+            # key_seg is the stack's cell-placement contract (plain
+            # offset on a single device, shard placement on a mesh).
+            seg = stack.key_seg(0, self, block_ids, group_ids, mask)
             if mask is not None:
                 values = values[np.asarray(mask, dtype=bool).reshape(-1)]
-            out = self._own_stack().tick(
+            out = stack.tick(
                 params, mode=mode, geometry=geometry,
                 values=values / self.scale,
                 seg=seg, quotas=quotas_arr, count_round=count_round)
@@ -841,6 +844,17 @@ class DeviceStack:
                                     int(self.offsets[k + 1])]
         b = self.n_blocks
         return self._state[3][k * b:(k + 1) * b]
+
+    def key_seg(self, k: int, store: DeviceMomentStore,
+                block_ids: np.ndarray,
+                group_ids: Optional[np.ndarray] = None,
+                mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """Cell ids for store ``k``'s tagged draw in THIS stack's launch
+        layout — the placement contract callers must use instead of
+        assuming the offset arithmetic (the mesh stack overrides it with
+        its block-run shard placement)."""
+        return store.build_seg(block_ids, group_ids, mask,
+                               offset=int(self.offsets[k]))
 
     def release(self) -> None:
         """Dissolve the stack: write every store's slices back so each
@@ -1063,6 +1077,325 @@ class DeviceStack:
                 self._sketch0_cells(), self._sizes, self._inv_scale,
                 params=params, mode=mode, geometry=geometry,
                 n_groups_list=self.n_groups_list)
+        self._state = (mom_s, mom_l, totals, ns)
+        for st in self.stores:
+            st.n_sampled = st.n_sampled + quotas
+            if count_round:
+                st.rounds += 1
+        return self._install_stats(partials, rows, cfg)
+
+
+class _MeshPartialsView:
+    """Lazy store-layout view of mesh-layout per-cell partials.
+
+    ``_install_stats`` on a mesh stack hands each store one of these
+    instead of a device slice: the d2h download + inverse permutation
+    happen only if a host consumer actually materializes it
+    (``np.asarray`` via ``partials_host``) — the group-stat composer
+    path never pays for per-cell partials it does not read.
+    """
+
+    def __init__(self, partials, cell_map: np.ndarray) -> None:
+        self._partials = partials
+        self._cell_map = cell_map
+
+    def __array__(self, dtype=None, copy=None):
+        out = np.asarray(self._partials)[self._cell_map]
+        return out.astype(dtype) if dtype is not None else out
+
+
+class MeshDeviceStack(DeviceStack):
+    """``DeviceStack`` sharded over a 1-D jax mesh: the stacked (store,
+    group, block) cell axis splits by BLOCK RUNS, so every shard owns a
+    contiguous run of blocks for each (store, group) and keeps those
+    moment / total / ledger rows resident on its own device.
+
+    Layout: with S shards and B blocks, each shard owns
+    ``B_local = ceil(B / S)`` blocks and ``L = sum_k G_k * B_local``
+    cells; the mesh cell id of store k's (g, b) cell is ::
+
+        s * L + off_k + g * B_local + (b - s * B_local),
+        s = b // B_local,  off_k = sum_{j<k} G_j * B_local
+
+    — i.e. each shard's local slice is the familiar store-major /
+    group-major / block-minor stack over its OWN blocks, so the
+    per-shard program is the single-device tick verbatim
+    (``distributed._tick_core`` / ``_dense_core``).  ``_cell_maps`` /
+    ``_ns_map`` hold the store-layout -> mesh-layout permutations;
+    trailing pad blocks (B not divisible by S) carry zero sizes, zero
+    quotas and +inf cuts, so they are inert in every reduction.  With
+    S = 1 the layout degenerates to exactly the single-device stack.
+
+    The launch contract generalizes the device tier's
+    zero-moment-transfer discipline to zero-moment CROSS-DEVICE
+    traffic: fresh samples upload replicated (each shard keeps the ones
+    whose mesh id falls in its window and retags the rest onto its
+    local drop row), resident state never moves, and the only
+    collective is one psum of the O(groups) stat rows — audited via
+    ``distributed.collective_footprint``.
+    """
+
+    def __init__(self, stores: Sequence[DeviceMomentStore], mesh) -> None:
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec
+
+        from . import distributed as D
+
+        # Adopt + stack on the default device first (anchor tables, cell
+        # bookkeeping, state concat) — cold-start work; everything
+        # device-resident is then re-laid-out onto the mesh below.
+        super().__init__(stores)
+        self.mesh = mesh
+        ax = D.cell_axis(mesh)
+        row = PartitionSpec(ax, None)
+        vec = PartitionSpec(ax)
+        rep2 = PartitionSpec(None, None)
+        S = 1
+        for n in mesh.devices.shape:
+            S *= int(n)
+        self.n_shards = S
+        B = self.n_blocks
+        K = len(self.stores)
+        self.blocks_local = bl = -(-B // S)
+        self.cells_local = sum(g * bl for g in self.n_groups_list)
+        L = self.cells_local
+        self.n_cells_mesh = S * L
+        # Store-layout -> mesh-layout permutations.
+        b = np.arange(B)
+        s_of_b, lb = b // bl, b % bl
+        self._cell_maps = []
+        off = 0
+        for g in self.n_groups_list:
+            cmap = (s_of_b[None, :] * L + off
+                    + np.arange(g)[:, None] * bl + lb[None, :])
+            self._cell_maps.append(cmap.reshape(-1).astype(np.int64))
+            off += g * bl
+        self._ns_map = (s_of_b[None, :] * (K * bl)
+                        + np.arange(K)[:, None] * bl + lb[None, :]
+                        ).reshape(-1).astype(np.int64)
+        cmap_all = np.concatenate(self._cell_maps)
+
+        # Re-lay the adopted state out onto the mesh (one cold-start
+        # d2h/h2d round trip; float64 numpy preserves x64 bits exactly).
+        def cells(a, width):
+            out = np.zeros((self.n_cells_mesh, width), dtype=np.float64)
+            out[cmap_all] = np.asarray(a, dtype=np.float64)
+            return D.mesh_h2d(mesh, out, row, self.dtype)
+
+        mom_s, mom_l, totals, ns = self._state
+        ns_mesh = np.zeros(S * K * bl, dtype=np.float64)
+        ns_mesh[self._ns_map] = np.asarray(ns, dtype=np.float64)
+        self._state = (cells(mom_s, 4), cells(mom_l, 4),
+                       cells(totals, 3),
+                       D.mesh_h2d(mesh, ns_mesh, vec, self.dtype))
+        # Stack constants, re-uploaded in mesh placement (pad cells get
+        # inert fills: zero sizes / sketch, unit inv_scale, +inf cuts).
+        sizes = np.zeros(S * K * bl, dtype=np.float64)
+        sizes[self._ns_map] = np.concatenate(
+            [np.asarray(st.block_sizes, dtype=np.float64)
+             for st in self.stores])
+        self._sizes = D.mesh_h2d(mesh, sizes, vec, self.dtype)
+        sk = np.zeros(self.n_cells_mesh, dtype=np.float64)
+        sk[cmap_all] = np.concatenate(
+            [np.full(st.n_cells, st.sketch0 / st.scale)
+             for st in self.stores])
+        self._sk_cells = D.mesh_h2d(mesh, sk, vec, self.dtype)
+        inv = np.ones(self.n_cells_mesh, dtype=np.float64)
+        inv[cmap_all] = np.concatenate(
+            [np.full(st.n_cells, 1.0 / st.scale) for st in self.stores])
+        self._inv_scale = D.mesh_h2d(mesh, inv, vec, self.dtype)
+        if self._uniform:
+            self._bounds = D.mesh_h2d(
+                mesh, np.asarray(self.stores[0]._bounds,
+                                 dtype=np.float64).reshape(1, 4),
+                rep2, self.dtype)
+        else:
+            cuts = np.full((self.n_cells_mesh, 4), np.inf,
+                           dtype=np.float64)
+            cuts[cmap_all] = np.concatenate(
+                [np.broadcast_to(
+                    np.asarray(st._bounds, dtype=np.float64), (st.n_cells, 4))
+                 for st in self.stores])
+            self._bounds = D.mesh_h2d(mesh, cuts, row, self.dtype)
+        self._bound_rows = D.mesh_h2d(
+            mesh, np.asarray(self._bound_rows, dtype=np.float64),
+            rep2, self.dtype)
+
+    # -- state plumbing (mesh placement aware) -----------------------------
+
+    def state_slice(self, store: DeviceMomentStore, idx: int):
+        k = next(i for i, st in enumerate(self.stores) if st is store)
+        if idx < 3:
+            return self._state[idx][self._cell_maps[k]]
+        b = self.n_blocks
+        return self._state[3][self._ns_map[k * b:(k + 1) * b]]
+
+    def key_seg(self, k: int, store: DeviceMomentStore,
+                block_ids: np.ndarray,
+                group_ids: Optional[np.ndarray] = None,
+                mask: Optional[np.ndarray] = None) -> np.ndarray:
+        seg = store.build_seg(block_ids, group_ids, mask)
+        return self._cell_maps[k][seg].astype(np.int32)
+
+    def release(self) -> None:
+        """Dissolve the mesh stack: ONE d2h download of the four mesh
+        arrays, inverse-permuted per store on the host, handed back as
+        plain single-device arrays.  This is the shard-aware reset path:
+        a per-key drift reset (``_reset_key`` -> ``_drop_key_state``)
+        releases through here, so the key's rows come back from EVERY
+        shard — never shard 0 alone."""
+        if self._released:
+            return
+        from . import distributed as D
+        mom_s, mom_l, totals, ns = (np.asarray(a, dtype=np.float64)
+                                    for a in self._state)
+        b = self.n_blocks
+        for k, st in enumerate(self.stores):
+            cm = self._cell_maps[k]
+            nm = self._ns_map[k * b:(k + 1) * b]
+            st._mom_s = D.h2d(mom_s[cm], self.dtype)
+            st._mom_l = D.h2d(mom_l[cm], self.dtype)
+            st._totals = D.h2d(totals[cm], self.dtype)
+            st._ns_dev = D.h2d(ns[nm], self.dtype)
+            st._owner = None
+        self._state = None
+        self._sk_cells = None
+        self._released = True
+
+    def _install_stats(self, partials, rows, cfg):
+        rows_np = np.asarray(rows, dtype=np.float64)  # d2h: stats only
+        out = []
+        for k, st in enumerate(self.stores):
+            r0, r1 = int(self.row_offsets[k]), int(self.row_offsets[k + 1])
+            st._partials = _MeshPartialsView(partials, self._cell_maps[k])
+            st._rows = rows_np[r0:r1]
+            st._stats_valid = True
+            st._stats_cfg = cfg
+            out.append((st._partials, st._rows))
+        return out
+
+    # -- the tick ----------------------------------------------------------
+
+    def tick(self, params: IslaParams, mode: str = "calibrated",
+             geometry=None, values: Optional[np.ndarray] = None,
+             seg: Optional[np.ndarray] = None,
+             quotas: Optional[np.ndarray] = None,
+             dense=None, count_round: bool = True):
+        """``DeviceStack.tick`` on the mesh layout — identical payload
+        contract except tagged ``seg`` carries MESH cell ids (from
+        ``key_seg``), and each store's returned partials are lazy
+        mesh->store gather views (``_MeshPartialsView``)."""
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec
+
+        from . import distributed as D
+
+        if geometry is not None:
+            geometry = (float(geometry[0]), float(geometry[1]))
+        if self._released:
+            raise ValueError("stack was released (a store joined another "
+                             "stack); build a fresh MeshDeviceStack")
+        ax = D.cell_axis(self.mesh)
+        row = PartitionSpec(ax, None)
+        vec = PartitionSpec(ax)
+        rep = PartitionSpec()
+        cfg = (params, mode, geometry)
+        n_draw = 0 if quotas is None else int(np.sum(quotas))
+        if values is None or n_draw == 0:
+            if all(st._stats_valid and st._stats_cfg == cfg
+                   for st in self.stores):
+                return [(st._partials, st._rows) for st in self.stores]
+            solve = D.mesh_solve_fn(self.mesh, params, mode, geometry,
+                                    self.n_groups_list)
+            partials, rows = solve(*self._state, self._sketch0_cells(),
+                                   self._sizes, self._inv_scale)
+            return self._install_stats(partials, rows, cfg)
+
+        values = np.asarray(values, dtype=np.float64).reshape(-1)
+        quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
+        if quotas.shape != (self.n_blocks,):
+            raise ValueError(f"quotas must be ({self.n_blocks},), got "
+                             f"{quotas.shape}")
+        self._check_fp32_headroom(quotas)
+        S, bl = self.n_shards, self.blocks_local
+        q_pad = np.zeros(S * bl, dtype=np.float64)
+        q_pad[:self.n_blocks] = quotas
+        q_dev = D.mesh_h2d(self.mesh, q_pad, vec, self.dtype)
+        if dense is not None:
+            key_gids, key_valids = dense
+            if self._uniform:
+                st0 = self.stores[0]
+                pane_vals = (values + st0.shift) / st0.scale
+                key_affine = ((1.0, 0.0),) * len(self.stores)
+            else:
+                pane_vals = values / self._ref_scale
+                key_affine = self._key_affine
+            v2d, pad, vmask = _dense_panes(pane_vals, quotas)
+
+            def block_pad(a):
+                out = np.zeros((S * bl, a.shape[1]), dtype=a.dtype)
+                out[:a.shape[0]] = a
+                return out
+
+            gid_panes, valid_panes = [], []
+            gid_slots, valid_slots = [], []
+            seen_g, seen_v = {}, {}
+            for gids, valid in zip(key_gids, key_valids):
+                if gids is None:
+                    gid_slots.append(-1)
+                elif id(gids) in seen_g:
+                    gid_slots.append(seen_g[id(gids)])
+                else:
+                    g2d = np.zeros(v2d.shape, dtype=np.int32)
+                    g2d[vmask] = np.asarray(gids).reshape(-1)
+                    seen_g[id(gids)] = len(gid_panes)
+                    gid_slots.append(len(gid_panes))
+                    gid_panes.append(D.mesh_h2d(
+                        self.mesh, block_pad(g2d), row, jnp.int32))
+                if valid is None:
+                    valid_slots.append(-1)
+                elif id(valid) in seen_v:
+                    valid_slots.append(seen_v[id(valid)])
+                else:
+                    m2d = np.zeros(v2d.shape, dtype=np.float64)
+                    m2d[vmask] = np.asarray(valid, dtype=np.float64
+                                            ).reshape(-1)
+                    seen_v[id(valid)] = len(valid_panes)
+                    valid_slots.append(len(valid_panes))
+                    valid_panes.append(D.mesh_h2d(
+                        self.mesh, block_pad(m2d), row, self.dtype))
+            fn = D.mesh_tick_dense_fn(
+                self.mesh, params, mode, geometry, self.n_groups_list,
+                tuple(gid_slots), tuple(valid_slots), key_affine,
+                self._bound_slots, len(gid_panes), len(valid_panes))
+            out = fn(*self._state,
+                     D.mesh_h2d(self.mesh, block_pad(v2d), row,
+                                self.dtype),
+                     D.mesh_h2d(self.mesh, block_pad(pad), row,
+                                self.dtype),
+                     q_dev, tuple(gid_panes), tuple(valid_panes),
+                     self._bound_rows, self._sketch0_cells(),
+                     self._sizes, self._inv_scale)
+        else:
+            seg = np.asarray(seg, dtype=np.int32).reshape(-1)
+            if values.shape != seg.shape:
+                raise ValueError("values and seg must align")
+            m = values.size
+            bucket = _bucket(m)
+            v_pad = np.zeros(bucket, dtype=np.float64)
+            v_pad[:m] = values
+            # Pad/drop id: past every shard's window, so each shard
+            # retags it onto its local drop row.
+            s_pad = np.full(bucket, self.n_cells_mesh, dtype=np.int32)
+            s_pad[:m] = seg
+            fn = D.mesh_tick_fn(self.mesh, params, mode, geometry,
+                                self.n_groups_list, not self._uniform)
+            out = fn(*self._state,
+                     D.mesh_h2d(self.mesh, v_pad, rep, self.dtype),
+                     D.mesh_h2d(self.mesh, s_pad, rep, jnp.int32),
+                     q_dev, self._bounds, self._sketch0_cells(),
+                     self._sizes, self._inv_scale)
+        mom_s, mom_l, totals, ns, partials, rows = out
         self._state = (mom_s, mom_l, totals, ns)
         for st in self.stores:
             st.n_sampled = st.n_sampled + quotas

@@ -76,11 +76,12 @@ from typing import Callable, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .engine import (MODES, IslaQuery, block_quotas,
+from .engine import (AUTO_SKEW_THRESHOLD, MODES, IslaQuery, block_quotas,
                      phase2_iteration_batch, resolve_mode_and_geometry)
-from .moment_store import (DeviceMomentStore, DeviceStack, MomentStore,
-                           iter_chunked_draws, proportional_allocate,
-                           split_budget)
+from .modulation import empirical_geometry
+from .moment_store import (DeviceMomentStore, DeviceStack, MeshDeviceStack,
+                           MomentStore, iter_chunked_draws,
+                           proportional_allocate, split_budget)
 from .preestimation import (required_sample_size, run_pilot, sampling_rate,
                             z_score)
 from .summarize import summarize
@@ -92,7 +93,7 @@ AGGREGATES = ("AVG", "SUM", "COUNT", "VAR")
 # the shared sampling rate.  Only the *unpredicated, ungrouped* form is
 # exact: a WHERE or GROUP BY makes COUNT an estimate that consumes samples.
 EXACT_AGGREGATES = ("COUNT",)
-ROUTES = ("host", "device")
+ROUTES = ("host", "device", "mesh")
 
 # Predicate-aware planning floors the estimated selectivity so a predicate
 # the pilot barely matched cannot demand a quasi-full scan on its own.
@@ -288,7 +289,8 @@ class MultiQueryExecutor:
                  measure: str = "value",
                  group_domains: Optional[Mapping[str, int]] = None,
                  refine_anchors: bool = True,
-                 anchor_min_support: int = 64):
+                 anchor_min_support: int = 64,
+                 mesh=None):
         if len(block_samplers) != len(block_sizes):
             raise ValueError("one sampler per block required")
         self.block_samplers = list(block_samplers)
@@ -317,11 +319,16 @@ class MultiQueryExecutor:
         #                         valid only against the frozen anchor pilot
         self._key_anchors = {}  # where -> refined Anchor, frozen with the
         #                         pilot; per-key drift may re-derive an entry
-        # Device-resident serving state (route="device", incremental):
-        # per-StoreKey device mirrors holding the authoritative moments,
-        # and the stacked launch sets built over them per mode-group.
+        # Device-resident serving state (route="device"/"mesh",
+        # incremental): per-StoreKey device mirrors holding the
+        # authoritative moments, and the stacked launch sets built over
+        # them per mode-group.
         self._device_stores: "dict[StoreKey, DeviceMomentStore]" = {}
         self._device_stacks: dict = {}
+        # route="mesh": the jax mesh the stacked cell axis shards over.
+        # None auto-builds a 1-D mesh over every visible device on first
+        # use (jax import deferred — a host-route executor never pays it).
+        self.mesh = mesh
 
     def reset_stores(self) -> None:
         """Drop all warm stores (host and device-resident) and the pilot
@@ -740,10 +747,22 @@ class MultiQueryExecutor:
             columns = {}
         return pilot, columns
 
+    def _active_mesh(self):
+        """The mesh the ``"mesh"`` route shards over — the one handed to
+        the constructor, or a lazily-built 1-D mesh spanning every
+        visible device (cached; built here rather than at import so the
+        core layer never forces jax on host-route users)."""
+        if self.mesh is None:
+            import jax
+
+            from .. import compat
+            self.mesh = compat.make_mesh((jax.device_count(),), ("cells",))
+        return self.mesh
+
     def _pilot_stats_fn(self, route: str):
         """Device-route pilot: the jnp moment accumulation with a host
         fallback (returning None keeps run_pilot on the host reduction)."""
-        if route != "device":
+        if route not in ("device", "mesh"):
             return None
 
         def stats(pilot_values):
@@ -796,18 +815,37 @@ class MultiQueryExecutor:
 
         # Resolve each distinct requested mode once (the "auto" heuristic
         # and the ISLA-E geometry fit live in resolve_mode_and_geometry).
+        # "auto" under a REFINED anchor resolves per pass key instead:
+        # the key's matching-row skew picks the solver (a skewed WHERE
+        # slice riding a symmetric table must get "empirical", not the
+        # table-wide "calibrated" — and vice versa), and an empirical
+        # key's ISLA-E geometry is fitted from its matching pilot rows in
+        # its own anchor frame.  Such keys bucket into their own
+        # mode-group so the per-key geometry stays representable.
         resolved_cache = {}
         buckets = {}
         for i, q in enumerate(queries):
             requested = q.mode if q.mode is not None else mode
-            if requested not in resolved_cache:
-                resolved_cache[requested] = resolve_mode_and_geometry(
-                    pilot, params, requested)
-            resolved, geometry = resolved_cache[requested]
-            buckets.setdefault(resolved, (geometry, []))[1].append(i)
+            pk = _pass_key(q)
+            anchor = anchors.get(pk)
+            if (requested == "auto" and anchor is not None
+                    and anchor.source == "refined"):
+                ck = ("auto:key", pk)
+                if ck not in resolved_cache:
+                    resolved_cache[ck] = self._resolve_key_mode(
+                        anchor, pk, pilot, pilot_columns, params)
+                resolved, geometry = resolved_cache[ck]
+                bkey = (resolved, pk if geometry is not None else None)
+            else:
+                if requested not in resolved_cache:
+                    resolved_cache[requested] = resolve_mode_and_geometry(
+                        pilot, params, requested)
+                resolved, geometry = resolved_cache[requested]
+                bkey = (resolved, None)
+            buckets.setdefault(bkey, (geometry, []))[1].append(i)
 
         mode_groups = []
-        for resolved, (geometry, ids) in buckets.items():
+        for (resolved, _), (geometry, ids) in buckets.items():
             rate = (rate_override if rate_override is not None
                     else self.plan_rate([queries[i] for i in ids],
                                         pilot.sigma, pilot_columns,
@@ -845,13 +883,46 @@ class MultiQueryExecutor:
             self._key_anchors[where] = a
         return a
 
+    def _resolve_key_mode(self, anchor: Anchor, key, pilot,
+                          pilot_columns: Mapping[str, np.ndarray],
+                          params: IslaParams):
+        """Per-key mode="auto" resolution from the REFINED anchor's own
+        matching-row skew (``Anchor.skew`` — degenerate slices clamp to
+        0, so a near-constant sub-population stays "calibrated").
+
+        When the key resolves "empirical", the ISLA-E band geometry is
+        fitted from the pilot rows matching its predicate, in the KEY'S
+        anchor frame (its sketch0/sigma/shift) — the global pilot's band
+        means say nothing about the slice's conditional shape.  Falls
+        back to the global empirical fit when the frozen pilot no longer
+        yields matching rows (e.g. the anchor was re-derived from probe
+        rows after a per-key drift reset)."""
+        if abs(anchor.skew) <= AUTO_SKEW_THRESHOLD:
+            return "calibrated", None
+        where, _ = key
+        vals = None
+        if pilot_columns and self.measure in pilot_columns \
+                and where is not None:
+            try:
+                m = np.asarray(where.mask(pilot_columns), dtype=bool)
+            except KeyError:
+                m = None
+            if m is not None and m.any():
+                vals = np.asarray(pilot_columns[self.measure],
+                                  dtype=np.float64)[m]
+        if vals is None or vals.size < 2:
+            return resolve_mode_and_geometry(pilot, params, "empirical")
+        geometry = empirical_geometry(vals + anchor.shift, anchor.sketch0,
+                                      anchor.sigma, params)
+        return "empirical", geometry
+
     # -- execution ---------------------------------------------------------
 
     def _partials(self, mom_s: np.ndarray, mom_l: np.ndarray,
                   sketch0: float, sigma: float, params: IslaParams,
                   mode: str, geometry, route: str) -> np.ndarray:
         """Phase 2 over stacked (n, 4) cells on the chosen route."""
-        if route == "device":
+        if route in ("device", "mesh"):
             return self._device_partials(mom_s, mom_l, sketch0, sigma,
                                          params, mode, geometry)
         return phase2_iteration_batch(mom_s, mom_l, sketch0, params,
@@ -895,7 +966,7 @@ class MultiQueryExecutor:
         n = len(self.block_sizes)
         mom_s, mom_l = store.mom_s, store.mom_l
         quotas = store.n_sampled
-        if route == "device":
+        if route in ("device", "mesh"):
             partials = self._device_partials(
                 mom_s, mom_l, store.sketch0, pilot.sigma, params,
                 mg.mode, mg.geometry)
@@ -1071,22 +1142,28 @@ class MultiQueryExecutor:
             self._device_stores[skey] = dst
         return dst
 
-    def _device_group(self, mg: ModeGroup, group_stores: Mapping
+    def _device_group(self, mg: ModeGroup, group_stores: Mapping,
+                      route: str = "device"
                       ) -> Tuple[list, dict, DeviceStack]:
         """One mode-group's stacked launch set: every key's device store
-        concatenated onto one cell axis (``DeviceStack``), cached across
-        ticks so steady state re-uploads nothing."""
+        concatenated onto one cell axis (``DeviceStack``; the
+        mesh-sharded ``MeshDeviceStack`` on route="mesh"), cached across
+        ticks so steady state re-uploads nothing.  The route rides the
+        cache key — switching an executor's route rebuilds its stacks
+        in the other placement (via release, state preserved)."""
         keys = list(group_stores)
         dstores = {k: self._ensure_device_store(mg, k, group_stores[k])
                    for k in keys}
-        ck = (mg.mode,
+        ck = (route, mg.mode,
               tuple(StoreKey(where=k[0], group_by=k[1], mode=mg.mode)
                     for k in keys))
         stack = self._device_stacks.get(ck)
         if (stack is None or stack._released
                 or [id(s) for s in stack.stores]
                 != [id(dstores[k]) for k in keys]):
-            stack = DeviceStack([dstores[k] for k in keys])
+            members = [dstores[k] for k in keys]
+            stack = (MeshDeviceStack(members, self._active_mesh())
+                     if route == "mesh" else DeviceStack(members))
             # Evict entries the adoption released (a key-set change must
             # not pin dead stacked-state copies in device memory).
             self._device_stacks = {
@@ -1154,9 +1231,11 @@ class MultiQueryExecutor:
                 mask = where.mask(columns) if where is not None else None
                 gids = (self._group_ids(group_by, columns)[0]
                         if group_by is not None else None)
-                segs.append(dst.build_seg(
-                    block_ids, gids, mask,
-                    offset=int(stack.offsets[k_i])))
+                # key_seg is the stack's cell-placement contract: a
+                # plain stacked offset on one device, the block-run
+                # shard map on a mesh.
+                segs.append(stack.key_seg(k_i, dst, block_ids, gids,
+                                          mask))
                 vals.append(values if mask is None else values[mask])
             stack.tick(self.params, mode=dev_mode, geometry=mg.geometry,
                        values=np.concatenate(vals),
@@ -1428,12 +1507,14 @@ class MultiQueryExecutor:
             dtype=np.int64)
         group_stores, key_aggs = prebuilt
         # Device-resident serving: persistent stores on route="device"
+        # (one device) or "mesh" (cell axis sharded over every device)
         # keep their moments as jax arrays between ticks; the whole tick
         # is one fused launch per mode-group and the host reads only
         # scalar answers / group stats.
-        device_resident = bool(persistent and route == "device")
+        device_resident = bool(persistent and route in ("device", "mesh"))
         if device_resident:
-            keys, dstores, stack = self._device_group(mg, group_stores)
+            keys, dstores, stack = self._device_group(mg, group_stores,
+                                                      route)
         if persistent:
             draw = np.zeros(len(self.block_sizes), dtype=np.int64)
             for key, st in group_stores.items():
@@ -1578,8 +1659,11 @@ class MultiQueryExecutor:
             mode and runs one shared pass per group.
         route : str, optional
             Where Phase 2 (and, incrementally, the whole tick) runs:
-            ``"host"`` (float64 numpy) or ``"device"`` (jnp; fp32 with
-            anchor-scale normalization unless jax runs in x64).
+            ``"host"`` (float64 numpy), ``"device"`` (jnp; fp32 with
+            anchor-scale normalization unless jax runs in x64), or
+            ``"mesh"`` (the device tick with its cell axis sharded over
+            a jax mesh — see the executor's ``mesh`` argument; state
+            stays per-shard, collectives move only O(groups) stat rows).
         rate_override : float, optional
             Bypass Eq. 1 and sample at exactly this rate (experiments).
         sigma_guess : float, optional
@@ -1641,6 +1725,15 @@ class MultiQueryExecutor:
         must stay consistent for a given warm state — call
         ``reset_stores()`` before switching an executor between warm host
         and device serving.
+
+        ``route="mesh"`` is the same device-resident tick with the
+        stacked cell axis SHARDED over a jax mesh
+        (``MeshDeviceStack``): each shard keeps its block run's moments
+        resident, the launch runs per-shard, and the only collective is
+        a psum of the O(groups) stat rows — zero per-cell moment bytes
+        cross devices.  Per-key drift resets release state from every
+        shard.  On a single-device jax runtime the layout degenerates to
+        exactly the ``"device"`` path.
         """
         if budget is not None and not incremental:
             raise ValueError(

@@ -254,6 +254,13 @@ class Anchor:
     source : str
         ``"global"`` (whole pilot) or ``"refined"`` (predicate-matching
         pilot rows).
+    skew : float
+        Standardized third moment of the anchor's source rows
+        (``engine.sample_skew`` — degenerate slices clamp to 0).  A
+        refined anchor carries its OWN sub-population's shape, so the
+        planner can resolve mode="auto" per key instead of from the
+        global pilot.  Like ``sigma``, a statistic — excluded from
+        :attr:`fingerprint`.
 
     Examples
     --------
@@ -269,6 +276,7 @@ class Anchor:
     sigma: float
     support: int = 0
     source: str = "global"
+    skew: float = 0.0
 
     @property
     def fingerprint(self) -> Tuple:
@@ -287,11 +295,14 @@ class Anchor:
         """The global anchor — exactly the frame ``aggregate()`` derives
         from a ``PilotResult``."""
         from .boundaries import make_boundaries
+        from .engine import sample_skew
         sketch0 = pilot.sketch0 + pilot.shift
+        skew = (sample_skew(pilot.values) if pilot.values is not None
+                else 0.0)
         return Anchor(
             boundaries=make_boundaries(sketch0, pilot.sigma, params),
             sketch0=sketch0, shift=pilot.shift, sigma=pilot.sigma,
-            support=int(pilot.pilot_size), source="global")
+            support=int(pilot.pilot_size), source="global", skew=skew)
 
     def refine_for_predicate(self, pilot_columns: Mapping[str, np.ndarray],
                              where: Optional["Predicate"],
@@ -344,10 +355,12 @@ class Anchor:
         shift = 0.0 if lo > 0.0 else -lo + sigma
         sketch0 = mean + shift
         from .boundaries import make_boundaries
+        from .engine import sample_skew
         return Anchor(
             boundaries=make_boundaries(sketch0, sigma, params),
             sketch0=sketch0, shift=shift, sigma=sigma,
-            support=int(vals.size), source="refined")
+            support=int(vals.size), source="refined",
+            skew=sample_skew(vals))
 
     def planning_sigma(self, beta: float = 0.95) -> float:
         """Upper-confidence sigma for Eq. 1 rate planning.

@@ -34,3 +34,16 @@ def mesh_devices(mesh) -> int:
     for s in mesh.devices.shape:
         n *= s
     return n
+
+
+def make_cell_mesh(n_shards: "int | None" = None):
+    """1-D mesh for ISLA cell-axis sharding (``route="mesh"``): the
+    stacked (store, group, block) cell axis of a ``MeshDeviceStack``
+    splits over its single ``"cells"`` axis by block runs.  ``n_shards``
+    defaults to every visible device (on a forced host-device-count
+    runtime that is the ``--xla_force_host_platform_device_count``
+    value)."""
+    import jax
+    if n_shards is None:
+        n_shards = jax.device_count()
+    return make_mesh((int(n_shards),), ("cells",))

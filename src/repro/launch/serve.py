@@ -33,6 +33,16 @@ errors:
 
   PYTHONPATH=src python -m repro.launch.serve --workload isla --smoke \
       --incremental --route device --drift-check 6.0
+
+``--route mesh`` shards the device-resident tick's cell axis over every
+visible jax device (``launch.mesh.make_cell_mesh``): each shard keeps its
+block run's moments resident and the only cross-device traffic is a psum
+of O(groups) stat rows.  Exercise shard counts > 1 on CPU by forcing the
+host device count BEFORE jax imports:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m repro.launch.serve --workload isla \
+      --smoke --incremental --route mesh
 """
 from __future__ import annotations
 
@@ -81,9 +91,12 @@ class IslaAdmissionLoop:
     mode : str, optional
         Default Phase 2 mode handed to ``run`` (queries may override).
     route : str, optional
-        ``"host"`` or ``"device"``; with ``incremental=True`` the device
-        route keeps every store's moments resident between ticks and runs
-        each tick as one fused launch per mode-group.
+        ``"host"``, ``"device"`` or ``"mesh"``; with ``incremental=True``
+        the device route keeps every store's moments resident between
+        ticks and runs each tick as one fused launch per mode-group, and
+        the mesh route additionally shards the stacked cell axis over
+        every visible jax device (collectives move only O(groups) stat
+        rows).
     max_batch : int, optional
         Most queries admitted per tick; overflow waits for the next tick.
     incremental : bool, optional
@@ -339,7 +352,8 @@ def main():
     ap.add_argument("--ticks", type=int, default=4)
     ap.add_argument("--queries-per-tick", type=int, default=6)
     ap.add_argument("--precision", type=float, default=0.5)
-    ap.add_argument("--route", choices=["host", "device"], default="host")
+    ap.add_argument("--route", choices=["host", "device", "mesh"],
+                    default="host")
     ap.add_argument("--incremental", action="store_true",
                     help="persistent moment stores: warm-serve repeat "
                          "predicates, top up only sample deficits")

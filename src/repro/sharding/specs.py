@@ -225,6 +225,36 @@ def shardings(mesh: Mesh, spec_tree):
         is_leaf=lambda x: isinstance(x, P))
 
 
+# -- ISLA cell-axis sharding (route="mesh") ---------------------------------
+
+ISLA_CELL_AXIS = "cells"
+
+
+def isla_cell_specs(mesh: Mesh) -> Dict[str, P]:
+    """PartitionSpecs for the ISLA mesh tier (``core.moment_store.
+    MeshDeviceStack`` / ``core.distributed.mesh_tick_fn``), keyed by
+    operand family:
+
+      cells      (N,)   per-cell vectors (ledger, sketch0, inv_scale,
+                        quota rows) — sharded on the cell axis
+      cell_rows  (N, k) per-cell matrices (moments, totals, per-cell
+                        cuts, dense block panes) — sharded on dim 0
+      replicated (...)  sample streams / tags / small anchor tables —
+                        every shard holds a copy
+      stat_rows  (G, 9) psum'd group-stat rows — replicated output
+
+    The axis name comes from the mesh itself so a caller-built mesh with
+    a different first-axis name still shards correctly.
+    """
+    ax = mesh.axis_names[0]
+    return {
+        "cells": P(ax),
+        "cell_rows": P(ax, None),
+        "replicated": P(),
+        "stat_rows": P(None, None),
+    }
+
+
 def activation_constraint(cfg: ArchConfig, mesh: Mesh):
     """Between-block residual-stream constraint used in the train path:
     shard sequence over "model" (Megatron-SP style) so the remat-saved scan

@@ -428,3 +428,90 @@ def test_device_incremental_matches_host_with_refined_anchors():
         assert d.value == pytest.approx(h.value, rel=tol, abs=tol * MU)
         assert d.new_samples == h.new_samples
         assert (d.error_bound is None) == (h.error_bound is None)
+
+
+# ---------------------------------------------------------------------------
+# Mode resolution: per-key "auto" + the degenerate-slice skew clamp.
+# ---------------------------------------------------------------------------
+
+
+def test_sample_skew_clamps_degenerate_slice():
+    """Regression: a (near-)constant slice reports skew 0.  The naive
+    estimator (divide by ``std + 1e-12``) standardizes float rounding
+    noise at the data's own magnitude into an arbitrary |skew| > 0.5 —
+    here the noise pattern is lognormal, so it reports the NOISE's
+    skew and would flip auto-mode to "empirical" on a slice that
+    carries no shape information."""
+    from repro.core.engine import sample_skew
+
+    rng = np.random.default_rng(0)
+    vals = 1e9 + 1e-4 * rng.lognormal(0.0, 1.0, size=5000)
+    sd = float(np.std(vals))
+    naive = float(np.mean(((vals - vals.mean()) / (sd + 1e-12)) ** 3))
+    assert abs(naive) > 0.5          # the old estimator's failure mode
+    assert sample_skew(vals) == 0.0  # the clamp: relative spread < 1e-7
+    # A genuinely skewed slice still reports its shape...
+    assert abs(sample_skew(rng.lognormal(0.0, 1.0, 5000))) > 0.5
+    # ...and tiny slices degrade to symmetric, not to noise.
+    assert sample_skew(np.array([3.0, 4.0])) == 0.0
+
+
+def test_refined_anchor_skew_clamps_on_degenerate_slice():
+    """The refined anchor of a near-constant sub-population carries
+    skew 0 (via the ``sample_skew`` clamp), so per-key auto-mode keeps
+    it "calibrated" instead of flipping to "empirical" on rounding
+    noise."""
+    from repro.core.engine import AUTO_SKEW_THRESHOLD
+
+    rng = np.random.default_rng(1)
+    n = 4000
+    flag = (rng.random(n) < 0.25).astype(np.float64)
+    value = rng.normal(MU, SIGMA, size=n)
+    value[flag == 1] = 1e9 + 1e-4 * rng.lognormal(
+        0.0, 1.0, size=int(flag.sum()))
+    cols = {"value": value, "flag": flag}
+    g = _global_anchor(value)
+    refined = g.refine_for_predicate(cols, Predicate(column="flag", eq=1.0),
+                                     PARAMS)
+    assert refined.source == "refined"
+    assert refined.skew == 0.0
+    assert abs(refined.skew) <= AUTO_SKEW_THRESHOLD  # -> "calibrated"
+
+
+def test_auto_mode_resolves_per_key_from_refined_anchor_skew():
+    """Acceptance fixture for per-key mode resolution: a heavily skewed
+    WHERE slice riding a near-symmetric table.  The global auto query
+    resolves "calibrated" (table skew ~0.25), the refined key resolves
+    "empirical" from its OWN matching-row skew (~4.8), both earn their
+    (e, beta) bound, and the per-key answer lands within e of the slice
+    truth.  With refinement disabled the key inherits the global
+    "calibrated" pick — the pre-fix behavior this test pins down."""
+    rng = np.random.default_rng(3)
+    n_blocks, rows = 6, 40000
+    tables = []
+    for _ in range(n_blocks):
+        v = rng.normal(MU, SIGMA, size=rows)
+        hot = (rng.random(rows) < 0.3).astype(np.float64)
+        idx = hot.astype(bool)
+        v[idx] = 90.0 + 5.0 * rng.lognormal(0.0, 0.9, size=int(idx.sum()))
+        tables.append({"value": v, "hot": hot})
+    truth = float(np.mean(np.concatenate(
+        [t["value"][t["hot"] == 1.0] for t in tables])))
+    queries = [IslaQuery(agg="AVG", mode="auto"),
+               IslaQuery(agg="AVG", mode="auto",
+                         where=Predicate(column="hot", eq=1.0))]
+
+    def run(refine):
+        ex = MultiQueryExecutor([table_sampler(t) for t in tables],
+                                [rows] * n_blocks,
+                                refine_anchors=refine)
+        return ex.run(queries, np.random.default_rng(5))
+
+    glob, key = run(refine=True)
+    assert glob.mode == "calibrated"       # table-wide skew is sub-threshold
+    assert key.mode == "empirical"         # slice skew picks the solver
+    assert glob.error_bound is not None    # both bounds earned
+    assert key.error_bound is not None
+    assert abs(key.value - truth) <= key.query.e
+    _, key_unrefined = run(refine=False)
+    assert key_unrefined.mode == "calibrated"  # pre-fix: global pick leaks
