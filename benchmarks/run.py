@@ -3,12 +3,34 @@ framework-level telemetry/kernel benches.  Prints ``name,us_per_call,derived``
 CSV (scaffold contract)."""
 from __future__ import annotations
 
+import os
 import sys
+
+# The forced host-device count must be pinned BEFORE anything imports
+# jax (jax reads XLA_FLAGS at init): the mesh rows below shard over 8
+# virtual devices.  Honors a count the caller already forced.
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+if _FORCE_FLAG not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + f" {_FORCE_FLAG}=8").strip()
+
+
+def _sectioned(module, sections):
+    """Adapt a sectioned device-tier bench (``(rows, report)`` pairs,
+    smoke sizes) into the harness's flat row generator."""
+    def rows():
+        out = []
+        for name in sections:
+            section_rows, _ = getattr(module, name)(smoke=True)
+            out.extend(section_rows)
+        return out
+    rows.__name__ = module.__name__.rsplit(".", 1)[-1]
+    return rows
 
 
 def main() -> None:
-    from . import (multiquery_bench, online_bench, paper_tables,
-                   telemetry_bench)
+    from . import (device_bench, mesh_bench, multiquery_bench, online_bench,
+                   paper_tables, prune_bench, telemetry_bench)
 
     benches = [
         multiquery_bench.batched_vs_sequential_calculation,
@@ -29,6 +51,12 @@ def main() -> None:
         telemetry_bench.telemetry_collective_payload,
         telemetry_bench.telemetry_accuracy_speed,
         telemetry_bench.kernel_bench,
+        _sectioned(device_bench,
+                   ("tick_speed", "transfer_counts", "dense_fused")),
+        _sectioned(mesh_bench, ("tick_scaling", "transfer_audit")),
+        _sectioned(prune_bench,
+                   ("sample_savings", "residual_parity", "transfer_audit",
+                    "tick_speed")),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -6,8 +6,9 @@ Telemetry API for training loops: metrics.loss_stats etc.
 """
 from .types import (AggregateResult, Anchor, BlockResult, BlockResultsBatch,
                     Boundaries, IslaParams, Predicate, RegionMoments,
-                    StoreKey, REGION_TS, REGION_S, REGION_N, REGION_L,
-                    REGION_TL, classify, classify_np, region_of)
+                    StoreKey, ZoneMap, REGION_TS, REGION_S, REGION_N,
+                    REGION_L, REGION_TL, ZONE_EMPTY, ZONE_FULL,
+                    ZONE_PARTIAL, classify, classify_np, region_of)
 from .boundaries import (choose_q, choose_q_batch, deviation_degree,
                          deviation_degree_batch, is_balanced,
                          is_balanced_batch, make_boundaries)
@@ -42,7 +43,8 @@ __all__ = [
     "Boundaries",
     "IslaParams", "IslaQuery", "Predicate", "flat_segments",
     "RegionMoments", "REGION_TS", "REGION_S", "REGION_N", "REGION_L",
-    "REGION_TL", "classify", "classify_np", "region_of", "choose_q",
+    "REGION_TL", "ZoneMap", "ZONE_EMPTY", "ZONE_FULL", "ZONE_PARTIAL",
+    "classify", "classify_np", "region_of", "choose_q",
     "choose_q_batch", "deviation_degree", "deviation_degree_batch",
     "is_balanced", "is_balanced_batch", "make_boundaries", "l_estimator",
     "l_estimator_direct", "theorem3_kc", "theorem3_kc_batch", "lambda_star",

@@ -393,10 +393,23 @@ def _dense_core(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
                 sizes: jnp.ndarray, inv_scale: jnp.ndarray, *,
                 params: IslaParams, mode: str, geometry,
                 n_groups_list, gid_slots, valid_slots, key_affine,
-                bound_slots):
+                bound_slots, active_cells=None):
     """The dense tick body shared by the single-device
     ``fused_tick_dense`` and the per-shard program of the mesh launch
     (``mesh_tick_dense_fn``); rows come back unreduced across shards.
+
+    ``active_cells`` is the zone-map pruning contract: when the planner
+    rates blocks at 0 (provably filtered out), the launch runs over a
+    COMPACTED block axis — ``values2d`` / ``pad_valid`` / ``quotas`` and
+    every pane cover only the active blocks — and ``active_cells =
+    (cell_idx, ns_idx)`` scatters the compacted delta back onto the full
+    resident state (``cell_idx`` maps compacted (key, group, block) rows
+    to resident cell rows, ``ns_idx`` maps compacted (key, block) quota
+    rows to the draw ledger; out-of-bounds pad entries drop).  Pruned
+    cells' resident rows are left untouched — x + 0 never happens, the
+    rows simply aren't addressed — so a predicate change re-activates
+    them warm.  Phase 2 and the group stat rows still run over the FULL
+    state: skipped cells keep contributing their resident moments.
 
     The serving draw is per-block contiguous, so the tick's samples pack
     into a (n_blocks, quota_max) pane (``pad_valid`` zeroes the ragged
@@ -478,10 +491,18 @@ def _dense_core(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
             sub = blk[:, 11 * j:11 * (j + 1), :]
             parts[i] = jnp.transpose(sub, (2, 0, 1)).reshape(g * n_b, 11)
     delta = jnp.concatenate(parts, axis=0)              # (C, 11)
-    mom_s = mom_s + delta[:, 0:4]
-    mom_l = mom_l + delta[:, 4:8]
-    totals = totals + delta[:, 8:11]
-    n_sampled = n_sampled + jnp.tile(quotas, len(n_groups_list))
+    if active_cells is None:
+        mom_s = mom_s + delta[:, 0:4]
+        mom_l = mom_l + delta[:, 4:8]
+        totals = totals + delta[:, 8:11]
+        n_sampled = n_sampled + jnp.tile(quotas, len(n_groups_list))
+    else:
+        cell_idx, ns_idx = active_cells
+        mom_s = mom_s.at[cell_idx].add(delta[:, 0:4], mode="drop")
+        mom_l = mom_l.at[cell_idx].add(delta[:, 4:8], mode="drop")
+        totals = totals.at[cell_idx].add(delta[:, 8:11], mode="drop")
+        n_sampled = n_sampled.at[ns_idx].add(
+            jnp.tile(quotas, len(n_groups_list)), mode="drop")
     thr, geometry = _scaled_solve_args(params, geometry, inv_scale)
     partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
                       geometry=geometry, thr=thr)
@@ -502,21 +523,25 @@ def fused_tick_dense(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
                      values2d: jnp.ndarray, pad_valid: jnp.ndarray,
                      quotas: jnp.ndarray, gid_panes, valid_panes,
                      bounds: jnp.ndarray, sketch0: jnp.ndarray,
-                     sizes: jnp.ndarray, inv_scale: jnp.ndarray = None, *,
+                     sizes: jnp.ndarray, inv_scale: jnp.ndarray = None,
+                     active_cells=None, *,
                      params: IslaParams,
                      mode: str = "calibrated", geometry=None,
                      n_groups_list=(1,), gid_slots=(-1,),
                      valid_slots=(-1,), key_affine=None,
                      bound_slots=None):
     """``fused_tick`` on the dense block-major layout (see
-    ``_dense_core`` for the batched-contraction Phase 1 and the
-    static-slot pane sharing; this wrapper owns the jit + donation)."""
+    ``_dense_core`` for the batched-contraction Phase 1, the static-slot
+    pane sharing, and the ``active_cells`` compacted-launch contract;
+    this wrapper owns the jit + donation).  ``active_cells=None`` (an
+    empty pytree) keeps existing call sites on the identical trace."""
     return _dense_core(mom_s, mom_l, totals, n_sampled, values2d,
                        pad_valid, quotas, gid_panes, valid_panes, bounds,
                        sketch0, sizes, inv_scale, params=params, mode=mode,
                        geometry=geometry, n_groups_list=n_groups_list,
                        gid_slots=gid_slots, valid_slots=valid_slots,
-                       key_affine=key_affine, bound_slots=bound_slots)
+                       key_affine=key_affine, bound_slots=bound_slots,
+                       active_cells=active_cells)
 
 
 @functools.partial(
@@ -644,7 +669,8 @@ def mesh_tick_fn(mesh, params: IslaParams, mode: str, geometry,
 @functools.lru_cache(maxsize=64)
 def mesh_tick_dense_fn(mesh, params: IslaParams, mode: str, geometry,
                        n_groups_list, gid_slots, valid_slots, key_affine,
-                       bound_slots, n_gid_panes: int, n_valid_panes: int):
+                       bound_slots, n_gid_panes: int, n_valid_panes: int,
+                       compacted: bool = False):
     """Compiled mesh launch of the dense fused tick.
 
     The block axis IS the sharded axis in the dense layout: the value
@@ -654,27 +680,39 @@ def mesh_tick_dense_fn(mesh, params: IslaParams, mode: str, geometry,
     all.  Group ids stay global (every shard holds all groups; only
     blocks split).  ``n_gid_panes`` / ``n_valid_panes`` fix the static
     pytree arity of the shared pane tuples.
+
+    ``compacted=True`` is the shard-aware zone-pruned launch: the pane
+    operands cover each shard's ACTIVE blocks only (every shard padded
+    to the same bucketed active count, so block runs stay contiguous and
+    the global pane layout remains shard-major), and two extra ``P(ax)``
+    index vectors — local cell / ledger scatter targets per shard, pads
+    out-of-bounds — route the compacted delta onto the resident shards
+    (see ``_dense_core``'s ``active_cells``).
     """
     from jax.sharding import PartitionSpec as P
     ax = cell_axis(mesh)
     row, vec = P(ax, None), P(ax)
 
     def body(mom_s, mom_l, totals, ns, values2d, pad_valid, quotas,
-             gid_panes, valid_panes, bounds, sketch0, sizes, inv_scale):
+             gid_panes, valid_panes, bounds, sketch0, sizes, inv_scale,
+             active_cells=None):
         mom_s, mom_l, totals, ns, partials, rows = _dense_core(
             mom_s, mom_l, totals, ns, values2d, pad_valid, quotas,
             gid_panes, valid_panes, bounds, sketch0, sizes, inv_scale,
             params=params, mode=mode, geometry=geometry,
             n_groups_list=n_groups_list, gid_slots=gid_slots,
             valid_slots=valid_slots, key_affine=key_affine,
-            bound_slots=bound_slots)
+            bound_slots=bound_slots, active_cells=active_cells)
         return mom_s, mom_l, totals, ns, partials, jax.lax.psum(rows, ax)
 
+    specs = (row, row, row, vec, row, row, vec,
+             (vec,) * n_gid_panes, (row,) * n_valid_panes,
+             P(None, None), vec, vec, vec)
+    if compacted:
+        specs = specs + ((vec, vec),)
     sharded = _mesh_shard_map(
         body, mesh,
-        in_specs=(row, row, row, vec, row, row, vec,
-                  (vec,) * n_gid_panes, (row,) * n_valid_panes,
-                  P(None, None), vec, vec, vec),
+        in_specs=specs,
         out_specs=(row, row, row, vec, vec, P(None, None)))
     return jax.jit(sharded, donate_argnums=(0, 1, 2, 3))
 

@@ -434,12 +434,28 @@ def resolve_mode_and_geometry(pilot: PilotResult, params: IslaParams,
     return mode, geometry
 
 
-def block_quotas(block_sizes: Sequence[int], rate: float,
+def block_quotas(block_sizes: Sequence[int], rate,
                  max_samples: Optional[int] = None) -> "list[int]":
-    """Per-block sample quotas — the same formula ``run_block`` applies."""
+    """Per-block sample quotas — the same formula ``run_block`` applies.
+
+    ``rate`` may be a scalar (the classic uniform plan) or a per-block
+    array (the zone-map pruned plan): a block rated exactly ``<= 0`` is
+    provably out of the plan and gets quota 0 — no draw, no RNG
+    consumption — while every in-plan block keeps the scalar path's
+    ``max(m, 1)`` floor bit-identically.
+    """
+    rates = np.asarray(rate, dtype=np.float64)
+    per_block = rates.ndim > 0
+    if per_block and rates.shape != (len(block_sizes),):
+        raise ValueError(f"per-block rate must have shape "
+                         f"({len(block_sizes)},), got {rates.shape}")
     quotas = []
-    for bs in block_sizes:
-        m = int(math.ceil(rate * bs))
+    for j, bs in enumerate(block_sizes):
+        r = float(rates[j]) if per_block else float(rates)
+        if per_block and r <= 0.0:
+            quotas.append(0)
+            continue
+        m = int(math.ceil(r * bs))
         if max_samples is not None:
             m = min(m, int(max_samples))
         quotas.append(max(m, 1))

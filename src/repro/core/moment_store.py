@@ -811,6 +811,15 @@ class DeviceStack:
             (self._ref_scale / st.scale, st.shift / st.scale)
             for st in self.stores)
         self._sk_cells = None  # cached per-cell sketch vector (device)
+        # Zone-map pruning: when a pruned plan zeroes whole blocks'
+        # quotas, the dense tick launches over a COMPACTED active-block
+        # axis (gather before the fused Phase 1+2, scatter the delta
+        # back) — pruned cells keep their resident rows untouched, so a
+        # predicate change re-activates them warm.  Toggle for tests /
+        # parity audits; the tagged (x64) path never compacts (it is
+        # already O(matched samples) and owns the bit-parity contract).
+        self.block_compaction = True
+        self._active_cache = {}  # active-set bytes -> device index pair
         # Adopt the stores: the stacked tensors become the authoritative
         # resident state (built once — steady ticks donate them in place,
         # no per-tick concat/split churn).  A store reads its slice
@@ -922,6 +931,56 @@ class DeviceStack:
                 "to re-anchor", RuntimeWarning, stacklevel=3)
             self._sat_warned = True
 
+    def _compact_plan(self, quotas: np.ndarray):
+        """The dense tick's zone-pruned launch plan: ``(compact_quotas,
+        active, (cell_idx, ns_idx))`` when compaction pays, else None.
+
+        ``active`` is the ascending list of blocks with a non-zero quota
+        — ascending block order IS the draw-stream order, so the compact
+        pane fills from the stream unchanged.  The active count is
+        rounded up to a power-of-two bucket (pad slots carry quota 0 and
+        out-of-bounds scatter targets, so they drop) to bound retraces;
+        a bucket reaching the full block axis falls back to the
+        uncompacted launch — the identical pre-pruning graph.  The
+        device-resident scatter index pair is cached per active set, so
+        steady-state ticks under an unchanged plan upload only the usual
+        four sample-sized operands.
+        """
+        if not self.block_compaction:
+            return None
+        active = np.flatnonzero(quotas > 0)
+        a_pad = _bucket(max(int(active.size), 1), floor=8)
+        if a_pad >= self.n_blocks:
+            return None
+        import jax.numpy as jnp
+
+        from . import distributed as D
+
+        q_c = np.zeros(a_pad, dtype=np.int64)
+        q_c[:active.size] = quotas[active]
+        ck = active.tobytes()
+        pair = self._active_cache.get(ck)
+        if pair is None:
+            ext = np.full(a_pad, -1, dtype=np.int64)
+            ext[:active.size] = active
+            B = self.n_blocks
+            K = len(self.stores)
+            parts = []
+            for k, st in enumerate(self.stores):
+                idx = (int(self.offsets[k])
+                       + np.arange(st.n_groups)[:, None] * B + ext[None, :])
+                parts.append(np.where(ext[None, :] < 0, self.n_cells,
+                                      idx).reshape(-1))
+            cell_idx = np.concatenate(parts)
+            ns_idx = np.arange(K)[:, None] * B + ext[None, :]
+            ns_idx = np.where(ext[None, :] < 0, K * B, ns_idx).reshape(-1)
+            if len(self._active_cache) >= 32:
+                self._active_cache.clear()
+            pair = (D.h2d(cell_idx.astype(np.int32), jnp.int32),
+                    D.h2d(ns_idx.astype(np.int32), jnp.int32))
+            self._active_cache[ck] = pair
+        return q_c, active, pair
+
     def _sketch0_cells(self):
         # Broadcast from each store's resident device scalar — a plain
         # device op (cached across ticks), so warm ticks create no
@@ -1006,7 +1065,6 @@ class DeviceStack:
         # All h2d crossings below are the tick's fresh samples and their
         # tags — moments never cross (the per-store tiling of the quota
         # row happens inside the launch).
-        q_dev = D.h2d(quotas.astype(np.float64), self.dtype)
         if dense is not None:
             key_gids, key_valids = dense
             if self._uniform:
@@ -1019,7 +1077,18 @@ class DeviceStack:
             else:
                 pane_vals = values / self._ref_scale
                 key_affine = self._key_affine
-            v2d, pad, vmask = _dense_panes(pane_vals, quotas)
+            # Zone-pruned plans zero whole blocks' quotas; the draw
+            # stream already skips those blocks, so the pane compacts to
+            # the active rows and the delta scatters back through the
+            # cached index pair.  The quota row crosses in compact form
+            # too — the launch never sees the pruned axis.
+            cp = self._compact_plan(quotas)
+            if cp is not None:
+                pane_quotas, _, active_cells = cp
+            else:
+                pane_quotas, active_cells = quotas, None
+            q_dev = D.h2d(pane_quotas.astype(np.float64), self.dtype)
+            v2d, pad, vmask = _dense_panes(pane_vals, pane_quotas)
             # Dedupe shared panes by host-array identity into slot
             # tuples: one upload per distinct pane, and the STATIC slot
             # indices let the fused program batch keys that share a
@@ -1055,6 +1124,7 @@ class DeviceStack:
                 D.h2d(pad, self.dtype), q_dev, tuple(gid_panes),
                 tuple(valid_panes), self._bound_rows,
                 self._sketch0_cells(), self._sizes, self._inv_scale,
+                active_cells,
                 params=params, mode=mode, geometry=geometry,
                 n_groups_list=self.n_groups_list,
                 gid_slots=tuple(gid_slots),
@@ -1071,6 +1141,7 @@ class DeviceStack:
             v_pad[:m] = values
             s_pad = np.full(bucket, self.n_cells, dtype=np.int32)  # drop
             s_pad[:m] = seg
+            q_dev = D.h2d(quotas.astype(np.float64), self.dtype)
             mom_s, mom_l, totals, ns, partials, rows = D.fused_tick(
                 mom_s, mom_l, totals, ns, D.h2d(v_pad, self.dtype),
                 D.h2d(s_pad, jnp.int32), q_dev, self._bounds,
@@ -1276,6 +1347,65 @@ class MeshDeviceStack(DeviceStack):
 
     # -- the tick ----------------------------------------------------------
 
+    def _compact_plan(self, quotas: np.ndarray):
+        """Shard-aware zone-pruned launch plan.  Every shard's active
+        blocks sit in its own contiguous run, so each shard compacts its
+        run LOCALLY and all shards pad to one shared bucketed count
+        ``amax`` — the compact pane stays shard-major, and ascending
+        (shard, local block) order IS ascending global block order, so
+        the draw stream fills it unchanged (no ``block_pad``).  The
+        cached index pair carries each shard's LOCAL scatter targets
+        (cell rows within its resident slice, ledger rows within its
+        ``K * B_local`` window; pads out-of-bounds -> drop), uploaded
+        sharded so the per-shard program never sees another shard's
+        indices."""
+        if not self.block_compaction:
+            return None
+        S, bl = self.n_shards, self.blocks_local
+        active = np.flatnonzero(quotas > 0)
+        s_of = active // bl
+        counts = np.bincount(s_of, minlength=S)
+        # Per-shard runs are short (B / S blocks), so the retrace-bounding
+        # bucket floor drops to 2 — at most log2(B_local) pane variants.
+        amax = _bucket(max(int(counts.max()), 1), floor=2)
+        if amax >= bl:
+            return None
+        import jax.numpy as jnp
+        from jax.sharding import PartitionSpec
+
+        from . import distributed as D
+
+        vec = PartitionSpec(D.cell_axis(self.mesh))
+        K = len(self.stores)
+        ext = np.full((S, amax), -1, dtype=np.int64)
+        q_c = np.zeros(S * amax, dtype=np.int64)
+        for s in range(S):
+            la = active[s_of == s]
+            ext[s, :la.size] = la - s * bl
+            q_c[s * amax:s * amax + la.size] = quotas[la]
+        ck = active.tobytes()
+        pair = self._active_cache.get(ck)
+        if pair is None:
+            base, off = [], 0
+            for g in self.n_groups_list:
+                base.append(off + np.arange(g) * bl)
+                off += g * bl
+            base = np.concatenate(base)  # per-(key, group) local row base
+            lb = ext[:, None, :]
+            cell_idx = np.where(lb < 0, self.cells_local,
+                                base[None, :, None] + lb).reshape(-1)
+            ns_idx = np.where(lb < 0, K * bl,
+                              (np.arange(K) * bl)[None, :, None] + lb
+                              ).reshape(-1)
+            if len(self._active_cache) >= 32:
+                self._active_cache.clear()
+            pair = (D.mesh_h2d(self.mesh, cell_idx.astype(np.int32),
+                               vec, jnp.int32),
+                    D.mesh_h2d(self.mesh, ns_idx.astype(np.int32),
+                               vec, jnp.int32))
+            self._active_cache[ck] = pair
+        return q_c, active, pair
+
     def tick(self, params: IslaParams, mode: str = "calibrated",
              geometry=None, values: Optional[np.ndarray] = None,
              seg: Optional[np.ndarray] = None,
@@ -1318,9 +1448,6 @@ class MeshDeviceStack(DeviceStack):
                              f"{quotas.shape}")
         self._check_fp32_headroom(quotas)
         S, bl = self.n_shards, self.blocks_local
-        q_pad = np.zeros(S * bl, dtype=np.float64)
-        q_pad[:self.n_blocks] = quotas
-        q_dev = D.mesh_h2d(self.mesh, q_pad, vec, self.dtype)
         if dense is not None:
             key_gids, key_valids = dense
             if self._uniform:
@@ -1330,10 +1457,24 @@ class MeshDeviceStack(DeviceStack):
             else:
                 pane_vals = values / self._ref_scale
                 key_affine = self._key_affine
-            v2d, pad, vmask = _dense_panes(pane_vals, quotas)
+            # Zone-pruned plans compact to each shard's active run; the
+            # compact pane is already shard-major (S * amax rows), so it
+            # uploads as-is and block_pad degenerates to identity.
+            cp = self._compact_plan(quotas)
+            if cp is not None:
+                pane_quotas, _, active_cells = cp
+            else:
+                pane_quotas, active_cells = quotas, None
+            v2d, pad, vmask = _dense_panes(pane_vals, pane_quotas)
+            pane_rows = (S * bl) if active_cells is None else v2d.shape[0]
+            q_pad = np.zeros(pane_rows, dtype=np.float64)
+            q_pad[:pane_quotas.size] = pane_quotas
+            q_dev = D.mesh_h2d(self.mesh, q_pad, vec, self.dtype)
 
             def block_pad(a):
-                out = np.zeros((S * bl, a.shape[1]), dtype=a.dtype)
+                if a.shape[0] == pane_rows:
+                    return a
+                out = np.zeros((pane_rows, a.shape[1]), dtype=a.dtype)
                 out[:a.shape[0]] = a
                 return out
 
@@ -1367,15 +1508,19 @@ class MeshDeviceStack(DeviceStack):
             fn = D.mesh_tick_dense_fn(
                 self.mesh, params, mode, geometry, self.n_groups_list,
                 tuple(gid_slots), tuple(valid_slots), key_affine,
-                self._bound_slots, len(gid_panes), len(valid_panes))
-            out = fn(*self._state,
-                     D.mesh_h2d(self.mesh, block_pad(v2d), row,
-                                self.dtype),
-                     D.mesh_h2d(self.mesh, block_pad(pad), row,
-                                self.dtype),
-                     q_dev, tuple(gid_panes), tuple(valid_panes),
-                     self._bound_rows, self._sketch0_cells(),
-                     self._sizes, self._inv_scale)
+                self._bound_slots, len(gid_panes), len(valid_panes),
+                compacted=active_cells is not None)
+            args = (*self._state,
+                    D.mesh_h2d(self.mesh, block_pad(v2d), row,
+                               self.dtype),
+                    D.mesh_h2d(self.mesh, block_pad(pad), row,
+                               self.dtype),
+                    q_dev, tuple(gid_panes), tuple(valid_panes),
+                    self._bound_rows, self._sketch0_cells(),
+                    self._sizes, self._inv_scale)
+            if active_cells is not None:
+                args = args + (active_cells,)
+            out = fn(*args)
         else:
             seg = np.asarray(seg, dtype=np.int32).reshape(-1)
             if values.shape != seg.shape:
@@ -1388,6 +1533,9 @@ class MeshDeviceStack(DeviceStack):
             # retags it onto its local drop row.
             s_pad = np.full(bucket, self.n_cells_mesh, dtype=np.int32)
             s_pad[:m] = seg
+            q_pad = np.zeros(S * bl, dtype=np.float64)
+            q_pad[:self.n_blocks] = quotas
+            q_dev = D.mesh_h2d(self.mesh, q_pad, vec, self.dtype)
             fn = D.mesh_tick_fn(self.mesh, params, mode, geometry,
                                 self.n_groups_list, not self._uniform)
             out = fn(*self._state,

@@ -72,6 +72,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from typing import Callable, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -86,7 +87,8 @@ from .preestimation import (required_sample_size, run_pilot, sampling_rate,
                             z_score)
 from .summarize import summarize
 from .types import (AggregateResult, Anchor, BlockResultsBatch, Boundaries,
-                    IslaParams, Predicate, StoreKey)
+                    IslaParams, Predicate, StoreKey, ZoneMap, ZONE_EMPTY,
+                    ZONE_FULL, ZONE_PARTIAL)
 
 AGGREGATES = ("AVG", "SUM", "COUNT", "VAR")
 # Aggregates answered exactly from catalog metadata — they never constrain
@@ -96,8 +98,27 @@ EXACT_AGGREGATES = ("COUNT",)
 ROUTES = ("host", "device", "mesh")
 
 # Predicate-aware planning floors the estimated selectivity so a predicate
-# the pilot barely matched cannot demand a quasi-full scan on its own.
+# the pilot barely matched cannot demand a quasi-full scan on its own:
+# Eq. 1 inflates the shared rate by 1/selectivity (only matching samples
+# count toward any query's m), so selectivity -> 0 would push the rate to
+# a full read of every block.  The floor caps that inflation at 100x —
+# queries whose TRUE selectivity is below it draw fewer matching samples
+# than their (e, beta) demands and degrade to a best-effort bound.  Zone
+# maps move the floor to the right denominator: with per-block bounds the
+# planner divides by the selectivity *within the residual (undecided)
+# blocks only* — provably-empty mass is skipped outright and provably-full
+# mass needs no inflation — so a block-clustered predicate stops hitting
+# the floor at all.  When even the zone-bounded selectivity falls below
+# the floor, the plan emits ``PlannedSelectivityFloorWarning`` instead of
+# degrading silently.
 MIN_PLANNED_SELECTIVITY = 0.01
+
+
+class PlannedSelectivityFloorWarning(UserWarning):
+    """A query's (zone-bounded) planned selectivity fell below
+    ``MIN_PLANNED_SELECTIVITY``: the shared rate was capped at the floor's
+    100x inflation, so the answer may not earn its requested (e, beta)
+    and will report a best-effort bound."""
 
 # Rows are dicts of equal-length columns; bare arrays mean "measure only".
 RowSampler = Callable[[int, np.random.Generator],
@@ -221,16 +242,27 @@ class KeyedPass:
 @dataclasses.dataclass
 class ModeGroup:
     """One planned shared pass: the queries that resolved to one Phase 2
-    mode, and the rate their strictest (predicate-aware) demand set."""
+    mode, and the rate their strictest (predicate-aware) demand set.
+
+    ``block_rates`` is the zone-map pruned plan: a per-block rate vector
+    (elementwise max over the group's queries) where a block every query
+    provably filters out is rated exactly 0 — no draw, no RNG consumption,
+    a deterministic-zero contribution.  ``None`` (no zone map, or zones
+    proved nothing) keeps the scalar ``rate`` plan bit-identically."""
 
     mode: str
     geometry: Optional[tuple]
     rate: float
     query_ids: list
+    block_rates: Optional[np.ndarray] = None
 
     def describe(self) -> str:
+        pruned = ""
+        if self.block_rates is not None:
+            pruned = (f" pruned_blocks="
+                      f"{int(np.sum(self.block_rates <= 0.0))}")
         return (f"mode={self.mode} rate={self.rate:.3g} "
-                f"queries={self.query_ids}")
+                f"queries={self.query_ids}{pruned}")
 
 
 @dataclasses.dataclass
@@ -281,6 +313,11 @@ class MultiQueryExecutor:
     (bare-array samplers are treated as measure-only rows).
     ``group_domains`` maps each legal ``group_by`` key to its cardinality —
     catalog metadata, exactly like block sizes.
+    ``zone_map`` (a ``types.ZoneMap``) enables zone-map block pruning:
+    blocks a predicate provably filters out are planned at rate 0 (never
+    drawn — a deterministic-zero contribution), provably-full blocks skip
+    the mask evaluation, and the Eq. 1 selectivity inflation is bounded
+    over only the residual mass (``zone_selectivity``).
     """
 
     def __init__(self, block_samplers: Sequence[RowSampler],
@@ -290,7 +327,8 @@ class MultiQueryExecutor:
                  group_domains: Optional[Mapping[str, int]] = None,
                  refine_anchors: bool = True,
                  anchor_min_support: int = 64,
-                 mesh=None):
+                 mesh=None,
+                 zone_map: Optional[ZoneMap] = None):
         if len(block_samplers) != len(block_sizes):
             raise ValueError("one sampler per block required")
         self.block_samplers = list(block_samplers)
@@ -310,6 +348,16 @@ class MultiQueryExecutor:
         # with thin matching pilot support fall back to the global anchor.
         self.refine_anchors = bool(refine_anchors)
         self.anchor_min_support = int(anchor_min_support)
+        # Zone-map pruning: per-block column bounds let the planner PROVE
+        # which blocks a predicate filters out (rate them exactly 0) or
+        # keeps whole (no mask evaluation), and bound the selectivity over
+        # only the residual mass.  None disables pruning — every plan is
+        # then the classic scalar-rate plan, bit-identically.
+        if zone_map is not None and zone_map.n_blocks != len(block_sizes):
+            raise ValueError(
+                f"zone map covers {zone_map.n_blocks} blocks, executor "
+                f"has {len(block_sizes)}")
+        self.zone_map = zone_map
         # Incremental serving state: persistent per-key moment stores plus
         # the pilot anchor (boundaries / sketch0 / shift are frozen on the
         # first incremental run — merged moments cannot be re-classified).
@@ -519,7 +567,7 @@ class MultiQueryExecutor:
                 if store.shift not in shifted:
                     shifted[store.shift] = raw + store.shift
                 values = shifted[store.shift]
-                mask = where.mask(columns) if where is not None else None
+                mask = self._zone_mask(where, columns, block_ids)
                 gids = (self._group_ids(group_by, columns)[0]
                         if group_by is not None else None)
                 store.ingest(values, block_ids, chunk.chunk_quotas,
@@ -552,6 +600,42 @@ class MultiQueryExecutor:
             block_ids = np.repeat(np.asarray(chunk.idx, dtype=np.intp),
                                   [int(quotas[j]) for j in chunk.idx])
             yield chunk, columns, block_ids
+
+    def _zone_mask(self, where: Optional[Predicate],
+                   columns: Mapping[str, np.ndarray],
+                   block_ids: np.ndarray) -> Optional[np.ndarray]:
+        """Predicate match mask with zone short-cuts: rows of provably-full
+        blocks are True and rows of provably-empty blocks are False WITHOUT
+        evaluating the predicate; only residual-block rows pay the
+        comparison.  Bit-identical to ``where.mask`` — the zone verdicts
+        are proofs over exact data bounds, never estimates."""
+        if where is None:
+            return None
+        if self.zone_map is None:
+            return where.mask(columns)
+        status = self.zone_map.status(where)
+        if where.column not in columns:
+            where.mask(columns)  # raise the standard KeyError
+        st = status[np.asarray(block_ids, dtype=np.intp)]
+        out = np.empty(st.shape, dtype=bool)
+        out[st == ZONE_FULL] = True
+        out[st == ZONE_EMPTY] = False
+        part = st == ZONE_PARTIAL
+        if np.any(part):
+            col = np.asarray(columns[where.column])
+            out[part] = where.mask({where.column: col[part]})
+        return out
+
+    def _target_quotas(self, mg: ModeGroup,
+                       deadline_samples: Optional[int]) -> np.ndarray:
+        """A mode-group's per-block sample targets: the zone-pruned
+        ``block_rates`` plan when present (provably-empty blocks get
+        quota 0 — never drawn, no RNG consumed), the scalar ``rate``
+        otherwise."""
+        rate = mg.block_rates if mg.block_rates is not None else mg.rate
+        return np.asarray(
+            block_quotas(self.block_sizes, rate, deadline_samples),
+            dtype=np.int64)
 
     def _group_ids(self, key: str, columns: Mapping[str, np.ndarray]
                    ) -> Tuple[np.ndarray, int]:
@@ -649,20 +733,162 @@ class MultiQueryExecutor:
         boundary half keeps the S/L regions populated so the bound is
         actually earned at that smaller m).
         """
+        base, card = self._query_base_rate(q, sigma, pilot_columns, anchor)
+        factor = card
+        if q.where is not None:
+            sel = self.selectivity(q.where, pilot_columns)
+            if sel is not None:
+                if (sel < MIN_PLANNED_SELECTIVITY
+                        and self._zone_masses(q.where) is None):
+                    # With a helpful zone map the scalar rate is
+                    # provenance only — the pruned plan warns (or not)
+                    # from its own zone-bounded selectivity.
+                    self._warn_floor(q.where, sel)
+                factor /= max(sel, MIN_PLANNED_SELECTIVITY)
+        return min(1.0, base * factor)
+
+    def _query_base_rate(self, q: IslaQuery, sigma: float,
+                         pilot_columns: Mapping[str, np.ndarray],
+                         anchor: Optional[Anchor]) -> Tuple[float, float]:
+        """The selectivity-free half of the Eq. 1 demand: the (group-wise
+        max) base rate and the group-cardinality factor."""
         if anchor is not None and anchor.source == "refined":
             sigma = anchor.planning_sigma(q.beta)
         base = sampling_rate(q.e, sigma, q.beta, self.data_size)
-        factor = 1.0
+        card = 1.0
         if q.group_by is not None:
             for sg in self.group_sigmas(q, pilot_columns):
                 base = max(base,
                            sampling_rate(q.e, sg, q.beta, self.data_size))
-            factor *= float(self.group_domains[q.group_by])
-        if q.where is not None:
-            sel = self.selectivity(q.where, pilot_columns)
-            if sel is not None:
-                factor /= max(sel, MIN_PLANNED_SELECTIVITY)
-        return min(1.0, base * factor)
+            card = float(self.group_domains[q.group_by])
+        return base, card
+
+    @staticmethod
+    def _warn_floor(where: Predicate, sel: float) -> None:
+        warnings.warn(
+            f"planned selectivity {sel:.3g} for where[{where.describe()}] "
+            f"is below MIN_PLANNED_SELECTIVITY={MIN_PLANNED_SELECTIVITY}: "
+            f"the rate inflation is capped, so the answer may miss its "
+            f"(e, beta) and degrade to a best-effort bound",
+            PlannedSelectivityFloorWarning, stacklevel=4)
+
+    def zone_selectivity(self, where: Predicate,
+                         pilot_columns: Mapping[str, np.ndarray]
+                         ) -> Optional[float]:
+        """Zone-bounded selectivity: the predicate's estimated matching
+        fraction over the ACTIVE (non-provably-empty) mass only, with the
+        provably-full mass counted exactly.
+
+        This is the pruned plan's replacement for the pilot-only
+        ``selectivity()``: empty blocks contribute neither matches nor
+        draws (they leave both numerator and denominator), and full
+        blocks contribute their exact sizes to both — only the residual
+        blocks still lean on the pilot estimate, clipped into the
+        ``[0, resid_mass]`` range the zone bounds allow.  Returns
+        ``None`` when no zone map is attached or the zones prove nothing.
+        """
+        zp = self._zone_masses(where)
+        if zp is None:
+            return None
+        full_mass, resid_mass, active_mass = zp
+        if active_mass <= 0.0:
+            return 0.0
+        sel_pilot = self.selectivity(where, pilot_columns)
+        if sel_pilot is None:
+            matched = float(active_mass)  # no pilot: no inflation either
+        else:
+            matched_resid = np.clip(
+                sel_pilot * self.data_size - full_mass, 0.0, resid_mass)
+            matched = full_mass + float(matched_resid)
+        return matched / active_mass
+
+    def _zone_masses(self, where: Optional[Predicate]
+                     ) -> Optional[Tuple[float, float, float]]:
+        """(full_mass, resid_mass, active_mass) under the zone map, or
+        None when pruning cannot help this predicate."""
+        if self.zone_map is None or where is None:
+            return None
+        status = self.zone_map.status(where)
+        if not np.any(status != ZONE_PARTIAL):
+            return None  # zones prove nothing: keep the scalar plan
+        sizes = np.asarray(self.block_sizes, dtype=np.float64)
+        full_mass = float(sizes[status == ZONE_FULL].sum())
+        resid_mass = float(sizes[status == ZONE_PARTIAL].sum())
+        return full_mass, resid_mass, full_mass + resid_mass
+
+    def _query_block_rates(self, q: IslaQuery, sigma: float,
+                           pilot_columns: Mapping[str, np.ndarray],
+                           anchor: Optional[Anchor]
+                           ) -> Optional[np.ndarray]:
+        """Zone-map pruned per-block Eq. 1 rates for one query.
+
+        The query needs ``m = base * card * data_size`` MATCHING samples;
+        uniform row sampling at rate r samples matching rows at that same
+        rate r, so the pruned plan is a single rate over the active
+        (full + residual) blocks —
+
+            rho = base * card * data_size
+                  / max(matching_mass, floor * active_mass)
+
+        with ``matching_mass`` the zone-bounded matching estimate
+        (``zone_selectivity`` times the active mass) — and exactly 0 on
+        every provably-empty block.  With no zone map (or unhelpful
+        zones) this degenerates to the scalar plan: active mass =
+        data_size and matching mass = sel * data_size recover the classic
+        ``base * card / max(sel, floor)``.  Returns None to keep that
+        scalar plan.
+        """
+        zp = self._zone_masses(q.where)
+        if zp is None:
+            return None
+        full_mass, resid_mass, active_mass = zp
+        status = self.zone_map.status(q.where)
+        rates = np.zeros(len(self.block_sizes), dtype=np.float64)
+        if active_mass <= 0.0:
+            return rates  # every block provably empty: deterministic zero
+        base, card = self._query_base_rate(q, sigma, pilot_columns, anchor)
+        sel_zone = self.zone_selectivity(q.where, pilot_columns)
+        if sel_zone < MIN_PLANNED_SELECTIVITY:
+            self._warn_floor(q.where, sel_zone)
+        rho = (base * card * self.data_size
+               / (max(sel_zone, MIN_PLANNED_SELECTIVITY) * active_mass))
+        rates[status != ZONE_EMPTY] = min(1.0, rho)
+        return rates
+
+    def _group_block_rates(self, queries: Sequence[IslaQuery],
+                           sigma: float,
+                           pilot_columns: Mapping[str, np.ndarray],
+                           anchors: Optional[dict]
+                           ) -> Optional[np.ndarray]:
+        """One mode-group's pruned plan: the elementwise max (union of
+        demands) of its queries' per-block rates.  Queries the zones
+        cannot help contribute their scalar rate on EVERY block, so a
+        block is rated 0 only when every query of the group provably
+        filters it out.  None when no query benefits — the scalar plan
+        stays authoritative (and bit-identical to the pre-zone planner).
+        """
+        if self.zone_map is None:
+            return None
+        sampled = self.sampled_queries(queries)
+        if not sampled:
+            return None
+        anchors = anchors or {}
+        per_block = np.zeros(len(self.block_sizes), dtype=np.float64)
+        scalar = 0.0
+        any_zone = False
+        for q in sampled:
+            anchor = anchors.get(_pass_key(q))
+            br = self._query_block_rates(q, sigma, pilot_columns, anchor)
+            if br is None:
+                scalar = max(scalar, self._query_rate(q, sigma,
+                                                      pilot_columns,
+                                                      anchor=anchor))
+            else:
+                any_zone = True
+                per_block = np.maximum(per_block, br)
+        if not any_zone:
+            return None
+        return np.minimum(np.maximum(per_block, scalar), 1.0)
 
     def plan_rate(self, queries: Sequence[IslaQuery], sigma: float,
                   pilot_columns: Optional[Mapping[str, np.ndarray]] = None,
@@ -846,12 +1072,16 @@ class MultiQueryExecutor:
 
         mode_groups = []
         for (resolved, _), (geometry, ids) in buckets.items():
+            qs = [queries[i] for i in ids]
             rate = (rate_override if rate_override is not None
-                    else self.plan_rate([queries[i] for i in ids],
-                                        pilot.sigma, pilot_columns,
+                    else self.plan_rate(qs, pilot.sigma, pilot_columns,
                                         anchors=anchors))
+            block_rates = (None if rate_override is not None
+                           else self._group_block_rates(
+                               qs, pilot.sigma, pilot_columns, anchors))
             mode_groups.append(ModeGroup(mode=resolved, geometry=geometry,
-                                         rate=rate, query_ids=ids))
+                                         rate=rate, query_ids=ids,
+                                         block_rates=block_rates))
         return QueryPlan(queries=list(queries), pilot=pilot,
                          pilot_columns=pilot_columns, boundaries=boundaries,
                          shifted_sketch0=shifted_sketch0,
@@ -1204,7 +1434,8 @@ class MultiQueryExecutor:
                         key_valids.append(None)
                     else:
                         if where not in mask_cache:
-                            mask_cache[where] = where.mask(columns)
+                            mask_cache[where] = self._zone_mask(
+                                where, columns, block_ids)
                         key_valids.append(mask_cache[where])
                     if group_by is None:
                         key_gids.append(None)
@@ -1228,7 +1459,7 @@ class MultiQueryExecutor:
                 if fkey not in shifted:
                     shifted[fkey] = (raw + dst.shift) / dst.scale
                 values = shifted[fkey]
-                mask = where.mask(columns) if where is not None else None
+                mask = self._zone_mask(where, columns, block_ids)
                 gids = (self._group_ids(group_by, columns)[0]
                         if group_by is not None else None)
                 # key_seg is the stack's cell-placement contract: a
@@ -1502,9 +1733,7 @@ class MultiQueryExecutor:
         every store is already ahead of every quota), optionally scaled
         down to ``budget_alloc`` new samples.
         """
-        target = np.asarray(
-            block_quotas(self.block_sizes, mg.rate, deadline_samples),
-            dtype=np.int64)
+        target = self._target_quotas(mg, deadline_samples)
         group_stores, key_aggs = prebuilt
         # Device-resident serving: persistent stores on route="device"
         # (one device) or "mesh" (cell axis sharded over every device)
@@ -1583,9 +1812,7 @@ class MultiQueryExecutor:
             return {}
         deficits, n_now, sigmas = [], [], []
         for mg, (group_stores, _) in zip(plan.mode_groups, mg_stores):
-            target = np.asarray(
-                block_quotas(self.block_sizes, mg.rate, deadline_samples),
-                dtype=np.int64)
+            target = self._target_quotas(mg, deadline_samples)
             union = np.zeros(len(self.block_sizes), dtype=np.int64)
             lo_n, hi_sig = None, float("nan")
             for key, st in group_stores.items():
@@ -1628,9 +1855,7 @@ class MultiQueryExecutor:
             len(self.block_sizes), plan.boundaries, plan.shifted_sketch0,
             shift=plan.pilot.shift,
             has_totals=any(q.agg == "VAR" for q in queries))
-        quotas = np.asarray(
-            block_quotas(self.block_sizes, mg.rate, deadline_samples),
-            dtype=np.int64)
+        quotas = self._target_quotas(mg, deadline_samples)
         self._draw_and_ingest({(None, None): store}, quotas, rng)
         return self._base_stats(plan, mg, store, route)
 

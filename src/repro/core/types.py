@@ -160,6 +160,163 @@ class Predicate:
             parts.append(f"{self.column} == {self.eq:g}")
         return " AND ".join(parts) if parts else "TRUE"
 
+    def interval_status(self, lo, hi, count=None) -> np.ndarray:
+        """Zone-map interval evaluation: decide per block whether this
+        predicate *provably* matches none / all / some of the block's rows,
+        given only the block's inclusive column bounds ``[lo, hi]``.
+
+        The three-way verdict is what makes pruning sound: ``ZONE_EMPTY``
+        and ``ZONE_FULL`` are proofs (the planner may skip the draw or the
+        mask), while ``ZONE_PARTIAL`` only means "cannot decide from
+        bounds" and falls back to the sampled-and-masked path.
+
+        Parameters
+        ----------
+        lo, hi : array_like
+            Inclusive per-block min / max of this predicate's column.
+        count : array_like, optional
+            Per-block row counts; blocks with ``count == 0`` are
+            ``ZONE_EMPTY`` regardless of bounds.
+
+        Returns
+        -------
+        numpy.ndarray of int8
+            One of ``ZONE_EMPTY`` / ``ZONE_PARTIAL`` / ``ZONE_FULL`` per
+            block.
+
+        Examples
+        --------
+        >>> p = Predicate(column="day", eq=2.0)
+        >>> p.interval_status([0., 2., 1.], [1., 2., 3.]).tolist()
+        [0, 2, 1]
+        """
+        lo = np.asarray(lo, dtype=np.float64)
+        hi = np.asarray(hi, dtype=np.float64)
+        empty = np.zeros(lo.shape, dtype=bool)
+        full = np.ones(lo.shape, dtype=bool)
+        if self.eq is not None:
+            empty |= (self.eq < lo) | (self.eq > hi)
+            full &= (lo == self.eq) & (hi == self.eq)
+        if self.lo is not None:
+            empty |= hi < self.lo
+            full &= lo >= self.lo
+        if self.hi is not None:
+            empty |= lo >= self.hi
+            full &= hi < self.hi
+        if count is not None:
+            empty |= np.asarray(count) == 0
+        out = np.full(lo.shape, ZONE_PARTIAL, dtype=np.int8)
+        out[full] = ZONE_FULL
+        out[empty] = ZONE_EMPTY  # empty wins (e.g. count == 0)
+        return out
+
+
+# Zone-map verdicts (per block, per predicate) — see
+# ``Predicate.interval_status`` and ``ZoneMap.status``.
+ZONE_EMPTY = 0    # the predicate provably matches NO row of the block
+ZONE_PARTIAL = 1  # bounds cannot decide; sample and mask as before
+ZONE_FULL = 2     # the predicate provably matches EVERY row of the block
+
+
+class ZoneMap:
+    """Per-block summary statistics for predicate pruning.
+
+    A zone map keeps, for every block, the inclusive ``[lo, hi]`` value
+    bounds of each tracked column, the block's row count, and the measure
+    column's streaming moments (count, sum, sum of squares).  From those
+    bounds alone the planner can *prove* which blocks a ``Predicate``
+    filters out entirely (``ZONE_EMPTY``) or keeps entirely
+    (``ZONE_FULL``) — the remaining ``ZONE_PARTIAL`` blocks are the only
+    ones that still need sampled-and-masked treatment.  The statistics are
+    exact properties of the data, so the resulting prune is exact too: the
+    skipped mass contributes a deterministic zero, not an estimate.
+
+    The map is refreshed on ingest (``refresh`` folds a block's new rows
+    into its bounds; bounds only widen) and versioned, so cached
+    per-predicate verdicts invalidate automatically.
+
+    Examples
+    --------
+    >>> zm = ZoneMap.from_tables(
+    ...     [{"value": np.array([1., 2.]), "day": np.array([0., 0.])},
+    ...      {"value": np.array([3., 4.]), "day": np.array([1., 1.])}])
+    >>> zm.status(Predicate(column="day", eq=1.0)).tolist()
+    [0, 2]
+    """
+
+    def __init__(self, n_blocks: int, measure: str = "value"):
+        self.n_blocks = int(n_blocks)
+        self.measure = measure
+        self.counts = np.zeros(self.n_blocks, dtype=np.int64)
+        # column -> (lo, hi) inclusive bounds; empty blocks hold +/-inf so
+        # any refresh widens them correctly.
+        self.columns: dict = {}
+        # measure moments per block: (count, sum, sumsq)
+        self.moments = np.zeros((self.n_blocks, 3), dtype=np.float64)
+        self.version = 0
+        self._status_cache: dict = {}
+
+    @staticmethod
+    def from_tables(tables, measure: str = "value") -> "ZoneMap":
+        """Build a zone map from per-block column dicts (the same tables
+        ``multiquery.table_sampler`` wraps)."""
+        zm = ZoneMap(len(tables), measure=measure)
+        for b, table in enumerate(tables):
+            zm.refresh(b, table)
+        return zm
+
+    def _ensure_column(self, name: str) -> None:
+        if name not in self.columns:
+            self.columns[name] = (
+                np.full(self.n_blocks, np.inf, dtype=np.float64),
+                np.full(self.n_blocks, -np.inf, dtype=np.float64))
+
+    def refresh(self, block_id: int, columns: Mapping[str, np.ndarray]
+                ) -> None:
+        """Fold a block's (new) rows into its zones — bounds only widen,
+        so refreshing with an append-only delta is exact."""
+        b = int(block_id)
+        n = 0
+        for name, col in columns.items():
+            col = np.asarray(col, dtype=np.float64)
+            n = max(n, col.size)
+            if col.size == 0:
+                continue
+            self._ensure_column(name)
+            lo, hi = self.columns[name]
+            lo[b] = min(lo[b], float(col.min()))
+            hi[b] = max(hi[b], float(col.max()))
+            if name == self.measure:
+                self.moments[b, 0] += col.size
+                self.moments[b, 1] += float(col.sum())
+                self.moments[b, 2] += float((col * col).sum())
+        self.counts[b] += n
+        self.version += 1
+        self._status_cache.clear()
+
+    def status(self, predicate: Optional[Predicate]) -> np.ndarray:
+        """Per-block ``ZONE_*`` verdicts for ``predicate``.
+
+        ``None`` (no WHERE) is all-``ZONE_FULL``; a predicate over a
+        column the map does not track is all-``ZONE_PARTIAL`` (no proof
+        available, so no pruning — never unsound).  Verdicts are cached
+        per (predicate, version).
+        """
+        if predicate is None:
+            return np.full(self.n_blocks, ZONE_FULL, dtype=np.int8)
+        key = (predicate, self.version)
+        hit = self._status_cache.get(key)
+        if hit is not None:
+            return hit
+        if predicate.column not in self.columns:
+            out = np.full(self.n_blocks, ZONE_PARTIAL, dtype=np.int8)
+        else:
+            lo, hi = self.columns[predicate.column]
+            out = predicate.interval_status(lo, hi, count=self.counts)
+        out.setflags(write=False)
+        self._status_cache[key] = out
+        return out
+
 
 @dataclasses.dataclass(frozen=True)
 class StoreKey:

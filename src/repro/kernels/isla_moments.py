@@ -263,7 +263,8 @@ def isla_fused_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
                       params, mode: str = "calibrated", geometry=None,
                       tm: int = DEFAULT_TM, stride: int = 1,
                       interpret: bool = False,
-                      inv_scale: jnp.ndarray = None):
+                      inv_scale: jnp.ndarray = None,
+                      active_cells: jnp.ndarray = None):
     """Fused Phase 1 + Phase 2: one launch from samples to answers.
 
     Chains the batched Pallas moment accumulation (seeded from the
@@ -282,15 +283,30 @@ def isla_fused_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
     ISLA-E ``b0``) is divided into that cell's normalized frame, exactly
     as in ``distributed.fused_tick``.
 
+    ``active_cells`` is the zone-pruned compacted launch: an (n_active,)
+    int32 vector of resident cell ids (pads out-of-bounds), with
+    ``values3d`` covering ONLY those cells.  The kernel grid runs over
+    the compact axis — seeded from the gathered prior rows — and the
+    merged rows scatter back (``mode="drop"``); pruned cells' rows are
+    never addressed, so they stay warm, while Phase 2 still solves the
+    FULL cell axis.  Pad rows must honor the in-N padding contract.
+
     Returns ``(moments, partials)``: the merged (n_cells, 2, 4) state —
     feed it back as the next round's ``prior`` — and the (n_cells,)
     Phase 2 partial answers.
     """
     from repro.core.distributed import _scaled_solve_args, phase2
 
-    mom = isla_moments_batched_pallas(values3d, bounds, tm=tm,
-                                      stride=stride, interpret=interpret,
-                                      prior=prior)
+    if active_cells is None:
+        mom = isla_moments_batched_pallas(values3d, bounds, tm=tm,
+                                          stride=stride,
+                                          interpret=interpret, prior=prior)
+    else:
+        b = bounds if bounds.ndim == 1 else bounds[active_cells]
+        mom_c = isla_moments_batched_pallas(
+            values3d, b, tm=tm, stride=stride, interpret=interpret,
+            prior=prior[active_cells])
+        mom = prior.at[active_cells].set(mom_c, mode="drop")
     if geometry is not None:
         geometry = (jnp.float32(geometry[0]), jnp.float32(geometry[1]))
     thr, geometry = _scaled_solve_args(params, geometry, inv_scale)

@@ -208,30 +208,46 @@ class IslaAdmissionLoop:
 
 
 def _synthetic_grouped_blocks(n_blocks: int, n_groups: int, rows: int,
-                              seed: int):
+                              seed: int, with_tables: bool = False):
     """In-memory relational blocks: a measure, an integer GROUP BY key with
-    group-dependent means, and a binary predicate column."""
+    group-dependent means, a binary row-level predicate column, and a
+    block-clustered ``day`` column (each ingest day spans two blocks) —
+    the shape zone maps prune.  ``with_tables=True`` additionally returns
+    the raw column tables so the caller can build a ``ZoneMap``."""
     from repro.core.multiquery import table_sampler
 
     rng = np.random.default_rng(seed)
-    samplers = []
-    for _ in range(n_blocks):
+    n_days = max(n_blocks // 2, 1)
+    samplers, tables = [], []
+    for b in range(n_blocks):
         g = rng.integers(0, n_groups, size=rows)
-        samplers.append(table_sampler({
+        t = {
             "value": rng.normal(80.0 + 5.0 * g, 10.0),
             "region": g.astype(np.float64),
             "flag": rng.integers(0, 2, size=rows).astype(np.float64),
-        }))
+            "day": np.full(rows, float(b % n_days)),
+        }
+        tables.append(t)
+        samplers.append(table_sampler(t))
+    if with_tables:
+        return samplers, tables
     return samplers
 
 
-def _random_query(rng: np.random.Generator, e: float):
+def _random_query(rng: np.random.Generator, e: float,
+                  n_days: Optional[int] = None):
     from repro.core import IslaQuery, Predicate
 
     agg = ("AVG", "SUM", "COUNT", "VAR")[int(rng.integers(0, 4))]
     where = None
     if rng.random() < 0.5:
-        where = Predicate(column="flag", eq=1.0)
+        # Half the predicated queries are day-selective: the WHERE the
+        # zone map proves empty on every other-day block.
+        if n_days and rng.random() < 0.5:
+            where = Predicate(column="day",
+                              eq=float(rng.integers(0, n_days)))
+        else:
+            where = Predicate(column="flag", eq=1.0)
     group_by = "region" if rng.random() < 0.5 else None
     mode = ("calibrated", "faithful_cf", None)[int(rng.integers(0, 3))]
     return IslaQuery(e=e, beta=0.95, agg=agg, where=where,
@@ -268,23 +284,32 @@ def serve_isla(args) -> None:
     qpt = 3 if args.smoke else args.queries_per_tick
     e = 1.0 if args.smoke else args.precision
 
-    samplers = _synthetic_grouped_blocks(n_blocks, n_groups, rows,
-                                         args.seed)
+    samplers, tables = _synthetic_grouped_blocks(n_blocks, n_groups, rows,
+                                                 args.seed,
+                                                 with_tables=True)
     sizes = [10 ** 7] * n_blocks
+    zone_map = None
+    if not args.no_zone_map:
+        from repro.core import ZoneMap
+        zone_map = ZoneMap.from_tables(tables, measure="value")
     ex = MultiQueryExecutor(samplers, sizes, params=IslaParams(e=e),
-                            group_domains={"region": n_groups})
+                            group_domains={"region": n_groups},
+                            zone_map=zone_map)
     loop = IslaAdmissionLoop(ex, np.random.default_rng(args.seed + 1),
                              mode="auto", route=args.route,
                              incremental=args.incremental,
                              deadline_samples=args.deadline_samples,
                              drift_check=args.drift_check,
                              budget_floor=args.budget_floor)
+    n_days = max(n_blocks // 2, 1)
     qrng = np.random.default_rng(args.seed + 2)
     t0 = time.perf_counter()
     total = 0
     for _ in range(ticks):
         for _ in range(qpt):
-            loop.submit(_random_query(qrng, e))
+            loop.submit(_random_query(qrng, e,
+                                      n_days=None if args.no_zone_map
+                                      else n_days))
         drawn_before = loop.samples_drawn
         done = loop.tick()
         total += len(done)
@@ -370,6 +395,12 @@ def main():
                     help="QoS floor within the --deadline-samples split: "
                          "every pass with a deficit gets at least this "
                          "many samples per tick")
+    ap.add_argument("--no-zone-map", action="store_true",
+                    help="disable zone-map block pruning: plan every "
+                         "WHERE over all blocks instead of rating "
+                         "provably-empty blocks at zero (the default "
+                         "builds a ZoneMap over the synthetic tables, "
+                         "so day-selective predicates skip most blocks)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes for CI smoke runs")
     args = ap.parse_args()

@@ -242,6 +242,10 @@ def isla_cell_specs(mesh: Mesh) -> Dict[str, P]:
       replicated (...)  sample streams / tags / small anchor tables —
                         every shard holds a copy
       stat_rows  (G, 9) psum'd group-stat rows — replicated output
+      active_cells (M,) zone-pruned compacted-launch scatter indices
+                        (each shard's LOCAL cell / ledger targets,
+                        shard-major, pads out-of-bounds) — sharded on
+                        the cell axis like the compact panes they route
 
     The axis name comes from the mesh itself so a caller-built mesh with
     a different first-axis name still shards correctly.
@@ -252,6 +256,7 @@ def isla_cell_specs(mesh: Mesh) -> Dict[str, P]:
         "cell_rows": P(ax, None),
         "replicated": P(),
         "stat_rows": P(None, None),
+        "active_cells": P(ax),
     }
 
 

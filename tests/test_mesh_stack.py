@@ -350,3 +350,43 @@ def test_mesh_per_key_reset_is_shard_aware():
     # ungrouped AVG/VAR stay consistent with the pre-drop converged run.
     for i in (0, 3):
         assert np.isclose(answers[i].value, pre[i].value, rtol=0.05)
+
+
+# ---------------------------------------------------------------------------
+# Zone-pruned compacted launch (block pruning through the mesh tier).
+# ---------------------------------------------------------------------------
+
+
+def test_mesh_pruned_compacted_tick_matches_device(rng):
+    """Zone-pruned quotas through the mesh tier: the shard-aware
+    compacted launch (each shard's local active-block run padded to the
+    shared width) reproduces the single-device FULL-AXIS launch, across
+    warm re-activation rounds that change the active set.  Uses its own
+    wider store — the module's B=10 under 8 shards leaves runs too short
+    for compaction to ever engage, which is exactly the fallback the
+    plan's size guard takes."""
+    B2 = 64  # divisible by 1/2/4/8 shards: every shard owns a real run
+    sizes = [1000 + 3 * i for i in range(B2)]
+
+    def mk():
+        return DeviceMomentStore.fresh_device(
+            B2, Boundaries(0.5, 2.0, 2.0, 8.0), sketch0=3.0,
+            block_sizes=sizes, n_groups=G)
+
+    a1, b1, a2, b2 = mk(), mk(), mk(), mk()
+    single = DeviceStack([a1, b1])
+    single.block_compaction = False  # uncompacted reference
+    msh = MeshDeviceStack([a2, b2], make_cell_mesh())
+    for active in ([3, B2 - 5], [3, B2 - 5], [7, 20, B2 - 5]):
+        quotas = np.zeros(B2, dtype=np.int64)
+        quotas[np.asarray(active)] = 24
+        n = int(quotas.sum())
+        vals = rng.lognormal(1.0, 0.7, size=n)
+        gids = rng.integers(0, G, size=n)
+        dense = ([gids, None], [None, None])
+        out_s = single.tick(PARAMS, values=vals, quotas=quotas,
+                            dense=dense)
+        out_m = msh.tick(PARAMS, values=vals, quotas=quotas, dense=dense)
+        _assert_stats_close(out_s, out_m)
+    assert msh._active_cache, "mesh compaction should have engaged"
+    assert not single._active_cache
