@@ -30,7 +30,7 @@ def _sectioned(module, sections):
 
 def main() -> None:
     from . import (device_bench, mesh_bench, multiquery_bench, online_bench,
-                   paper_tables, prune_bench, telemetry_bench)
+                   paper_tables, prune_bench, serve_bench, telemetry_bench)
 
     benches = [
         multiquery_bench.batched_vs_sequential_calculation,
@@ -57,6 +57,7 @@ def main() -> None:
         _sectioned(prune_bench,
                    ("sample_savings", "residual_parity", "transfer_audit",
                     "tick_speed")),
+        _sectioned(serve_bench, ("traffic_replay", "progressive_stream")),
     ]
     print("name,us_per_call,derived")
     failures = 0

@@ -1,0 +1,349 @@
+"""Multi-tenant traffic-replay benchmark for the ISLA admission tier.
+
+Replays a skewed mixed-tenant query stream (>= 4:1 queries per StoreKey;
+1000 queries/tick at full size) through two `IslaAdmissionLoop`s over
+identical warm stores:
+
+ * **admission** — the production pipeline: PlanCache'd steady-state
+   planning, exact same-tick dedupe, subsumption serving (a weaker
+   ``(e, beta)`` ask on a cached key draws ZERO new samples), and
+   priority-ordered admission;
+ * **fifo** — the uncached PR-7 baseline (``admission=False`` on a
+   ``plan_cache_size=0`` executor): every query plans and composes in
+   host Python every tick.
+
+Headlines (recorded in ``BENCH_serve.json``):
+ * **throughput** — steady-state queries/sec per route, p50/p99 tick
+   latency, and the admission/fifo speedup (must be >= 3x at full size);
+ * **plan-cache hit rate** — fraction of steady-phase plans served from
+   the PlanCache (must be >= 0.9);
+ * **subsumption audit** — every subsumed/deduped answer drew 0 new
+   samples and reports a bound no looser than asked;
+ * **answer parity** — every ticket's VALUE (and per-group values) is
+   bit-identical (host float64) between the two routes on the same RNG
+   stream, and the bound-earned flags agree ticket for ticket.
+
+Contract: rows print as ``(name, us_per_call, derived)``; ``--smoke``
+shrinks sizes for CI; ``--out DIR`` picks where BENCH_serve.json lands.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.engine import IslaQuery
+from repro.core.multiquery import MultiQueryExecutor, table_sampler
+from repro.core.types import IslaParams, Predicate
+from repro.launch.serve import IslaAdmissionLoop
+
+MU, SIGMA = 100.0, 12.0
+
+
+def _tenant_tables(n_blocks, rows, seed=0):
+    """Relational blocks: measure, binary flag, day-clustered ingest
+    column, integer region key — the serve tier's synthetic shape."""
+    rng = np.random.default_rng(seed)
+    n_days = max(n_blocks // 2, 1)
+    tables = []
+    for b in range(n_blocks):
+        g = rng.integers(0, 4, size=rows)
+        tables.append({
+            "value": rng.normal(MU + 3.0 * g, SIGMA, rows),
+            "region": g.astype(np.float64),
+            "flag": rng.integers(0, 2, size=rows).astype(np.float64),
+            "day": np.full(rows, float(b % n_days)),
+        })
+    return tables
+
+
+def _executor(tables, sizes, plan_cache_size=256):
+    return MultiQueryExecutor(
+        [table_sampler(t) for t in tables], sizes,
+        params=IslaParams(e=0.5), group_domains={"region": 4},
+        plan_cache_size=plan_cache_size)
+
+
+def _templates():
+    """The tenant workload's query pool.
+
+    ``warm``: strong demands whose answers EARN their bound and enter the
+    subsumption cache — steady-state repeats and weaker variants are
+    served with zero new samples.  ``execute``: VAR / grouped-SUM
+    demands whose bounds are honest ``None`` (never cacheable) — they
+    re-execute every tick, which is exactly the traffic the PlanCache
+    amortizes.  Priorities 4..1 pin the executed batch's admission
+    order."""
+    flag1 = Predicate(column="flag", eq=1.0)
+    day0 = Predicate(column="day", eq=0.0)
+    warm = [
+        IslaQuery(e=0.5, beta=0.95, agg="AVG"),
+        IslaQuery(e=0.5, beta=0.95, agg="AVG", where=flag1),
+        IslaQuery(e=0.5, beta=0.95, agg="AVG", where=day0),
+        IslaQuery(e=0.5, beta=0.95, agg="AVG", group_by="region"),
+        IslaQuery(e=0.5, beta=0.95, agg="COUNT"),
+        IslaQuery(e=0.5, beta=0.95, agg="COUNT", where=flag1),
+        IslaQuery(e=0.5, beta=0.95, agg="SUM"),
+    ]
+    execute = [
+        IslaQuery(e=0.5, beta=0.95, agg="VAR", priority=4.0),
+        IslaQuery(e=0.5, beta=0.95, agg="VAR", where=flag1, priority=3.0),
+        IslaQuery(e=0.5, beta=0.95, agg="SUM", group_by="region",
+                  priority=2.0),
+        IslaQuery(e=0.5, beta=0.95, agg="VAR", group_by="region",
+                  priority=1.0),
+    ]
+    # Weaker demands on the warm keys: dominated by the cached answers.
+    weak = [dataclasses.replace(q, e=q.e * 2, beta=0.90) for q in warm]
+    return warm, execute, weak
+
+
+def _storekeys(queries):
+    return {(q.where, q.group_by, q.mode) for q in queries}
+
+
+def _tick_traffic(rng, warm, execute, weak, qpt):
+    """One tick's submissions: the executed batch first (fixed order),
+    then a random mix of warm repeats (subsumed), weak variants
+    (subsumed), and exact duplicates of the executed set (deduped)."""
+    out = list(execute)
+    picks = rng.integers(0, 3, size=max(qpt - len(execute), 0))
+    for p in picks:
+        pool = (warm, weak, execute)[int(p)]
+        out.append(pool[int(rng.integers(0, len(pool)))])
+    return out
+
+
+def _drive(loop, traffic_per_tick):
+    """Submit + tick each steady round; returns per-tick seconds."""
+    times = []
+    for batch in traffic_per_tick:
+        for q in batch:
+            loop.submit(q)
+        t0 = time.perf_counter()
+        done = loop.tick()
+        times.append(time.perf_counter() - t0)
+        while loop.pending:  # FIFO overflow safety; no-op normally
+            done += loop.tick()
+        if len(done) != len(batch):
+            raise AssertionError(
+                f"tick answered {len(done)} of {len(batch)} queries")
+    return times
+
+
+def traffic_replay(smoke=False):
+    """Admission vs uncached-FIFO on identical skewed tenant traffic."""
+    n_blocks, rows, qpt, steady = ((12, 1200, 128, 6) if smoke
+                                   else (48, 3000, 1000, 12))
+    tables = _tenant_tables(n_blocks, rows)
+    sizes = [10 ** 6] * n_blocks
+    warm, execute, weak = _templates()
+    n_keys = len(_storekeys(warm + execute + weak))
+    skew = qpt / n_keys
+    if skew < 4.0:
+        raise AssertionError(f"traffic skew {skew:.1f}:1 below the 4:1 "
+                             "queries-per-StoreKey floor")
+
+    # Pre-generate identical steady traffic for both routes.
+    trng = np.random.default_rng(11)
+    traffic = [_tick_traffic(trng, warm, execute, weak, qpt)
+               for _ in range(steady)]
+
+    loops = {}
+    for name in ("admission", "fifo"):
+        ex = _executor(tables, sizes,
+                       plan_cache_size=0 if name == "fifo" else 256)
+        loop = IslaAdmissionLoop(ex, np.random.default_rng(3),
+                                 max_batch=max(qpt, 1024),
+                                 incremental=True,
+                                 admission=(name == "admission"))
+        # Warm-up: every template once (identical RNG draws per route),
+        # then one steady-shaped tick so the steady plan is cached.
+        for q in warm + execute + weak:
+            loop.submit(q)
+        loop.run_until_drained()
+        wrng = np.random.default_rng(11)
+        _drive(loop, [_tick_traffic(wrng, warm, execute, weak, qpt)])
+        loops[name] = loop
+
+    results, answers = {}, {}
+    for name, loop in loops.items():
+        before = loop.stats
+        n0 = len(loop.answered)
+        t0 = time.perf_counter()
+        times = _drive(loop, traffic)
+        wall = time.perf_counter() - t0
+        s = loop.stats
+        steady_tickets = loop.answered[n0:]
+        earned = [t for t in steady_tickets
+                  if t.answer.error_bound is not None]
+        hits = s["plan_cache_hits"] - before["plan_cache_hits"]
+        misses = s["plan_cache_misses"] - before["plan_cache_misses"]
+        results[name] = {
+            "queries": len(steady_tickets),
+            "qps": len(steady_tickets) / max(wall, 1e-9),
+            "p50_ms": float(np.percentile(times, 50) * 1e3),
+            "p99_ms": float(np.percentile(times, 99) * 1e3),
+            "bound_earned_fraction": len(earned) / len(steady_tickets),
+            "steady_new_samples":
+                s["samples_drawn"] - before["samples_drawn"],
+            "plan_cache_hit_rate":
+                hits / max(hits + misses, 1) if name == "admission"
+                else None,
+            "subsumed": s["subsumed"] - before["subsumed"],
+            "deduped": s["deduped"] - before["deduped"],
+        }
+        answers[name] = {t.tid: t.answer for t in loop.answered}
+
+    adm, fifo = results["admission"], results["fifo"]
+    # Steady state must be draw-free on BOTH routes (the bit-parity
+    # precondition: zero draws -> zero RNG consumed -> same stores).
+    for name, r in results.items():
+        if r["steady_new_samples"] != 0:
+            raise AssertionError(f"{name} route drew "
+                                 f"{r['steady_new_samples']} steady "
+                                 "samples; warm-up did not converge")
+    # Every subsumed/deduped answer drew zero new samples, with a bound
+    # no looser than asked.
+    zero_checked = 0
+    for t in loops["admission"].answered:
+        a = t.answer
+        if a.served in ("subsumed", "dedupe"):
+            if a.new_samples != 0:
+                raise AssertionError(f"{a.served} answer drew "
+                                     f"{a.new_samples} samples")
+            if a.error_bound is not None and a.query.agg == "AVG" \
+                    and a.error_bound > t.query.e + 1e-12:
+                raise AssertionError("served bound looser than asked")
+            zero_checked += 1
+    if adm["subsumed"] == 0 or adm["deduped"] == 0:
+        raise AssertionError("traffic exercised no subsumption/dedupe")
+    hit_rate = adm["plan_cache_hit_rate"]
+    if hit_rate < 0.9:
+        raise AssertionError(f"steady plan-cache hit rate {hit_rate:.2f} "
+                             "below 0.9")
+    # Bit parity (host float64): identical values, group rows, and
+    # bound-earned flags per ticket across both routes.
+    if set(answers["admission"]) != set(answers["fifo"]):
+        raise AssertionError("routes answered different ticket sets")
+    for tid, a in answers["admission"].items():
+        f = answers["fifo"][tid]
+        if not _bit_identical(a, f):
+            raise AssertionError(f"ticket {tid} diverged: "
+                                 f"{a.value!r} vs {f.value!r}")
+    speedup = adm["qps"] / max(fifo["qps"], 1e-9)
+    if not smoke and speedup < 3.0:
+        raise AssertionError(f"admission speedup {speedup:.2f}x below the "
+                             "3x floor vs the FIFO loop")
+    rows = [
+        (f"fifo_tick/q{qpt}", fifo["p50_ms"] * 1e3, fifo["qps"]),
+        (f"admission_tick/q{qpt}", adm["p50_ms"] * 1e3, adm["qps"]),
+        ("admission_speedup_x", 0.0, speedup),
+        ("plan_cache_hit_rate", 0.0, hit_rate),
+        ("answer_parity_ok", 0.0, 1.0),
+    ]
+    return rows, {
+        "queries_per_tick": qpt, "steady_ticks": steady,
+        "distinct_storekeys": n_keys, "skew_queries_per_storekey": skew,
+        "admission": adm, "fifo": fifo, "speedup_x": speedup,
+        "plan_cache_hit_rate": hit_rate,
+        "subsumed_zero_new_samples_checked": zero_checked,
+        "parity": {"dtype": "float64 (host route)",
+                   "bit_identical": True,
+                   "tickets_compared": len(answers["admission"])},
+    }
+
+
+def _bit_identical(a, f) -> bool:
+    """Same value bits, same group rows, same bound-earned flag.  The
+    BOUND itself may legitimately differ on a served answer: a subsumed
+    ask inherits its dominator's bound, which holds at the dominator's
+    HIGHER confidence and so can be numerically wider than a fresh
+    compose at the weaker asked beta.  Computed answers must match the
+    FIFO bound exactly."""
+    va, vf = float(a.value), float(f.value)
+    if not (va == vf or (np.isnan(va) and np.isnan(vf))):
+        return False
+    if (a.error_bound is None) != (f.error_bound is None):
+        return False
+    if a.served is None and a.error_bound is not None \
+            and a.error_bound != f.error_bound:
+        return False
+    ga = a.groups or []
+    gf = f.groups or []
+    if len(ga) != len(gf):
+        return False
+    for x, y in zip(ga, gf):
+        vx, vy = float(x.value), float(y.value)
+        if not (vx == vy or (np.isnan(vx) and np.isnan(vy))):
+            return False
+    return True
+
+
+def progressive_stream(smoke=False):
+    """OLA streaming under a tight tick budget: the in-flight ticket's
+    half-width snapshots shrink monotonically-ish until the bound is
+    earned, then the ticket completes."""
+    n_blocks, rows = (8, 1200) if smoke else (24, 2500)
+    tables = _tenant_tables(n_blocks, rows, seed=5)
+    ex = _executor(tables, [10 ** 6] * n_blocks)
+    loop = IslaAdmissionLoop(ex, np.random.default_rng(9),
+                             incremental=True, deadline_samples=400,
+                             progressive=True)
+    loop.submit(IslaQuery(e=0.35, beta=0.95, agg="AVG",
+                          where=Predicate(column="flag", eq=1.0)))
+    t0 = time.perf_counter()
+    done = loop.run_until_drained(max_ticks=400)
+    us = (time.perf_counter() - t0) * 1e6
+    if len(done) != 1:
+        raise AssertionError("progressive ticket never earned its bound")
+    t = done[0]
+    widths = [hw for (_, _, hw, _) in t.progress if hw is not None]
+    if len(widths) < 2 or not widths[-1] < widths[0]:
+        raise AssertionError(f"half-width stream did not shrink: {widths}")
+    if t.answer.error_bound is None:
+        raise AssertionError("completed ticket carries no earned bound")
+    rows_out = [("progressive_ticks_to_bound", us,
+                 float(len(t.progress)))]
+    return rows_out, {
+        "ticks_to_bound": len(t.progress),
+        "first_half_width": widths[0], "final_half_width": widths[-1],
+        "budget_per_tick": 400,
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes so CI can keep the entrypoints alive")
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_serve.json")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    report = {"smoke": bool(args.smoke)}
+    for section, bench in (("traffic", traffic_replay),
+                           ("progressive", progressive_stream)):
+        rows, rep = bench(smoke=args.smoke)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived:.6g}", flush=True)
+        report[section] = rep
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    tr = report["traffic"]
+    print(f"# wrote {path} ({tr['speedup_x']:.1f}x queries/sec vs FIFO at "
+          f"{tr['queries_per_tick']} q/tick, "
+          f"{tr['skew_queries_per_storekey']:.0f}:1 skew, plan-cache hit "
+          f"rate {tr['plan_cache_hit_rate']:.2f}, answers bit-identical)",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -610,6 +610,13 @@ class IslaQuery:
         Pins this query's Phase 2 solver (None = the executor default).
         The planner groups queries by RESOLVED mode and runs one shared
         sampling pass per mode-group.
+    priority : float
+        Tenant weight for budgeted scheduling, > 0 (default 1.0).  Under
+        ``run(budget=...)`` the marginal-error waterfill treats a pass
+        carrying priority ``w`` as if its error were ``w`` times larger,
+        so higher-priority tenants drain their deficits first at equal
+        error.  Priorities never change *what* is computed — values and
+        bounds are priority-independent — only the per-tick sample split.
 
     Examples
     --------
@@ -624,6 +631,7 @@ class IslaQuery:
     where: Optional[Predicate] = None
     group_by: Optional[str] = None
     mode: Optional[str] = None
+    priority: float = 1.0
 
 
 def aggregate(block_samplers: Sequence[Sampler],

@@ -1575,7 +1575,8 @@ def proportional_allocate(amounts: np.ndarray, budget: int) -> np.ndarray:
 
 def split_budget(n_now: Sequence[float], sigmas: Sequence[float],
                  deficits: Sequence[int], budget: int,
-                 min_per_store: int = 0) -> np.ndarray:
+                 min_per_store: int = 0,
+                 weights: Optional[Sequence[float]] = None) -> np.ndarray:
     """Split a tick's sample budget across stores by marginal-error
     reduction (deadline-aware QoS).
 
@@ -1605,6 +1606,14 @@ def split_budget(n_now: Sequence[float], sigmas: Sequence[float],
         cannot starve a nearly-converged store's small top-up forever.
         When the budget cannot cover even the floors, the floors
         themselves are split proportionally.
+    weights : sequence of float, optional
+        Per-store priority weights, > 0 (default: all 1.0).  A store
+        with weight ``w`` waterfills as if its sigma were ``w * sigma``,
+        i.e. its marginal error reduction counts ``w``-fold — so at
+        equal deficit and sigma a higher-priority store receives weakly
+        more samples.  Floors (``min_per_store``) are weight-independent
+        and honored first; cold stores (NaN sigma) stay
+        filled-before-known within their weight class.
 
     Returns
     -------
@@ -1631,6 +1640,14 @@ def split_budget(n_now: Sequence[float], sigmas: Sequence[float],
         np.asarray(deficits, dtype=np.int64).reshape(-1), 0)
     if not (n_now.shape == sigmas.shape == deficits.shape):
         raise ValueError("n_now, sigmas, deficits must align")
+    if weights is None:
+        w = np.ones_like(n_now)
+    else:
+        w = np.asarray(weights, dtype=np.float64).reshape(-1)
+        if w.shape != n_now.shape:
+            raise ValueError("weights must align with n_now")
+        if not np.all(np.isfinite(w)) or np.any(w <= 0):
+            raise ValueError("weights must be finite and > 0")
     budget = int(budget)
     total = int(deficits.sum())
     if budget >= total or total == 0:
@@ -1641,14 +1658,18 @@ def split_budget(n_now: Sequence[float], sigmas: Sequence[float],
         if covered >= budget:
             return proportional_allocate(base, budget)
         rest = split_budget(n_now + base, sigmas, deficits - base,
-                            budget - covered)
+                            budget - covered, weights=weights)
         return base + rest
     # Unknown sigma (cold store, NaN) -> dominate every known marginal.
     # A KNOWN zero sigma stays zero: its error cannot shrink, so it is
     # served last, not first.
     known = sigmas[np.isfinite(sigmas) & (sigmas > 0)]
     fill = (float(known.max()) * 1e3) if known.size else 1.0
-    sig = np.where(np.isfinite(sigmas), np.maximum(sigmas, 0.0), fill)
+    # Priority weight scales the EFFECTIVE sigma: a weight-w store's
+    # marginal w*sigma/n^1.5 levels against everyone else's, so it
+    # drains first at equal observed error.  A known zero sigma stays
+    # zero under any weight.
+    sig = np.where(np.isfinite(sigmas), np.maximum(sigmas, 0.0), fill) * w
     if not np.any(sig > 0):
         # No marginal signal at all: plain proportional split.
         return proportional_allocate(deficits, budget)

@@ -70,9 +70,11 @@ docs/ARCHITECTURE.md "Per-key leverage anchors".
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 import math
 import warnings
+from collections import OrderedDict
 from typing import Callable, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -86,9 +88,9 @@ from .moment_store import (DeviceMomentStore, DeviceStack, MeshDeviceStack,
 from .preestimation import (required_sample_size, run_pilot, sampling_rate,
                             z_score)
 from .summarize import summarize
-from .types import (AggregateResult, Anchor, BlockResultsBatch, Boundaries,
-                    IslaParams, Predicate, StoreKey, ZoneMap, ZONE_EMPTY,
-                    ZONE_FULL, ZONE_PARTIAL)
+from .types import (AggregateResult, Anchor, BlockResultsBatch,
+                    Boundaries, IslaParams, Predicate, StoreKey, ZoneMap,
+                    ZONE_EMPTY, ZONE_FULL, ZONE_PARTIAL, demand_dominates)
 
 AGGREGATES = ("AVG", "SUM", "COUNT", "VAR")
 # Aggregates answered exactly from catalog metadata — they never constrain
@@ -194,6 +196,16 @@ class QueryAnswer:
     est_population: Optional[float] = None  # estimated matching rows
     new_samples: Optional[int] = None   # rows drawn fresh for this answer's
                                         # pass (0 = served from warm store)
+    half_width: Optional[float] = None  # OBSERVED normal half-width at the
+                                        # query's beta, aggregate scale — the
+                                        # OLA "answer so far + shrinking
+                                        # bound" stream; None = undefined
+    served: Optional[str] = None        # admission provenance: None =
+                                        # computed, "dedupe" = fanned out
+                                        # from an identical same-tick query,
+                                        # "subsumed" = answer-cache serve
+    dedupe_fanout: int = 1              # queries this computed answer served
+                                        # in its tick (>= 1)
 
     def __float__(self) -> float:
         return float(self.value)
@@ -301,6 +313,37 @@ class QueryPlan:
         return "\n".join(lines)
 
 
+@dataclasses.dataclass
+class _CachedPlan:
+    """One PlanCache entry: a compiled :class:`QueryPlan` (mode-group
+    layout, per-block rate vectors, per-key anchors) plus everything its
+    validity hangs on — the frozen pilot identity, the set of predicates
+    it planned (per-key drift evicts by predicate), and the zone-map
+    verdict snapshot it pruned under (a ``refresh`` that changed no
+    verdict the plan actually used keeps the plan)."""
+
+    plan: QueryPlan
+    wheres: frozenset          # predicates the plan's pass keys touch
+    zone_version: Optional[int]
+    zone_status: dict          # where -> per-block verdict array (or None)
+
+
+@dataclasses.dataclass
+class _CachedAnswer:
+    """One answer-cache entry: the strongest earned answer on an
+    :class:`types.AnswerKey`, valid for subsumption service only while
+    its store's sample ledger still reads ``stamp`` (any later top-up
+    means a fresher answer exists — recompute, don't serve stale) and
+    only for demands its ``(e, beta)`` dominates."""
+
+    e: float
+    beta: float
+    answer: QueryAnswer
+    skey: StoreKey             # the store the answer composed from
+    stamp: int                 # store.total_sampled at compose time
+    epoch: int = -1            # run epoch the stamp was last re-validated at
+
+
 class MultiQueryExecutor:
     """Shares one pilot + one tagged pass per mode-group across N queries.
 
@@ -328,7 +371,8 @@ class MultiQueryExecutor:
                  refine_anchors: bool = True,
                  anchor_min_support: int = 64,
                  mesh=None,
-                 zone_map: Optional[ZoneMap] = None):
+                 zone_map: Optional[ZoneMap] = None,
+                 plan_cache_size: int = 256):
         if len(block_samplers) != len(block_sizes):
             raise ValueError("one sampler per block required")
         self.block_samplers = list(block_samplers)
@@ -377,6 +421,26 @@ class MultiQueryExecutor:
         # None auto-builds a 1-D mesh over every visible device on first
         # use (jax import deferred — a host-route executor never pays it).
         self.mesh = mesh
+        # Admission tier (warm incremental serving only).  PlanCache:
+        # compiled QueryPlans keyed on the priority-stripped batch +
+        # (mode, route, overrides); valid only against the frozen pilot,
+        # the keys' current anchors, and the zone verdicts the plan
+        # pruned under — per-key drift resets and zone refreshes evict
+        # exactly the affected entries.  Answer cache: the strongest
+        # earned answer per AnswerKey — stored as the flat tuple
+        # (agg, where, group_by, resolved mode) for cheap per-query
+        # hashing — serving dominated (weaker-(e, beta)) queries with
+        # zero new samples while the store ledger is unchanged.
+        self.plan_cache_size = int(plan_cache_size)
+        self._plan_cache: "OrderedDict[tuple, _CachedPlan]" = OrderedDict()
+        self._answer_cache: "OrderedDict[tuple, _CachedAnswer]" = \
+            OrderedDict()
+        self.plan_cache_hits = 0
+        self.plan_cache_misses = 0
+        self.plan_cache_evictions = 0
+        self.answers_cached = 0
+        self.answers_subsumed = 0
+        self._run_epoch = 0  # bumped per run(); gates ledger re-validation
 
     def reset_stores(self) -> None:
         """Drop all warm stores (host and device-resident) and the pilot
@@ -389,6 +453,9 @@ class MultiQueryExecutor:
         self._key_anchors.clear()
         self._device_stores.clear()
         self._device_stacks.clear()
+        self.plan_cache_evictions += len(self._plan_cache)
+        self._plan_cache.clear()
+        self._answer_cache.clear()
 
     # -- staleness ---------------------------------------------------------
 
@@ -504,13 +571,26 @@ class MultiQueryExecutor:
                         stores: Optional[dict] = None) -> None:
         """Tear down ONE key's warm state everywhere it lives — host
         store, device mirror (releasing its stack so surviving members
-        get their state back), per-key sigma cache.  Every other key's
-        store survives untouched."""
+        get their state back), per-key sigma cache, and exactly the
+        cached plans / answers that touch this key's predicate.  Every
+        other key's store AND cached plan survives untouched."""
         (self._stores if stores is None else stores).pop(skey, None)
         dst = self._device_stores.pop(skey, None)
         if dst is not None and dst._owner is not None:
             dst._owner.release()
         self._sigma_cache.pop((skey.group_by, skey.where), None)
+        self._evict_where(skey.where)
+
+    def _evict_where(self, where: Optional[Predicate]) -> None:
+        """Evict exactly the cached plans and answers whose pass keys
+        include ``where`` — never the whole cache (an unrelated key's
+        cached plan must survive a neighbor's drift reset)."""
+        stale = [k for k, e in self._plan_cache.items() if where in e.wheres]
+        for k in stale:
+            del self._plan_cache[k]
+        self.plan_cache_evictions += len(stale)
+        for akey in [k for k in self._answer_cache if k[1] == where]:
+            del self._answer_cache[akey]
 
     def _reset_key(self, skey: StoreKey,
                    probe_columns: Optional[Mapping] = None) -> None:
@@ -916,6 +996,9 @@ class MultiQueryExecutor:
                     f"{AGGREGATES}")
             if q.e <= 0:
                 raise ValueError(f"precision must be positive, got {q.e}")
+            if not (math.isfinite(q.priority) and q.priority > 0):
+                raise ValueError(
+                    f"priority must be finite and > 0, got {q.priority}")
             if q.mode is not None and q.mode not in MODES:
                 raise ValueError(f"unknown mode {q.mode!r}; expected one of "
                                  f"{MODES}")
@@ -1087,6 +1170,128 @@ class MultiQueryExecutor:
                          shifted_sketch0=shifted_sketch0,
                          mode_groups=mode_groups, anchor=global_anchor,
                          anchors=anchors)
+
+    # -- admission tier: plan cache + answer subsumption -------------------
+
+    def _plan_entry_valid(self, entry: _CachedPlan) -> bool:
+        """A cached plan survives a zone-map ``refresh`` iff no verdict
+        it actually pruned under changed — the version bump alone proves
+        nothing about THIS plan's predicates.  Verdicts that did hold
+        re-pin the entry to the fresh version (one array compare per
+        predicate, then O(1) again)."""
+        if self.zone_map is None:
+            return entry.zone_version is None
+        if entry.zone_version == self.zone_map.version:
+            return True
+        for where, old in entry.zone_status.items():
+            if not np.array_equal(self.zone_map.status(where), old):
+                return False
+        entry.zone_version = self.zone_map.version
+        return True
+
+    def _plan_cached(self, queries: Sequence[IslaQuery],
+                     rng: np.random.Generator, mode: str, route: str,
+                     rate_override: Optional[float],
+                     sigma_guess: Optional[float]) -> QueryPlan:
+        """``plan()`` through the PlanCache — the warm incremental path,
+        where planning consumes no RNG (frozen pilot) and the compiled
+        artifacts (mode-group layout, block rate vectors, per-key
+        anchors) are pure functions of the batch shape, the frozen
+        anchors, and the zone verdicts.  Priorities are stripped from
+        the cache key (they steer only the budget waterfill, never the
+        plan), so tenants re-weighting a steady workload still hit."""
+        pilot, pilot_columns = self._anchor
+        norm = tuple(q if q.priority == 1.0
+                     else dataclasses.replace(q, priority=1.0)
+                     for q in queries)
+        ckey = (norm, mode, route, rate_override, sigma_guess)
+        entry = self._plan_cache.get(ckey)
+        if entry is not None:
+            if self._plan_entry_valid(entry):
+                self.plan_cache_hits += 1
+                self._plan_cache.move_to_end(ckey)
+                return entry.plan
+            del self._plan_cache[ckey]
+            self.plan_cache_evictions += 1
+        self.plan_cache_misses += 1
+        plan = self.plan(list(norm), rng, mode=mode, route=route,
+                         rate_override=rate_override,
+                         sigma_guess=sigma_guess, pilot=pilot,
+                         pilot_columns=pilot_columns)
+        wheres = frozenset(q.where for q in norm)
+        zver, zstat = None, {}
+        if self.zone_map is not None:
+            zver = self.zone_map.version
+            zstat = {w: self.zone_map.status(w)
+                     for w in wheres if w is not None}
+        self._plan_cache[ckey] = _CachedPlan(
+            plan=plan, wheres=wheres, zone_version=zver, zone_status=zstat)
+        while len(self._plan_cache) > self.plan_cache_size:
+            self._plan_cache.popitem(last=False)
+            self.plan_cache_evictions += 1
+        return plan
+
+    def _cache_answer(self, q: IslaQuery, ans: QueryAnswer, skey: StoreKey,
+                      stamp: int, default_mode: str) -> None:
+        """Record an earned, fully-covered answer for subsumption service.
+        At an unchanged ledger stamp a strictly weaker new entry never
+        displaces a dominating one (the strong answer serves more asks);
+        any fresher stamp always wins — only it can validate."""
+        akey = (q.agg, q.where, q.group_by, q.mode or default_mode)
+        prev = self._answer_cache.get(akey)
+        if prev is not None and prev.stamp == stamp \
+                and demand_dominates(prev.e, prev.beta, q.e, q.beta):
+            return
+        self._answer_cache[akey] = _CachedAnswer(
+            e=q.e, beta=q.beta, answer=ans, skey=skey, stamp=stamp,
+            epoch=self._run_epoch)
+        self._answer_cache.move_to_end(akey)
+        self.answers_cached += 1
+        while len(self._answer_cache) > 4 * self.plan_cache_size:
+            self._answer_cache.popitem(last=False)
+
+    def lookup_answer(self, query: IslaQuery,
+                      mode: str = "calibrated") -> Optional[QueryAnswer]:
+        """Serve ``query`` from the subsumption answer cache with ZERO
+        new samples, or return None.
+
+        A hit requires an earned answer on the same :class:`AnswerKey`
+        whose ``(e, beta)`` dominates the ask (``demand_dominates``: at
+        least as precise AND at least as confident — the served bound is
+        therefore never looser than asked) and whose store ledger is
+        byte-unchanged since compose time (``total_sampled`` stamp; the
+        device mirror is the authoritative ledger on device/mesh
+        routes).  ``mode`` is the run-level default the query's own
+        ``mode`` field would fall back to.  The returned answer carries
+        ``new_samples=0`` and ``served="subsumed"``."""
+        if self._anchor is None:
+            return None
+        akey = (query.agg, query.where, query.group_by, query.mode or mode)
+        entry = self._answer_cache.get(akey)
+        if entry is None:
+            return None
+        if not demand_dominates(entry.e, entry.beta, query.e, query.beta):
+            return None
+        if entry.epoch != self._run_epoch:
+            # Ledger stamps only move inside run(); re-sum the ledger at
+            # most once per run epoch, not per served query.
+            led = self._device_stores.get(entry.skey)
+            if led is None:
+                led = self._stores.get(entry.skey)
+            if led is None or led.total_sampled != entry.stamp:
+                # Store gone or topped up since compose: a fresher answer
+                # exists (or will) — drop the stale entry instead of
+                # serving.
+                self._answer_cache.pop(akey, None)
+                return None
+            entry.epoch = self._run_epoch
+        self.answers_subsumed += 1
+        ans = copy.copy(entry.answer)  # field-introspection-free replace
+        ans.query = query
+        ans.new_samples = 0
+        ans.served = "subsumed"
+        ans.dedupe_fanout = 1
+        return ans
 
     def _key_anchor(self, key, global_anchor: Anchor,
                     pilot_columns: Mapping[str, np.ndarray],
@@ -1577,20 +1782,28 @@ class MultiQueryExecutor:
         # report best-effort (None) instead of an unearned bound.
         met = sp.sample_size >= required_sample_size(
             q.e, sp.result.sigma, q.beta)
+        # OBSERVED half-width at the query's beta — the progressive
+        # "answer so far + shrinking bound" stream; unlike error_bound it
+        # is reported even before Eq. 1's m is met.
+        hw = None
+        if sp.sample_size > 0 and math.isfinite(sp.result.sigma):
+            hw = (z_score(q.beta) * sp.result.sigma
+                  / math.sqrt(sp.sample_size))
         if q.agg == "AVG":
-            value, bound = sp.mean, (q.e if met else None)
+            value, bound, half = sp.mean, (q.e if met else None), hw
         elif q.agg == "SUM":
             value = sp.data_size * sp.mean
             bound = sp.data_size * q.e if met else None
+            half = sp.data_size * hw if hw is not None else None
         elif q.agg == "COUNT":
-            value, bound = float(sp.data_size), 0.0
+            value, bound, half = float(sp.data_size), 0.0, 0.0
         else:  # VAR — shift-invariant: both terms are on the shifted stream
             value = max(sp.ex2 - sp.mean_shifted * sp.mean_shifted, 0.0)
-            bound = None
+            bound, half = None, None
         return QueryAnswer(
             query=q, value=float(value), mean=sp.mean, error_bound=bound,
             sampling_rate=sp.rate, sample_size=sp.sample_size, mode=mg.mode,
-            pass_id=pass_id)
+            pass_id=pass_id, half_width=half)
 
     def _group_row(self, q: IslaQuery, kp: KeyedPass, g: int, shift: float,
                    n_drawn: int, beta_z: float) -> GroupAnswer:
@@ -1628,15 +1841,23 @@ class MultiQueryExecutor:
                and not math.isnan(kp.sigma_all)
                and kp.n_all >= required_sample_size(q.e, kp.sigma_all,
                                                     q.beta))
+        # Observed half-width on the matching sub-population (progressive
+        # shrinking-bound stream; None when no evidence exists yet).
+        hw = None
+        if kp.n_all > 0 and not math.isnan(kp.sigma_all):
+            hw = beta_z * kp.sigma_all / math.sqrt(kp.n_all)
         if q.agg == "AVG":
             value = mean
             bound = q.e if met else None
+            half = hw
         elif q.agg == "SUM":
             value = kp.w_all * mean if kp.n_all else float("nan")
             bound = None
+            half = kp.w_all * hw if hw is not None else None
         elif q.agg == "COUNT":
             value = kp.w_all
             bound = self._count_bound(kp.w_all, n_drawn, beta_z)
+            half = bound
             # COUNT never estimates a leverage mean (its key may have
             # skipped Phase 2 entirely); report the plain matching-sample
             # mean so the field is deterministic across batch compositions.
@@ -1644,7 +1865,7 @@ class MultiQueryExecutor:
         else:  # VAR
             value = (max(kp.ex2_all - kp.mean_all ** 2, 0.0)
                      if kp.n_all else float("nan"))
-            bound = None
+            bound, half = None, None
         groups = None
         if q.group_by is not None:
             groups = [self._group_row(q, kp, g, shift, n_drawn, beta_z)
@@ -1653,7 +1874,7 @@ class MultiQueryExecutor:
             query=q, value=float(value), mean=mean, error_bound=bound,
             sampling_rate=mg.rate, sample_size=n_drawn, mode=mg.mode,
             pass_id=pass_id, groups=groups, n_matched=kp.n_all,
-            est_population=kp.w_all)
+            est_population=kp.w_all, half_width=half)
 
     def _group_stores(self, plan: QueryPlan, mg: ModeGroup,
                       stores: Optional[dict]
@@ -1721,7 +1942,8 @@ class MultiQueryExecutor:
                        prebuilt: Optional[Tuple[dict, dict]] = None,
                        persistent: bool = False,
                        budget_alloc: Optional[int] = None,
-                       chunk_blocks: Optional[int] = None) -> "list":
+                       chunk_blocks: Optional[int] = None,
+                       default_mode: str = "calibrated") -> "list":
         """One shared sampling pass; every query of the mode-group composes
         from it (per distinct (where, group_by) key, one re-segmentation).
 
@@ -1744,13 +1966,20 @@ class MultiQueryExecutor:
         if device_resident:
             keys, dstores, stack = self._device_group(mg, group_stores,
                                                       route)
+        covered = persistent
         if persistent:
-            draw = np.zeros(len(self.block_sizes), dtype=np.int64)
+            union = np.zeros(len(self.block_sizes), dtype=np.int64)
             for key, st in group_stores.items():
                 led = dstores[key] if device_resident else st
-                draw = np.maximum(draw, led.deficit(target))
+                union = np.maximum(union, led.deficit(target))
+            draw = union
             if budget_alloc is not None:
-                draw = _scale_quotas(draw, int(budget_alloc))
+                draw = _scale_quotas(union, int(budget_alloc))
+                # A budget-truncated pass leaves deficit on the table: its
+                # answers refine next tick, so they must not enter the
+                # subsumption answer cache (a weaker ask served from one
+                # would skip the top-up the uncached route still draws).
+                covered = int(draw.sum()) == int(union.sum())
         else:
             draw = target
         new_samples = int(draw.sum())
@@ -1795,10 +2024,20 @@ class MultiQueryExecutor:
                 ans = self._compose_keyed(
                     q, keyed[key], mg, pass_id, shift_k, n_drawn)
             ans.new_samples = new_samples
+            if covered and ans.error_bound is not None:
+                # Earned + fully-covered: eligible to serve dominated
+                # (weaker-(e, beta)) asks with zero new samples until the
+                # store's ledger moves.
+                stamp = (dstores[key].total_sampled if device_resident
+                         else st.total_sampled)
+                self._cache_answer(
+                    q, ans, StoreKey(where=key[0], group_by=key[1],
+                                     mode=mg.mode), stamp, default_mode)
             out.append((i, ans))
         return out
 
     def _budget_allocations(self, plan: QueryPlan,
+                            queries: Sequence[IslaQuery],
                             deadline_samples: Optional[int],
                             budget: Optional[int],
                             mg_stores: "list",
@@ -1807,10 +2046,15 @@ class MultiQueryExecutor:
         marginal-error reduction (``moment_store.split_budget``): the most
         uncertain stores — fewest matching samples, highest observed sigma
         — absorb the tick's budget first.  ``mg_stores`` holds each
-        mode-group's prebuilt (key -> store, key -> aggs) pair."""
+        mode-group's prebuilt (key -> store, key -> aggs) pair.
+
+        ``queries`` is the CALLER's batch (not ``plan.queries``, which a
+        PlanCache hit strips of priorities): each pass waterfills at the
+        max priority over the queries it answers, so a tenant's weight
+        steers the sample split without ever touching the cached plan."""
         if budget is None:
             return {}
-        deficits, n_now, sigmas = [], [], []
+        deficits, n_now, sigmas, weights = [], [], [], []
         for mg, (group_stores, _) in zip(plan.mode_groups, mg_stores):
             target = self._target_quotas(mg, deadline_samples)
             union = np.zeros(len(self.block_sizes), dtype=np.int64)
@@ -1833,8 +2077,10 @@ class MultiQueryExecutor:
             deficits.append(int(union.sum()))
             n_now.append(lo_n or 0.0)
             sigmas.append(hi_sig)
+            weights.append(max(queries[i].priority for i in mg.query_ids))
         alloc = split_budget(n_now, sigmas, deficits, int(budget),
-                             min_per_store=int(budget_floor or 0))
+                             min_per_store=int(budget_floor or 0),
+                             weights=weights)
         return {pass_id: int(a) for pass_id, a in enumerate(alloc)}
 
     def _shared_pass(self, queries: Sequence[IslaQuery],
@@ -1960,6 +2206,7 @@ class MultiQueryExecutor:
         shard.  On a single-device jax runtime the layout degenerates to
         exactly the ``"device"`` path.
         """
+        self._run_epoch += 1  # store ledgers may move: lookups re-validate
         if budget is not None and not incremental:
             raise ValueError(
                 "budget caps the incremental deficit top-up; without "
@@ -1986,11 +2233,11 @@ class MultiQueryExecutor:
                 for skey in self.drifted_keys(probe, z_thresh=z):
                     self._reset_key(skey, probe_columns=probe)
         if incremental and self._anchor is not None:
-            pilot, pilot_columns = self._anchor
-            plan = self.plan(queries, rng, mode=mode, route=route,
-                             rate_override=rate_override,
-                             sigma_guess=sigma_guess, pilot=pilot,
-                             pilot_columns=pilot_columns)
+            # Warm path: planning consumes no RNG against the frozen
+            # pilot, so a PlanCache hit and a fresh plan are stream-
+            # identical — a steady-state tick does zero Python planning.
+            plan = self._plan_cached(queries, rng, mode, route,
+                                     rate_override, sigma_guess)
         else:
             plan = self.plan(queries, rng, mode=mode, route=route,
                              rate_override=rate_override,
@@ -2000,7 +2247,8 @@ class MultiQueryExecutor:
         stores = self._stores if incremental else None
         mg_stores = [self._group_stores(plan, mg, stores)
                      for mg in plan.mode_groups]
-        alloc = (self._budget_allocations(plan, deadline_samples, budget,
+        alloc = (self._budget_allocations(plan, list(queries),
+                                          deadline_samples, budget,
                                           mg_stores, budget_floor)
                  if incremental else {})
         answers = [None] * len(queries)
@@ -2009,7 +2257,10 @@ class MultiQueryExecutor:
                     plan, mg, pass_id, rng, route, deadline_samples,
                     prebuilt=mg_stores[pass_id], persistent=incremental,
                     budget_alloc=alloc.get(pass_id),
-                    chunk_blocks=chunk_blocks):
+                    chunk_blocks=chunk_blocks, default_mode=mode):
+                # The cached plan's queries are priority-stripped; hand
+                # the caller back ITS query object.
+                ans.query = queries[i]
                 answers[i] = ans
         return answers
 

@@ -336,6 +336,55 @@ class StoreKey:
 
 
 @dataclasses.dataclass(frozen=True)
+class AnswerKey:
+    """Identity of an ANSWER in the admission tier's subsumption lattice:
+    a :class:`StoreKey` plus the aggregate.  Two queries sharing an
+    AnswerKey compute the same value from the same warm store — only
+    their ``(e, beta)`` demands (and priorities) may differ, and demands
+    form a partial order (see :func:`demand_dominates`): the stronger
+    answer serves the weaker query with zero new samples.
+
+    Examples
+    --------
+    >>> from repro.core.engine import IslaQuery
+    >>> k = AnswerKey.from_query(IslaQuery(agg="SUM", group_by="region"),
+    ...                          default_mode="calibrated")
+    >>> k.describe()
+    'SUM where[TRUE] group_by[region] mode=calibrated'
+    """
+
+    agg: str
+    store: StoreKey
+
+    @classmethod
+    def from_query(cls, query, default_mode: str) -> "AnswerKey":
+        """Key a query's answer: its StoreKey (mode resolved to the
+        executor default when unpinned) plus its aggregate."""
+        return cls(agg=query.agg,
+                   store=StoreKey(where=query.where,
+                                  group_by=query.group_by,
+                                  mode=query.mode or default_mode))
+
+    def describe(self) -> str:
+        return f"{self.agg} {self.store.describe()}"
+
+
+def demand_dominates(e1: float, beta1: float,
+                     e2: float, beta2: float) -> bool:
+    """True iff an ``(e1, beta1)`` answer satisfies an ``(e2, beta2)``
+    ask: at least as precise AND at least as confident.  This is the
+    subsumption lattice's partial order — incomparable demands (tighter
+    ``e`` but looser ``beta``) never subsume each other.
+
+    >>> demand_dominates(0.05, 0.95, 0.1, 0.9)
+    True
+    >>> demand_dominates(0.05, 0.9, 0.1, 0.95)
+    False
+    """
+    return e1 <= e2 and beta1 >= beta2
+
+
+@dataclasses.dataclass(frozen=True)
 class IslaParams:
     """All tunables of the scheme, defaults per the paper's §VIII setup."""
 

@@ -43,11 +43,25 @@ host device count BEFORE jax imports:
   XLA_FLAGS=--xla_force_host_platform_device_count=8 \
       PYTHONPATH=src python -m repro.launch.serve --workload isla \
       --smoke --incremental --route mesh
+
+With ``--incremental`` the ADMISSION PIPELINE is on by default
+(``--no-admission`` restores the plain FIFO loop): pending queries are
+admitted in priority order, exact same-tick duplicates fan out from one
+executed representative, a query whose ``(e, beta)`` is dominated by a
+cached or same-tick answer on its key is served with zero new samples,
+and steady-state planning is served from the executor's PlanCache.
+``--tenants N --priority 4,1`` round-robins queries over N tenants whose
+weights steer the tick budget waterfill; ``--progressive`` streams
+answer-so-far + shrinking-bound snapshots until each bound is earned:
+
+  PYTHONPATH=src python -m repro.launch.serve --workload isla --smoke \
+      --incremental --deadline-samples 20000 --tenants 2 --priority 4,1
 """
 from __future__ import annotations
 
 import argparse
 import collections
+import copy
 import dataclasses
 import time
 from typing import Optional
@@ -62,13 +76,19 @@ import numpy as np
 
 @dataclasses.dataclass
 class IslaTicket:
-    """An admitted query waiting for (or holding) its answer."""
+    """An admitted query waiting for (or holding) its answer.
+
+    ``progress`` is the OLA progressive stream: one
+    ``(tick, value, half_width, error_bound)`` snapshot per tick the
+    query was served an estimate, shrinking until the bound is earned."""
 
     tid: int
     query: "object"            # IslaQuery
     tick_submitted: int
     tick_answered: Optional[int] = None
     answer: Optional["object"] = None  # QueryAnswer
+    progress: list = dataclasses.field(default_factory=list)
+    holds: int = 0             # times deferred behind a dominating batch-mate
 
 
 class IslaAdmissionLoop:
@@ -119,6 +139,26 @@ class IslaAdmissionLoop:
         Per-pass sample floor within the ``deadline_samples`` split
         (admission-loop QoS): a flood of new predicates cannot starve a
         nearly-converged store's small top-up.
+    admission : bool, optional
+        The multi-tenant admission pipeline (default: on iff
+        ``incremental``).  Per tick: drain ALL pending tickets in
+        priority order (stable — equal priorities keep FIFO), serve
+        queries the executor's subsumption answer cache dominates with
+        ZERO new samples, dedupe exact same-tick duplicates onto one
+        executed representative (``dedupe_fanout`` counts the fan-out),
+        hold a query whose batch-mate dominates it on the same
+        ``AnswerKey`` and serve it from that fresh answer after the run,
+        and execute only the surviving representatives (``max_batch``
+        caps those alone — cache serves are free).  ``False`` is the
+        PR-7 FIFO loop, byte-for-byte.
+    progressive : bool, optional
+        OLA-style streaming (requires ``incremental``): a ticket whose
+        computed answer has not yet EARNED its ``(e, beta)`` bound stays
+        in flight — each tick it re-enters the batch, tops up its
+        deficit, and appends an ``(tick, value, half_width, bound)``
+        snapshot to ``ticket.progress`` — and completes only when the
+        bound is met.  Off (default), every ticket completes the tick it
+        runs, degraded bounds reported honestly.
 
     Examples
     --------
@@ -132,7 +172,9 @@ class IslaAdmissionLoop:
                  max_batch: int = 64, incremental: bool = False,
                  deadline_samples: Optional[int] = None,
                  drift_check: Optional[float] = None,
-                 budget_floor: Optional[int] = None):
+                 budget_floor: Optional[int] = None,
+                 admission: Optional[bool] = None,
+                 progressive: bool = False):
         self.executor = executor
         self.rng = rng
         self.mode = mode
@@ -153,14 +195,24 @@ class IslaAdmissionLoop:
             raise ValueError(
                 "budget_floor floors the deadline_samples split; it "
                 "requires deadline_samples=")
+        if progressive and not self.incremental:
+            raise ValueError(
+                "progressive streams refinement across ticks via the "
+                "persistent store ledger; it requires incremental=True")
         self.deadline_samples = deadline_samples
         self.drift_check = drift_check
         self.budget_floor = budget_floor
+        self.admission = (self.incremental if admission is None
+                          else bool(admission))
+        self.progressive = bool(progressive)
         self._pending = collections.deque()
+        self._inflight: "list[IslaTicket]" = []
         self._next_tid = 0
         self._tick = 0
         self.answered = []
         self.samples_drawn = 0  # cumulative NEW samples across ticks
+        self.deduped = 0        # tickets fanned out from an exact duplicate
+        self.subsumed = 0       # tickets served from the answer cache
 
     def submit(self, query) -> int:
         """Admit one query; returns its ticket id."""
@@ -174,34 +226,179 @@ class IslaAdmissionLoop:
     def pending(self) -> int:
         return len(self._pending)
 
+    @property
+    def in_flight(self) -> int:
+        """Progressive tickets still refining toward their bound."""
+        return len(self._inflight)
+
+    @property
+    def stats(self) -> dict:
+        """Cumulative admission counters (plan cache, subsumption,
+        dedupe, samples) — the serve CLI's per-tick log reads deltas."""
+        ex = self.executor
+        return {
+            "ticks": self._tick,
+            "answered": len(self.answered),
+            "samples_drawn": self.samples_drawn,
+            "deduped": self.deduped,
+            "subsumed": self.subsumed,
+            "in_flight": len(self._inflight),
+            "plan_cache_hits": getattr(ex, "plan_cache_hits", 0),
+            "plan_cache_misses": getattr(ex, "plan_cache_misses", 0),
+            "plan_cache_evictions": getattr(ex, "plan_cache_evictions", 0),
+            "answers_cached": getattr(ex, "answers_cached", 0),
+        }
+
+    @staticmethod
+    def _dedupe_key(q):
+        """Exact same-tick duplicate identity: everything but priority
+        (the fan-out's effective priority is the max over members, which
+        priority-descending admission makes the representative's)."""
+        return (q.agg, q.where, q.group_by, q.mode, q.e, q.beta)
+
+    def _answer_key(self, q):
+        from repro.core.types import AnswerKey
+        return AnswerKey.from_query(q, default_mode=self.mode)
+
+    def _dominating_mate(self, t: IslaTicket,
+                         execute: "list[IslaTicket]") -> bool:
+        """True when an already-admitted batch-mate's demand dominates
+        this ticket's on the same AnswerKey — its fresh answer can serve
+        this ticket after the run, so the ticket holds instead of
+        executing."""
+        from repro.core.types import demand_dominates
+        ak = self._answer_key(t.query)
+        for r in execute:
+            if self._answer_key(r.query) == ak and demand_dominates(
+                    r.query.e, r.query.beta, t.query.e, t.query.beta):
+                return True
+        return False
+
+    def _finish(self, t: IslaTicket, answer) -> None:
+        t.answer = answer
+        t.tick_answered = self._tick
+        t.progress.append((self._tick, answer.value, answer.half_width,
+                           answer.error_bound))
+        self.answered.append(t)
+
     def tick(self) -> "list[IslaTicket]":
-        """Serve one admission round; returns the tickets answered now."""
+        """Serve one admission round; returns the tickets COMPLETED now
+        (progressive tickets may stay in flight across ticks)."""
         self._tick += 1
-        batch = []
-        while self._pending and len(batch) < self.max_batch:
-            batch.append(self._pending.popleft())
-        if not batch:
+        tickets = list(self._inflight)
+        self._inflight = []
+        incoming = []
+        while self._pending:
+            incoming.append(self._pending.popleft())
+        if self.admission:
+            # Priority-ordered admission; the sort is stable, so equal
+            # priorities keep strict FIFO (the PR-7 order).
+            incoming.sort(key=lambda t: -t.query.priority)
+        tickets.extend(incoming)
+        if not tickets:
             return []
-        answers = self.executor.run(
-            [t.query for t in batch], self.rng, mode=self.mode,
-            route=self.route, incremental=self.incremental,
-            budget=self.deadline_samples if self.incremental else None,
-            drift_check=self.drift_check,
-            budget_floor=self.budget_floor)
-        seen_passes = set()
-        for t, a in zip(batch, answers):
-            t.answer = a
-            t.tick_answered = self._tick
-            if a.new_samples is not None and a.pass_id not in seen_passes:
-                self.samples_drawn += a.new_samples
-                seen_passes.add(a.pass_id)
-        self.answered.extend(batch)
-        return batch
+
+        done: "list[IslaTicket]" = []
+        execute: "list[IslaTicket]" = []
+        dups: "dict[tuple, list[IslaTicket]]" = {}
+        held: "list[IslaTicket]" = []
+        overflow: "list[IslaTicket]" = []
+        if self.admission:
+            reps: "dict[tuple, IslaTicket]" = {}
+            for t in tickets:
+                served = (self.executor.lookup_answer(t.query,
+                                                      mode=self.mode)
+                          if self.incremental else None)
+                if served is not None:
+                    # A dominating earned answer already exists: zero new
+                    # samples, bound no looser than asked.
+                    self._finish(t, served)
+                    done.append(t)
+                    self.subsumed += 1
+                    continue
+                dk = self._dedupe_key(t.query)
+                if dk in reps:
+                    dups.setdefault(dk, []).append(t)
+                    continue
+                if len(execute) >= self.max_batch:
+                    overflow.append(t)
+                    continue
+                if t.holds == 0 and self._dominating_mate(t, execute):
+                    # A stronger batch-mate answers the same AnswerKey
+                    # this tick; ride its answer instead of executing.
+                    # One hold max — a missed retry executes next tick.
+                    t.holds += 1
+                    held.append(t)
+                    continue
+                reps[dk] = t
+                execute.append(t)
+        else:
+            execute = tickets[:self.max_batch]
+            overflow = tickets[self.max_batch:]
+
+        if execute:
+            answers = self.executor.run(
+                [t.query for t in execute], self.rng, mode=self.mode,
+                route=self.route, incremental=self.incremental,
+                budget=self.deadline_samples if self.incremental else None,
+                drift_check=self.drift_check,
+                budget_floor=self.budget_floor)
+            seen_passes = set()
+            for t, a in zip(execute, answers):
+                if a.new_samples is not None \
+                        and a.pass_id not in seen_passes:
+                    self.samples_drawn += a.new_samples
+                    seen_passes.add(a.pass_id)
+                mates = dups.get(self._dedupe_key(t.query), [])
+                if mates:
+                    a = dataclasses.replace(a, dedupe_fanout=1 + len(mates))
+                if self.progressive and a.error_bound is None:
+                    # Not earned yet: stream a snapshot, keep refining.
+                    t.progress.append((self._tick, a.value, a.half_width,
+                                       a.error_bound))
+                    t.answer = a
+                    self._inflight.append(t)
+                else:
+                    self._finish(t, a)
+                    done.append(t)
+                for d in mates:
+                    da = copy.copy(a)  # cheaper than dataclasses.replace
+                    da.query = d.query
+                    da.served = "dedupe"
+                    da.dedupe_fanout = 1 + len(mates)
+                    da.new_samples = 0  # drawn once, by the representative
+                    if self.progressive and da.error_bound is None:
+                        d.progress.append((self._tick, da.value,
+                                           da.half_width, da.error_bound))
+                        d.answer = da
+                        self._inflight.append(d)
+                    else:
+                        self._finish(d, da)
+                        done.append(d)
+                        self.deduped += 1
+
+        for t in held:
+            # The dominator just ran: its earned answer is now cached.
+            served = self.executor.lookup_answer(t.query, mode=self.mode)
+            if served is not None:
+                self._finish(t, served)
+                done.append(t)
+                self.subsumed += 1
+            else:
+                # Dominator didn't earn/cover this tick — the ticket
+                # executes unconditionally next tick (holds == 1).
+                overflow.append(t)
+
+        # Overflow returns to the FRONT of the queue, in order, ahead of
+        # anything submitted after this tick started.
+        self._pending.extendleft(reversed(overflow))
+        done.sort(key=lambda t: t.tid)
+        return done
 
     def run_until_drained(self, max_ticks: int = 1000
                           ) -> "list[IslaTicket]":
         done = []
-        while self._pending and max_ticks > 0:
+        while (self._pending or self._inflight) and max_ticks > 0:
             done.extend(self.tick())
             max_ticks -= 1
         return done
@@ -235,7 +432,8 @@ def _synthetic_grouped_blocks(n_blocks: int, n_groups: int, rows: int,
 
 
 def _random_query(rng: np.random.Generator, e: float,
-                  n_days: Optional[int] = None):
+                  n_days: Optional[int] = None,
+                  priority: float = 1.0):
     from repro.core import IslaQuery, Predicate
 
     agg = ("AVG", "SUM", "COUNT", "VAR")[int(rng.integers(0, 4))]
@@ -251,7 +449,7 @@ def _random_query(rng: np.random.Generator, e: float,
     group_by = "region" if rng.random() < 0.5 else None
     mode = ("calibrated", "faithful_cf", None)[int(rng.integers(0, 3))]
     return IslaQuery(e=e, beta=0.95, agg=agg, where=where,
-                     group_by=group_by, mode=mode)
+                     group_by=group_by, mode=mode, priority=priority)
 
 
 def _describe_answer(t: IslaTicket) -> str:
@@ -263,9 +461,13 @@ def _describe_answer(t: IslaTicket) -> str:
              f"±{a.error_bound:.3g}" if a.error_bound is not None
              else "best-effort")
     fresh = (f" new={a.new_samples}" if a.new_samples is not None else "")
+    via = f" via={a.served}" if a.served else ""
+    fan = f" fanout={a.dedupe_fanout}" if a.dedupe_fanout > 1 else ""
+    pri = f" pri={q.priority:g}" if q.priority != 1.0 else ""
     line = (f"  #{t.tid:<3d} {q.agg:>5}  where[{sel}] group_by[{gb}] "
             f"-> {a.value:.5g} [{bound}] mode={a.mode} pass={a.pass_id} "
-            f"rate={a.sampling_rate:.2e}{fresh} tick={t.tick_answered}")
+            f"rate={a.sampling_rate:.2e}{fresh}{via}{fan}{pri} "
+            f"tick={t.tick_answered}")
     if a.groups:
         cells = ", ".join(f"g{g.group}={g.value:.4g}(n={g.n_samples})"
                           for g in a.groups)
@@ -295,33 +497,57 @@ def serve_isla(args) -> None:
     ex = MultiQueryExecutor(samplers, sizes, params=IslaParams(e=e),
                             group_domains={"region": n_groups},
                             zone_map=zone_map)
+    weights = [float(w) for w in args.priority.split(",")] \
+        if args.priority else [1.0]
+    if any(w <= 0 for w in weights):
+        raise SystemExit("--priority weights must be > 0")
+    tenants = max(int(args.tenants), 1)
     loop = IslaAdmissionLoop(ex, np.random.default_rng(args.seed + 1),
                              mode="auto", route=args.route,
                              incremental=args.incremental,
                              deadline_samples=args.deadline_samples,
                              drift_check=args.drift_check,
-                             budget_floor=args.budget_floor)
+                             budget_floor=args.budget_floor,
+                             admission=(False if args.no_admission
+                                        else None),
+                             progressive=args.progressive)
     n_days = max(n_blocks // 2, 1)
     qrng = np.random.default_rng(args.seed + 2)
     t0 = time.perf_counter()
     total = 0
     for _ in range(ticks):
-        for _ in range(qpt):
+        for j in range(qpt):
+            # Round-robin tenants; each tenant's weight rides the query.
+            pri = weights[(j % tenants) % len(weights)]
             loop.submit(_random_query(qrng, e,
                                       n_days=None if args.no_zone_map
-                                      else n_days))
-        drawn_before = loop.samples_drawn
+                                      else n_days,
+                                      priority=pri))
+        before = loop.stats
         done = loop.tick()
         total += len(done)
-        extra = (f", {loop.samples_drawn - drawn_before} new samples"
-                 if args.incremental else "")
-        print(f"tick {loop._tick}: admitted {len(done)} queries, "
-              f"{loop.pending} pending{extra}")
+        s = loop.stats
+        extra = ""
+        if args.incremental:
+            extra = (f", {s['samples_drawn'] - before['samples_drawn']} "
+                     f"new samples, plan-cache "
+                     f"{s['plan_cache_hits'] - before['plan_cache_hits']}h/"
+                     f"{s['plan_cache_misses'] - before['plan_cache_misses']}"
+                     f"m, {s['subsumed'] - before['subsumed']} subsumed, "
+                     f"{s['deduped'] - before['deduped']} deduped")
+        flight = (f", {loop.in_flight} in flight" if loop.in_flight else "")
+        print(f"tick {loop._tick}: answered {len(done)} queries, "
+              f"{loop.pending} pending{flight}{extra}")
         for t in done:
             print(_describe_answer(t))
     dt = time.perf_counter() - t0
-    warm = (f", {loop.samples_drawn} samples total (warm stores reused)"
-            if args.incremental else "")
+    s = loop.stats
+    warm = ""
+    if args.incremental:
+        warm = (f", {s['samples_drawn']} samples total, plan-cache "
+                f"{s['plan_cache_hits']}h/{s['plan_cache_misses']}m/"
+                f"{s['plan_cache_evictions']}e, {s['subsumed']} subsumed, "
+                f"{s['deduped']} deduped")
     print(f"served {total} queries over {ticks} ticks in {dt:.2f}s "
           f"({total / max(dt, 1e-9):.1f} q/s), "
           f"{n_blocks} blocks x {n_groups} groups{warm}")
@@ -395,6 +621,22 @@ def main():
                     help="QoS floor within the --deadline-samples split: "
                          "every pass with a deficit gets at least this "
                          "many samples per tick")
+    ap.add_argument("--tenants", type=int, default=1,
+                    help="multi-tenant traffic: queries round-robin over "
+                         "this many tenants, each carrying its "
+                         "--priority weight")
+    ap.add_argument("--priority", type=str, default=None,
+                    help="comma list of per-tenant priority weights "
+                         "(> 0), e.g. '4,1': tenant 0's passes waterfill "
+                         "at 4x weight in the tick budget split")
+    ap.add_argument("--progressive", action="store_true",
+                    help="OLA streaming (incremental): unearned answers "
+                         "stay in flight, refine each tick, and complete "
+                         "when their (e, beta) bound is met")
+    ap.add_argument("--no-admission", action="store_true",
+                    help="disable the admission pipeline (plan cache "
+                         "serving, dedupe, subsumption, priority order): "
+                         "the PR-7 FIFO baseline loop")
     ap.add_argument("--no-zone-map", action="store_true",
                     help="disable zone-map block pruning: plan every "
                          "WHERE over all blocks instead of rating "
@@ -413,6 +655,9 @@ def main():
     if args.budget_floor is not None and args.deadline_samples is None:
         ap.error("--budget-floor floors the --deadline-samples split; it "
                  "requires --deadline-samples")
+    if args.progressive and not args.incremental:
+        ap.error("--progressive streams refinement across ticks via the "
+                 "persistent stores; it requires --incremental")
     if args.workload == "isla":
         serve_isla(args)
     else:
