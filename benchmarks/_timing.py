@@ -1,0 +1,60 @@
+"""Shared timing harness for the benchmark suite.
+
+Every bench used to carry its own copy of the same two loops; they live
+here once:
+
+ * ``time_best`` — min-over-rounds wall time: warm/compile on the first
+   input, then take the MIN over the rest (the usual noisy-shared-host
+   estimator of achievable latency).
+ * ``time_each`` — per-input wall seconds with untimed per-input setup
+   and teardown hooks (traffic-replay style: submit untimed, time the
+   tick, drain/assert untimed).
+
+Contract: ``time_best`` reports microseconds (the bench row unit),
+``time_each`` reports seconds (percentile math stays in SI).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Optional, Sequence
+
+
+def time_best(fn: Callable, inputs: Sequence) -> tuple:
+    """(best us/call, last output): call ``fn`` once per input, warming
+    (and, for jit'd paths, compiling) on ``inputs[0]``, then MIN the
+    wall time over ``inputs[1:]``.
+
+    The warm-up call's side effects are kept — persistent-state ticks
+    (store merges) stay part of the measured system's history, exactly
+    as the per-bench loops behaved."""
+    if len(inputs) < 2:
+        raise ValueError("time_best needs a warm-up input plus at least "
+                         "one timed input")
+    fn(inputs[0])
+    best, out = float("inf"), None
+    for p in inputs[1:]:
+        t0 = time.perf_counter()
+        out = fn(p)
+        best = min(best, (time.perf_counter() - t0) * 1e6)
+    return best, out
+
+
+def time_each(fn: Callable, inputs: Sequence,
+              setup: Optional[Callable] = None,
+              after: Optional[Callable] = None) -> "list[float]":
+    """Per-input wall SECONDS of ``fn(input)``.
+
+    ``setup(input)`` runs untimed before each call (e.g. submit a
+    traffic batch); ``after(input, result)`` runs untimed after (e.g.
+    drain overflow, assert completion).  No warm-up is skipped — warm
+    explicitly before calling when compilation matters."""
+    times = []
+    for p in inputs:
+        if setup is not None:
+            setup(p)
+        t0 = time.perf_counter()
+        r = fn(p)
+        times.append(time.perf_counter() - t0)
+        if after is not None:
+            after(p, r)
+    return times

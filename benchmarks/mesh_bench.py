@@ -48,6 +48,11 @@ from repro.core.moment_store import (DeviceMomentStore, DeviceStack,
 from repro.core.types import IslaParams
 from repro.launch.mesh import make_cell_mesh
 
+try:
+    from ._timing import time_best
+except ImportError:          # script mode: python benchmarks/mesh_bench.py
+    from _timing import time_best
+
 MU, SIGMA = 100.0, 20.0
 PARAMS = IslaParams()
 
@@ -100,15 +105,9 @@ def _tick(stack, n_groups, p):
 
 
 def _time_stack(stack, n_groups, passes):
-    """(best us/tick, last tick output); min over rounds — the usual
-    noisy-shared-host estimator of achievable latency."""
-    _tick(stack, n_groups, passes[0])  # warm-up / compile
-    best, out = float("inf"), None
-    for p in passes[1:]:
-        t0 = time.perf_counter()
-        out = _tick(stack, n_groups, p)
-        best = min(best, (time.perf_counter() - t0) * 1e6)
-    return best, out
+    """(best us/tick, last tick output) via the shared min-over-rounds
+    harness (warm-up/compile on the first pass)."""
+    return time_best(lambda p: _tick(stack, n_groups, p), passes)
 
 
 def _max_rel_rows(out_a, out_b):

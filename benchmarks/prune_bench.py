@@ -39,6 +39,11 @@ from repro.core.moment_store import DeviceMomentStore
 from repro.core.multiquery import MultiQueryExecutor, table_sampler
 from repro.core.types import IslaParams, Predicate, ZoneMap
 
+try:
+    from ._timing import time_best
+except ImportError:          # script mode: python benchmarks/prune_bench.py
+    from _timing import time_best
+
 MU, SIGMA = 100.0, 12.0
 
 
@@ -217,19 +222,17 @@ def tick_speed(smoke=False):
         rng = np.random.default_rng(8)
         stack, params = _stack_pair(n_blocks, n_groups, sizes)
         stack.block_compaction = compaction
-        vals, gids, quotas = _pruned_pass(rng, n_blocks, n_groups, active,
-                                          quota)
-        stack.tick(params, values=vals, quotas=quotas,
-                   dense=([None, gids], [None, None]))  # compile
-        t_best = float("inf")
-        for _ in range(rounds):
-            vals, gids, quotas = _pruned_pass(rng, n_blocks, n_groups,
-                                              active, quota)
-            t0 = time.perf_counter()
-            stack.tick(params, values=vals, quotas=quotas,
-                       dense=([None, gids], [None, None]))
-            t_best = min(t_best, (time.perf_counter() - t0) * 1e6)
-        best[compaction] = t_best
+        # rounds + 1 pre-generated passes: the first warms/compiles
+        # (same RNG stream as the old draw-inside-the-loop shape).
+        passes = [_pruned_pass(rng, n_blocks, n_groups, active, quota)
+                  for _ in range(rounds + 1)]
+
+        def tick_fn(p, stack=stack, params=params):
+            vals, gids, quotas = p
+            return stack.tick(params, values=vals, quotas=quotas,
+                              dense=([None, gids], [None, None]))
+
+        best[compaction], _ = time_best(tick_fn, passes)
     speedup = best[False] / max(best[True], 1e-9)
     rows = [
         (f"full_axis_pruned_tick/b{n_blocks}", best[False], 1.0),

@@ -30,7 +30,8 @@ def _sectioned(module, sections):
 
 def main() -> None:
     from . import (device_bench, mesh_bench, multiquery_bench, online_bench,
-                   paper_tables, prune_bench, serve_bench, telemetry_bench)
+                   paper_tables, pipeline_bench, prune_bench, serve_bench,
+                   telemetry_bench)
 
     benches = [
         multiquery_bench.batched_vs_sequential_calculation,
@@ -58,6 +59,8 @@ def main() -> None:
                    ("sample_savings", "residual_parity", "transfer_audit",
                     "tick_speed")),
         _sectioned(serve_bench, ("traffic_replay", "progressive_stream")),
+        _sectioned(pipeline_bench,
+                   ("steady_throughput", "x64_parity", "transfer_audit")),
     ]
     print("name,us_per_call,derived")
     failures = 0

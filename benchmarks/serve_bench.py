@@ -41,6 +41,11 @@ from repro.core.multiquery import MultiQueryExecutor, table_sampler
 from repro.core.types import IslaParams, Predicate
 from repro.launch.serve import IslaAdmissionLoop
 
+try:
+    from ._timing import time_each
+except ImportError:          # script mode: python benchmarks/serve_bench.py
+    from _timing import time_each
+
 MU, SIGMA = 100.0, 12.0
 
 
@@ -119,20 +124,21 @@ def _tick_traffic(rng, warm, execute, weak, qpt):
 
 
 def _drive(loop, traffic_per_tick):
-    """Submit + tick each steady round; returns per-tick seconds."""
-    times = []
-    for batch in traffic_per_tick:
+    """Submit + tick each steady round; returns per-tick seconds
+    (submission and the drain/assert run untimed around each tick)."""
+    def _submit(batch):
         for q in batch:
             loop.submit(q)
-        t0 = time.perf_counter()
-        done = loop.tick()
-        times.append(time.perf_counter() - t0)
+
+    def _check(batch, done):
         while loop.pending:  # FIFO overflow safety; no-op normally
             done += loop.tick()
         if len(done) != len(batch):
             raise AssertionError(
                 f"tick answered {len(done)} of {len(batch)} queries")
-    return times
+
+    return time_each(lambda _batch: loop.tick(), traffic_per_tick,
+                     setup=_submit, after=_check)
 
 
 def traffic_replay(smoke=False):

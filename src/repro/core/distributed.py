@@ -17,6 +17,7 @@ the collective payload is constant.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
 from typing import Optional, Tuple
 
@@ -205,6 +206,64 @@ def h2d(x, dtype=None) -> jnp.ndarray:
     tick in a ``jax.transfer_guard("disallow")``."""
     with jax.transfer_guard("allow"):
         return jnp.asarray(x, dtype=dtype)
+
+
+def d2h_async(x):
+    """Launch/readback decoupling: start the device->host copy of ``x``
+    (the tick's O(groups) stat rows) WITHOUT blocking, and return ``x``.
+
+    The pipelined tick dispatches a mode-group's fused launch, calls this
+    on the returned rows handle, and keeps staging the next group's
+    samples; the bytes stream back concurrently and the eventual
+    ``np.asarray`` at compose time finds them already landed (or blocks
+    only for the remainder).  This is an EXPLICIT transfer — sanctioned
+    under ``jax.transfer_guard("disallow")``, like the ``np.asarray``
+    readout it front-runs.  Arrays without an async copy path (e.g.
+    tracers, or sharded layouts that must gather first) pass through
+    untouched — the later materialization just pays the full sync."""
+    try:
+        x.copy_to_host_async()
+    except (AttributeError, RuntimeError, ValueError):
+        pass
+    return x
+
+
+_launch_pool = None
+
+
+def launch_pool():
+    """The pipelined tick's single launch worker (lazy, process-wide).
+
+    One worker thread runs every fused launch in submission order —
+    exactly the serial launch order, so per-cell merge order (and with
+    it bit parity) is untouched — while the MAIN thread keeps drawing
+    and pane-building the next chunk.  The overlap is real even on
+    runtimes whose dispatch executes synchronously: jax releases the
+    GIL inside the native XLA execute (and device_put copy), which is
+    where the launch wall time lives.  ONE worker globally also
+    serializes ticks against the same stack's donated state."""
+    global _launch_pool
+    if _launch_pool is None:
+        from concurrent.futures import ThreadPoolExecutor
+        _launch_pool = ThreadPoolExecutor(max_workers=1,
+                                          thread_name_prefix="isla-launch")
+    return _launch_pool
+
+
+@contextlib.contextmanager
+def stage_trace(name: str):
+    """Profiler stage marker for the pipelined tick: wraps a stage (h2d
+    staging, the fused launch dispatch, readback) in a
+    ``jax.profiler.TraceAnnotation`` + ``jax.named_scope`` so device
+    traces show pipeline stage names.  No-ops on runtimes without the
+    profiler hooks."""
+    with contextlib.ExitStack() as es:
+        try:
+            es.enter_context(jax.profiler.TraceAnnotation(name))
+            es.enter_context(jax.named_scope(name))
+        except (AttributeError, TypeError, ValueError):
+            pass
+        yield
 
 
 def _segment_carry_sum(prior: jnp.ndarray, cols, seg: jnp.ndarray,

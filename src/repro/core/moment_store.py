@@ -40,8 +40,10 @@ round-count contract).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import math
+import time
 from typing import Optional, Sequence
 
 import numpy as np
@@ -398,6 +400,90 @@ def _dense_panes(values: np.ndarray, quotas: np.ndarray):
     return v2d, pad, vmask
 
 
+class _LazyRows:
+    """Deferred stat-row readout of ONE fused launch, shared by every
+    store of its stack.
+
+    The pipelined tick must not block the host on ``np.asarray(rows)``
+    while later mode-groups still have samples to draw and stage, so
+    ``_install_stats(..., defer=True)`` hands each store a slice view of
+    this holder instead of a materialized numpy array: the device handle
+    is kept (its d2h already started via ``distributed.d2h_async``), and
+    the ONE blocking ``np.asarray`` happens the first time any consumer
+    — the composer, a ledger read, next tick's budget split — actually
+    needs the numbers.  ``timings`` (optional MutableMapping) accumulates
+    the blocking remainder under ``"readback"`` seconds."""
+
+    __slots__ = ("_dev", "_np", "_timings")
+
+    def __init__(self, dev, timings=None) -> None:
+        self._dev = dev
+        self._np = None
+        self._timings = timings
+
+    def resolve(self) -> np.ndarray:
+        if self._np is None:
+            t0 = time.perf_counter()
+            self._np = np.asarray(self._dev, dtype=np.float64)  # d2h sync
+            if self._timings is not None:
+                self._timings["readback"] = (
+                    self._timings.get("readback", 0.0)
+                    + time.perf_counter() - t0)
+            self._dev = None
+        return self._np
+
+
+class _RowsView:
+    """One store's (n_groups, 9) slice of a ``_LazyRows`` holder.
+
+    Quacks enough numpy to satisfy direct ``tick()`` callers (indexing,
+    ``np.asarray``, ``shape``); the store's ``_rows`` property swaps the
+    view for the materialized slice on first access, so steady-state
+    consumers pay the laziness check only once per tick."""
+
+    __slots__ = ("_holder", "_r0", "_r1")
+
+    def __init__(self, holder: _LazyRows, r0: int, r1: int) -> None:
+        self._holder = holder
+        self._r0 = int(r0)
+        self._r1 = int(r1)
+
+    def materialize(self) -> np.ndarray:
+        return self._holder.resolve()[self._r0:self._r1]
+
+    def __array__(self, dtype=None, copy=None):
+        out = self.materialize()
+        return out.astype(dtype) if dtype is not None else out
+
+    def __getitem__(self, idx):
+        return self.materialize()[idx]
+
+    @property
+    def shape(self):
+        return self.materialize().shape
+
+
+class _PartialsSlice:
+    """Lazy host-side slice of a stacked per-cell partials array.
+
+    Slicing the device array eagerly (``partials[o0:o1]``) dispatches a
+    device slice op whose scalar start indices are an IMPLICIT h2d
+    upload — disallowed under ``jax.transfer_guard`` — and the
+    group-stat compose path never reads per-cell partials anyway.  The
+    d2h + slice run only if a host consumer materializes the view
+    (``partials_host``)."""
+
+    __slots__ = ("_partials", "_lo", "_hi")
+
+    def __init__(self, partials, lo: int, hi: int) -> None:
+        self._partials = partials
+        self._lo, self._hi = int(lo), int(hi)
+
+    def __array__(self, dtype=None, copy=None):
+        out = np.asarray(self._partials)[self._lo:self._hi]
+        return out.astype(dtype) if dtype is not None else out
+
+
 class DeviceMomentStore:
     """Device-resident mirror of ``MomentStore``: the stacked (group,
     block) moment rows, totals and per-block draw ledger live as jax
@@ -460,7 +546,8 @@ class DeviceMomentStore:
         # Per-tick stats cache (invalidated by any state change; keyed by
         # the solve configuration so a different mode re-solves).
         self._partials = None   # (n_cells,) device, scaled shifted units
-        self._rows = None       # (n_groups, 9) numpy, scaled shifted units
+        self._rows = None       # (n_groups, 9) numpy OR lazy _RowsView —
+        #                         see the _rows property below
         self._stats_valid = False
         self._stats_cfg = None  # (params, mode, geometry) of the cache
         self._stack = None      # cached single-store DeviceStack
@@ -517,6 +604,24 @@ class DeviceMomentStore:
         self._detach()
         self._ns_dev = v
         self._stats_valid = False
+
+    @property
+    def _rows(self):
+        """Cached (n_groups, 9) group-stat rows, float64 numpy.
+
+        A pipelined tick installs a lazy ``_RowsView`` (the launch's rows
+        still streaming d2h); the first read materializes it — the
+        deferred sync the pipeline moved out of the launch stage — and
+        caches the numpy slice so every later read is a plain attribute."""
+        src = self._rows_src
+        if isinstance(src, _RowsView):
+            src = src.materialize()
+            self._rows_src = src
+        return src
+
+    @_rows.setter
+    def _rows(self, v):
+        self._rows_src = v
 
     # -- construction ------------------------------------------------------
 
@@ -820,6 +925,11 @@ class DeviceStack:
         # already O(matched samples) and owns the bit-parity contract).
         self.block_compaction = True
         self._active_cache = {}  # active-set bytes -> device index pair
+        # Pipelined (deferred-stats) ticks ping-pong through at most TWO
+        # in-flight launches: the host may stage chunk k+1's sample panes
+        # while chunk k computes, but blocks on chunk k-1 first — bounding
+        # live pane buffers to the classic double-buffer depth.
+        self._inflight = collections.deque()
         # Adopt the stores: the stacked tensors become the authoritative
         # resident state (built once — steady ticks donate them in place,
         # no per-tick concat/split churn).  A store reads its slice
@@ -884,25 +994,46 @@ class DeviceStack:
         # every store's moments in device memory.
         self._state = None
         self._sk_cells = None
+        self._inflight.clear()
         self._released = True
 
-    def _install_stats(self, partials, rows, cfg):
-        rows_np = np.asarray(rows, dtype=np.float64)  # d2h: stats, O(rows)
-        if len(self.stores) == 1:
-            st = self.stores[0]
-            st._partials, st._rows = partials, rows_np
-            st._stats_valid = True
-            st._stats_cfg = cfg
-            return [(partials, rows_np)]
+    def _install_stats(self, partials, rows, cfg, defer=False,
+                       timings=None):
+        """Hand each store its slice of the launch's stats.
+
+        ``defer=False`` (the serial route): one blocking ``np.asarray``
+        materializes the rows now — the pre-pipeline behavior, byte for
+        byte.  ``defer=True`` (the pipelined route): the d2h is only
+        STARTED (``distributed.d2h_async``) and each store gets a lazy
+        ``_RowsView``; the host returns to drawing/staging the next
+        mode-group and the sync moves to whoever first reads the rows."""
+        from . import distributed as D
+
+        if defer:
+            holder = _LazyRows(D.d2h_async(rows), timings)
+            self._inflight.append(rows)
+            while len(self._inflight) > 2:  # double-buffer depth
+                self._inflight.popleft().block_until_ready()
+        else:
+            t0 = time.perf_counter()
+            rows_np = np.asarray(rows, dtype=np.float64)  # d2h: stats
+            if timings is not None:
+                timings["readback"] = (timings.get("readback", 0.0)
+                                       + time.perf_counter() - t0)
         out = []
         for k, st in enumerate(self.stores):
-            o0, o1 = int(self.offsets[k]), int(self.offsets[k + 1])
             r0, r1 = int(self.row_offsets[k]), int(self.row_offsets[k + 1])
-            st._partials = partials[o0:o1]
-            st._rows = rows_np[r0:r1]
+            if len(self.stores) == 1:
+                st._partials = partials
+            else:
+                o0, o1 = int(self.offsets[k]), int(self.offsets[k + 1])
+                st._partials = _PartialsSlice(partials, o0, o1)
+            st._rows = (_RowsView(holder, r0, r1) if defer
+                        else rows_np[r0:r1] if len(self.stores) > 1
+                        else rows_np)
             st._stats_valid = True
             st._stats_cfg = cfg
-            out.append((st._partials, st._rows))
+            out.append((st._partials, st._rows_src))
         return out
 
     # fp32 accumulators lose integer exactness at 2^24; warn with margin
@@ -1003,7 +1134,8 @@ class DeviceStack:
              geometry=None, values: Optional[np.ndarray] = None,
              seg: Optional[np.ndarray] = None,
              quotas: Optional[np.ndarray] = None,
-             dense=None, count_round: bool = True):
+             dense=None, count_round: bool = True, timings=None,
+             defer_stats: bool = False):
         """One continuation round for every store in the stack.
 
         Two sample payloads, one launch either way:
@@ -1030,6 +1162,14 @@ class DeviceStack:
         answers and the numpy group-stat rows, both in EACH STORE'S scaled
         shifted units (``DeviceMomentStore.partials_host`` / the
         executor's composer un-scale per store).
+
+        ``timings`` (optional dict) accumulates per-stage wall seconds
+        under ``"h2d"``/``"launch"``/``"readback"``.  ``defer_stats=True``
+        is the pipelined route: the launch is dispatched but the stat-row
+        readback only STARTS (async d2h) — the returned rows are lazy
+        views that block on first access, letting the host stage the next
+        mode-group while this one computes.  At most two launches stay
+        in flight (classic double-buffer depth).
         """
         import jax.numpy as jnp
 
@@ -1047,13 +1187,23 @@ class DeviceStack:
         if values is None or n_draw == 0:
             if all(st._stats_valid and st._stats_cfg == cfg
                    for st in self.stores):
-                return [(st._partials, st._rows) for st in self.stores]
+                # _rows_src keeps a pipelined tick's lazy views lazy —
+                # going through the property here would force the sync.
+                return [(st._partials, st._rows_src)
+                        for st in self.stores]
             mom_s, mom_l, totals, ns = self._state
-            partials, rows = D.fused_solve(
-                mom_s, mom_l, totals, ns, self._sketch0_cells(),
-                self._sizes, self._inv_scale, params=params, mode=mode,
-                geometry=geometry, n_groups_list=self.n_groups_list)
-            return self._install_stats(partials, rows, cfg)
+            t0 = time.perf_counter()
+            with D.stage_trace("isla:launch"):
+                partials, rows = D.fused_solve(
+                    mom_s, mom_l, totals, ns, self._sketch0_cells(),
+                    self._sizes, self._inv_scale, params=params,
+                    mode=mode, geometry=geometry,
+                    n_groups_list=self.n_groups_list)
+            if timings is not None:
+                timings["launch"] = (timings.get("launch", 0.0)
+                                     + time.perf_counter() - t0)
+            return self._install_stats(partials, rows, cfg,
+                                       defer=defer_stats, timings=timings)
 
         values = np.asarray(values, dtype=np.float64).reshape(-1)
         quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
@@ -1087,6 +1237,7 @@ class DeviceStack:
                 pane_quotas, _, active_cells = cp
             else:
                 pane_quotas, active_cells = quotas, None
+            t_h = time.perf_counter()
             q_dev = D.h2d(pane_quotas.astype(np.float64), self.dtype)
             v2d, pad, vmask = _dense_panes(pane_vals, pane_quotas)
             # Dedupe shared panes by host-array identity into slot
@@ -1119,18 +1270,29 @@ class DeviceStack:
                     seen_v[id(valid)] = len(valid_panes)
                     valid_slots.append(len(valid_panes))
                     valid_panes.append(D.h2d(m2d, self.dtype))
-            mom_s, mom_l, totals, ns, partials, rows = D.fused_tick_dense(
-                mom_s, mom_l, totals, ns, D.h2d(v2d, self.dtype),
-                D.h2d(pad, self.dtype), q_dev, tuple(gid_panes),
-                tuple(valid_panes), self._bound_rows,
-                self._sketch0_cells(), self._sizes, self._inv_scale,
-                active_cells,
-                params=params, mode=mode, geometry=geometry,
-                n_groups_list=self.n_groups_list,
-                gid_slots=tuple(gid_slots),
-                valid_slots=tuple(valid_slots),
-                key_affine=key_affine,
-                bound_slots=self._bound_slots)
+            v_dev = D.h2d(v2d, self.dtype)
+            pad_dev = D.h2d(pad, self.dtype)
+            if timings is not None:
+                timings["h2d"] = (timings.get("h2d", 0.0)
+                                  + time.perf_counter() - t_h)
+            t_l = time.perf_counter()
+            with D.stage_trace("isla:launch"):
+                mom_s, mom_l, totals, ns, partials, rows = \
+                    D.fused_tick_dense(
+                        mom_s, mom_l, totals, ns, v_dev,
+                        pad_dev, q_dev, tuple(gid_panes),
+                        tuple(valid_panes), self._bound_rows,
+                        self._sketch0_cells(), self._sizes,
+                        self._inv_scale, active_cells,
+                        params=params, mode=mode, geometry=geometry,
+                        n_groups_list=self.n_groups_list,
+                        gid_slots=tuple(gid_slots),
+                        valid_slots=tuple(valid_slots),
+                        key_affine=key_affine,
+                        bound_slots=self._bound_slots)
+            if timings is not None:
+                timings["launch"] = (timings.get("launch", 0.0)
+                                     + time.perf_counter() - t_l)
         else:
             seg = np.asarray(seg, dtype=np.int32).reshape(-1)
             if values.shape != seg.shape:
@@ -1141,19 +1303,31 @@ class DeviceStack:
             v_pad[:m] = values
             s_pad = np.full(bucket, self.n_cells, dtype=np.int32)  # drop
             s_pad[:m] = seg
+            t_h = time.perf_counter()
             q_dev = D.h2d(quotas.astype(np.float64), self.dtype)
-            mom_s, mom_l, totals, ns, partials, rows = D.fused_tick(
-                mom_s, mom_l, totals, ns, D.h2d(v_pad, self.dtype),
-                D.h2d(s_pad, jnp.int32), q_dev, self._bounds,
-                self._sketch0_cells(), self._sizes, self._inv_scale,
-                params=params, mode=mode, geometry=geometry,
-                n_groups_list=self.n_groups_list)
+            v_dev = D.h2d(v_pad, self.dtype)
+            s_dev = D.h2d(s_pad, jnp.int32)
+            if timings is not None:
+                timings["h2d"] = (timings.get("h2d", 0.0)
+                                  + time.perf_counter() - t_h)
+            t_l = time.perf_counter()
+            with D.stage_trace("isla:launch"):
+                mom_s, mom_l, totals, ns, partials, rows = D.fused_tick(
+                    mom_s, mom_l, totals, ns, v_dev,
+                    s_dev, q_dev, self._bounds,
+                    self._sketch0_cells(), self._sizes, self._inv_scale,
+                    params=params, mode=mode, geometry=geometry,
+                    n_groups_list=self.n_groups_list)
+            if timings is not None:
+                timings["launch"] = (timings.get("launch", 0.0)
+                                     + time.perf_counter() - t_l)
         self._state = (mom_s, mom_l, totals, ns)
         for st in self.stores:
             st.n_sampled = st.n_sampled + quotas
             if count_round:
                 st.rounds += 1
-        return self._install_stats(partials, rows, cfg)
+        return self._install_stats(partials, rows, cfg,
+                                   defer=defer_stats, timings=timings)
 
 
 class _MeshPartialsView:
@@ -1331,18 +1505,33 @@ class MeshDeviceStack(DeviceStack):
             st._owner = None
         self._state = None
         self._sk_cells = None
+        self._inflight.clear()
         self._released = True
 
-    def _install_stats(self, partials, rows, cfg):
-        rows_np = np.asarray(rows, dtype=np.float64)  # d2h: stats only
+    def _install_stats(self, partials, rows, cfg, defer=False,
+                       timings=None):
+        from . import distributed as D
+
+        if defer:
+            holder = _LazyRows(D.d2h_async(rows), timings)
+            self._inflight.append(rows)
+            while len(self._inflight) > 2:  # double-buffer depth
+                self._inflight.popleft().block_until_ready()
+        else:
+            t0 = time.perf_counter()
+            rows_np = np.asarray(rows, dtype=np.float64)  # d2h: stats only
+            if timings is not None:
+                timings["readback"] = (timings.get("readback", 0.0)
+                                       + time.perf_counter() - t0)
         out = []
         for k, st in enumerate(self.stores):
             r0, r1 = int(self.row_offsets[k]), int(self.row_offsets[k + 1])
             st._partials = _MeshPartialsView(partials, self._cell_maps[k])
-            st._rows = rows_np[r0:r1]
+            st._rows = (_RowsView(holder, r0, r1) if defer
+                        else rows_np[r0:r1])
             st._stats_valid = True
             st._stats_cfg = cfg
-            out.append((st._partials, st._rows))
+            out.append((st._partials, st._rows_src))
         return out
 
     # -- the tick ----------------------------------------------------------
@@ -1410,7 +1599,8 @@ class MeshDeviceStack(DeviceStack):
              geometry=None, values: Optional[np.ndarray] = None,
              seg: Optional[np.ndarray] = None,
              quotas: Optional[np.ndarray] = None,
-             dense=None, count_round: bool = True):
+             dense=None, count_round: bool = True, timings=None,
+             defer_stats: bool = False):
         """``DeviceStack.tick`` on the mesh layout — identical payload
         contract except tagged ``seg`` carries MESH cell ids (from
         ``key_seg``), and each store's returned partials are lazy
@@ -1434,12 +1624,20 @@ class MeshDeviceStack(DeviceStack):
         if values is None or n_draw == 0:
             if all(st._stats_valid and st._stats_cfg == cfg
                    for st in self.stores):
-                return [(st._partials, st._rows) for st in self.stores]
+                return [(st._partials, st._rows_src)
+                        for st in self.stores]
             solve = D.mesh_solve_fn(self.mesh, params, mode, geometry,
                                     self.n_groups_list)
-            partials, rows = solve(*self._state, self._sketch0_cells(),
-                                   self._sizes, self._inv_scale)
-            return self._install_stats(partials, rows, cfg)
+            t0 = time.perf_counter()
+            with D.stage_trace("isla:launch"):
+                partials, rows = solve(*self._state,
+                                       self._sketch0_cells(),
+                                       self._sizes, self._inv_scale)
+            if timings is not None:
+                timings["launch"] = (timings.get("launch", 0.0)
+                                     + time.perf_counter() - t0)
+            return self._install_stats(partials, rows, cfg,
+                                       defer=defer_stats, timings=timings)
 
         values = np.asarray(values, dtype=np.float64).reshape(-1)
         quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
@@ -1465,6 +1663,7 @@ class MeshDeviceStack(DeviceStack):
                 pane_quotas, _, active_cells = cp
             else:
                 pane_quotas, active_cells = quotas, None
+            t_h = time.perf_counter()
             v2d, pad, vmask = _dense_panes(pane_vals, pane_quotas)
             pane_rows = (S * bl) if active_cells is None else v2d.shape[0]
             q_pad = np.zeros(pane_rows, dtype=np.float64)
@@ -1520,7 +1719,15 @@ class MeshDeviceStack(DeviceStack):
                     self._sizes, self._inv_scale)
             if active_cells is not None:
                 args = args + (active_cells,)
-            out = fn(*args)
+            if timings is not None:
+                timings["h2d"] = (timings.get("h2d", 0.0)
+                                  + time.perf_counter() - t_h)
+            t_l = time.perf_counter()
+            with D.stage_trace("isla:launch"):
+                out = fn(*args)
+            if timings is not None:
+                timings["launch"] = (timings.get("launch", 0.0)
+                                     + time.perf_counter() - t_l)
         else:
             seg = np.asarray(seg, dtype=np.int32).reshape(-1)
             if values.shape != seg.shape:
@@ -1533,23 +1740,33 @@ class MeshDeviceStack(DeviceStack):
             # retags it onto its local drop row.
             s_pad = np.full(bucket, self.n_cells_mesh, dtype=np.int32)
             s_pad[:m] = seg
+            t_h = time.perf_counter()
             q_pad = np.zeros(S * bl, dtype=np.float64)
             q_pad[:self.n_blocks] = quotas
             q_dev = D.mesh_h2d(self.mesh, q_pad, vec, self.dtype)
+            v_dev = D.mesh_h2d(self.mesh, v_pad, rep, self.dtype)
+            s_dev = D.mesh_h2d(self.mesh, s_pad, rep, jnp.int32)
+            if timings is not None:
+                timings["h2d"] = (timings.get("h2d", 0.0)
+                                  + time.perf_counter() - t_h)
             fn = D.mesh_tick_fn(self.mesh, params, mode, geometry,
                                 self.n_groups_list, not self._uniform)
-            out = fn(*self._state,
-                     D.mesh_h2d(self.mesh, v_pad, rep, self.dtype),
-                     D.mesh_h2d(self.mesh, s_pad, rep, jnp.int32),
-                     q_dev, self._bounds, self._sketch0_cells(),
-                     self._sizes, self._inv_scale)
+            t_l = time.perf_counter()
+            with D.stage_trace("isla:launch"):
+                out = fn(*self._state, v_dev, s_dev,
+                         q_dev, self._bounds, self._sketch0_cells(),
+                         self._sizes, self._inv_scale)
+            if timings is not None:
+                timings["launch"] = (timings.get("launch", 0.0)
+                                     + time.perf_counter() - t_l)
         mom_s, mom_l, totals, ns, partials, rows = out
         self._state = (mom_s, mom_l, totals, ns)
         for st in self.stores:
             st.n_sampled = st.n_sampled + quotas
             if count_round:
                 st.rounds += 1
-        return self._install_stats(partials, rows, cfg)
+        return self._install_stats(partials, rows, cfg,
+                                   defer=defer_stats, timings=timings)
 
 
 def proportional_allocate(amounts: np.ndarray, budget: int) -> np.ndarray:

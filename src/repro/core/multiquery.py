@@ -73,6 +73,7 @@ from __future__ import annotations
 import copy
 import dataclasses
 import math
+import time
 import warnings
 from collections import OrderedDict
 from typing import Callable, Mapping, Optional, Sequence, Tuple, Union
@@ -344,6 +345,31 @@ class _CachedAnswer:
     epoch: int = -1            # run epoch the stamp was last re-validated at
 
 
+# Pipelined-tick stage names, in execution order.  ``run(pipeline=True)``
+# and the device tier accumulate per-stage wall seconds under these keys
+# (``MultiQueryExecutor.last_stage_times``); serve's admission loop and
+# BENCH_pipeline.json report them.
+_STAGES = ("plan", "draw", "h2d", "launch", "readback", "compose")
+
+
+class _StagedGroup:
+    """One mode-group in flight between its launch and its compose.
+
+    ``run(pipeline=True)`` splits ``_execute_group`` at the
+    draw-and-launch / compose seam: ``_launch_group`` dispatches the
+    fused tick (stats deferred — the device is still computing when it
+    returns) and parks everything the compose half needs here;
+    ``_compose_group`` picks it up one mode-group later, after the NEXT
+    group's launch is already in flight."""
+
+    __slots__ = ("plan", "mg", "pass_id", "rng", "route",
+                 "deadline_samples", "persistent", "budget_alloc",
+                 "chunk_blocks", "default_mode", "group_stores",
+                 "key_aggs", "keys", "dstores", "stack",
+                 "device_resident", "covered", "new_samples", "timings",
+                 "pending")
+
+
 class MultiQueryExecutor:
     """Shares one pilot + one tagged pass per mode-group across N queries.
 
@@ -441,6 +467,11 @@ class MultiQueryExecutor:
         self.answers_cached = 0
         self.answers_subsumed = 0
         self._run_epoch = 0  # bumped per run(); gates ledger re-validation
+        # Pipelined-tick telemetry: per-stage wall seconds of the LAST
+        # run() (plan, draw, h2d, launch, readback, compose) — serve's
+        # admission loop accumulates these per tick.
+        self.last_stage_times: "dict[str, float]" = {}
+        self.plans_prefetched = 0  # cross-tick prefetch_plan() warm hits
 
     def reset_stores(self) -> None:
         """Drop all warm stores (host and device-resident) and the pilot
@@ -1231,6 +1262,27 @@ class MultiQueryExecutor:
             self.plan_cache_evictions += 1
         return plan
 
+    def prefetch_plan(self, queries: Sequence[IslaQuery],
+                      mode: str = "calibrated", route: str = "host",
+                      rate_override: Optional[float] = None,
+                      sigma_guess: Optional[float] = None) -> bool:
+        """Cross-tick plan prefetch: compile (or touch) the PlanCache
+        entry for ``queries`` NOW — e.g. while the serve loop sits idle
+        between ticks with the next tick's batch already queued — so
+        that tick's plan stage is a pure cache hit.
+
+        Warm planning consumes no RNG against the frozen pilot, so the
+        prefetch is stream-invisible: the next ``run()``'s draws are
+        bit-identical whether or not it happened.  Returns False (no-op)
+        on a cold executor (no frozen anchor — cold planning WOULD
+        consume RNG) or an empty batch."""
+        if self._anchor is None or not queries:
+            return False
+        self._plan_cached(list(queries), None, mode, route,
+                          rate_override, sigma_guess)
+        self.plans_prefetched += 1
+        return True
+
     def _cache_answer(self, q: IslaQuery, ans: QueryAnswer, skey: StoreKey,
                       stamp: int, default_mode: str) -> None:
         """Record an earned, fully-covered answer for subsumption service.
@@ -1611,7 +1663,10 @@ class MultiQueryExecutor:
                               dstores: dict, draw: np.ndarray,
                               rng: np.random.Generator,
                               mg: ModeGroup,
-                              chunk_blocks: Optional[int]) -> None:
+                              chunk_blocks: Optional[int],
+                              timings=None,
+                              defer_stats: bool = False,
+                              launch_async: bool = False) -> "list":
         """The device-resident pass: the SAME chunked row draw as the
         host path (shared ``iter_chunked_draws`` contract — identical RNG
         stream), but each chunk is folded into every key's store by ONE
@@ -1619,13 +1674,23 @@ class MultiQueryExecutor:
         bincounts.  Each key's samples enter the launch in that key's OWN
         anchor frame: the dense pane recovers it via the stack's static
         per-key affines, the tagged path translates/scales each key's
-        slice on the host."""
+        slice on the host.
+
+        ``launch_async=True`` (the pipelined route) submits each chunk's
+        pane build + fused launch to the shared single-thread
+        ``distributed.launch_pool`` and returns the pending futures: the
+        MAIN thread immediately draws the next chunk's rows (the RNG
+        stays main-thread, in serial order) while the worker stages and
+        launches this one.  The single worker runs launches in
+        submission order — the serial order — so per-cell merge order
+        and bit parity are untouched; queue depth is bounded at two
+        chunks of drawn rows."""
         import jax.numpy as jnp
 
         dev_mode = self._device_mode(mg.mode)
         dense = stack.dtype != jnp.float64
-        for chunk, columns, block_ids in self._iter_row_chunks(
-                draw, rng, chunk_blocks):
+
+        def run_chunk(chunk, columns, block_ids):
             raw = self._measure_of(columns)
             if dense:
                 # Dense block-major payload: the full chunk stream once,
@@ -1653,8 +1718,9 @@ class MultiQueryExecutor:
                            geometry=mg.geometry, values=raw,
                            quotas=chunk.chunk_quotas,
                            dense=(key_gids, key_valids),
-                           count_round=chunk.first)
-                continue
+                           count_round=chunk.first,
+                           timings=timings, defer_stats=defer_stats)
+                return
             segs, vals = [], []
             shifted = {}  # (shift, scale) -> prepared stream (shared)
             for k_i, key in enumerate(keys):
@@ -1677,7 +1743,21 @@ class MultiQueryExecutor:
                        values=np.concatenate(vals),
                        seg=np.concatenate(segs),
                        quotas=chunk.chunk_quotas,
-                       count_round=chunk.first)
+                       count_round=chunk.first,
+                       timings=timings, defer_stats=defer_stats)
+
+        pending = []
+        for chunk, columns, block_ids in self._iter_row_chunks(
+                draw, rng, chunk_blocks):
+            if not launch_async:
+                run_chunk(chunk, columns, block_ids)
+                continue
+            from .distributed import launch_pool
+            pending.append(launch_pool().submit(run_chunk, chunk,
+                                                columns, block_ids))
+            if len(pending) > 2:
+                pending[-3].result()  # bound queued drawn-row memory
+        return pending
 
     def _keyed_stats_device(self, dst: DeviceMomentStore) -> KeyedPass:
         """``_keyed_stats`` served from the device tick's group-stat rows:
@@ -1936,16 +2016,17 @@ class MultiQueryExecutor:
             out[key] = st
         return out, key_aggs
 
-    def _execute_group(self, plan: QueryPlan, mg: ModeGroup, pass_id: int,
-                       rng: np.random.Generator, route: str,
-                       deadline_samples: Optional[int],
-                       prebuilt: Optional[Tuple[dict, dict]] = None,
-                       persistent: bool = False,
-                       budget_alloc: Optional[int] = None,
-                       chunk_blocks: Optional[int] = None,
-                       default_mode: str = "calibrated") -> "list":
-        """One shared sampling pass; every query of the mode-group composes
-        from it (per distinct (where, group_by) key, one re-segmentation).
+    def _launch_group(self, plan: QueryPlan, mg: ModeGroup, pass_id: int,
+                      rng: np.random.Generator, route: str,
+                      deadline_samples: Optional[int],
+                      prebuilt: Optional[Tuple[dict, dict]] = None,
+                      persistent: bool = False,
+                      budget_alloc: Optional[int] = None,
+                      chunk_blocks: Optional[int] = None,
+                      default_mode: str = "calibrated",
+                      defer_stats: bool = False,
+                      timings=None) -> _StagedGroup:
+        """The draw-and-launch half of one mode-group's shared pass.
 
         ``prebuilt`` is this mode-group's ``(key -> store, key -> aggs)``
         pair from ``_group_stores`` (built once per run).  One-shot
@@ -1954,7 +2035,14 @@ class MultiQueryExecutor:
         per-block sample DEFICIT the batch still owes (zero draws when
         every store is already ahead of every quota), optionally scaled
         down to ``budget_alloc`` new samples.
-        """
+
+        With ``defer_stats=True`` (the pipelined route) the fused launch
+        is dispatched but its stat-row readback only STARTS — the
+        returned :class:`_StagedGroup` can be composed later, while the
+        device still computes and the host stages the next group."""
+        t0 = time.perf_counter()
+        h0 = timings.get("h2d", 0.0) if timings is not None else 0.0
+        l0 = timings.get("launch", 0.0) if timings is not None else 0.0
         target = self._target_quotas(mg, deadline_samples)
         group_stores, key_aggs = prebuilt
         # Device-resident serving: persistent stores on route="device"
@@ -1963,6 +2051,7 @@ class MultiQueryExecutor:
         # is one fused launch per mode-group and the host reads only
         # scalar answers / group stats.
         device_resident = bool(persistent and route in ("device", "mesh"))
+        keys = dstores = stack = None
         if device_resident:
             keys, dstores, stack = self._device_group(mg, group_stores,
                                                       route)
@@ -1983,19 +2072,102 @@ class MultiQueryExecutor:
         else:
             draw = target
         new_samples = int(draw.sum())
+        pending = []
         if device_resident:
             if new_samples:
-                self._draw_and_tick_device(stack, keys, dstores, draw, rng,
-                                           mg, chunk_blocks)
+                pending = self._draw_and_tick_device(
+                    stack, keys, dstores, draw, rng, mg, chunk_blocks,
+                    timings=timings, defer_stats=defer_stats,
+                    launch_async=defer_stats)
             else:
                 # Warm repeat: re-solve resident moments (served from the
                 # stats cache when nothing changed — zero transfers).
                 stack.tick(self.params, mode=self._device_mode(mg.mode),
-                           geometry=mg.geometry)
+                           geometry=mg.geometry, timings=timings,
+                           defer_stats=defer_stats)
         elif new_samples:
             self._draw_and_ingest(group_stores, draw, rng,
                                   chunk_blocks=chunk_blocks)
+        if timings is not None:
+            # "draw" is the host-side remainder of this stage: everything
+            # that is not a pane upload or a fused dispatch (RNG draws,
+            # pane building, deficit math).  With async launches the
+            # worker's h2d/launch clocks run CONCURRENTLY with this
+            # thread's draws, so they are not subtracted — the stage sum
+            # exceeding the wall clock is exactly the measured overlap.
+            spent = time.perf_counter() - t0
+            if not pending:
+                spent -= ((timings.get("h2d", 0.0) - h0)
+                          + (timings.get("launch", 0.0) - l0))
+            timings["draw"] = timings.get("draw", 0.0) + max(spent, 0.0)
+        sg = _StagedGroup()
+        sg.plan, sg.mg, sg.pass_id, sg.rng = plan, mg, pass_id, rng
+        sg.route, sg.deadline_samples = route, deadline_samples
+        sg.persistent, sg.budget_alloc = persistent, budget_alloc
+        sg.chunk_blocks, sg.default_mode = chunk_blocks, default_mode
+        sg.group_stores, sg.key_aggs = group_stores, key_aggs
+        sg.keys, sg.dstores, sg.stack = keys, dstores, stack
+        sg.device_resident, sg.covered = device_resident, covered
+        sg.new_samples, sg.timings = new_samples, timings
+        sg.pending = pending
+        return sg
 
+    def _group_stale(self, sg: _StagedGroup) -> bool:
+        """True when a per-key reset (drift) landed between ``sg``'s
+        launch and its compose: the staged stores are no longer the
+        executor's live stores for their keys, so composing from them
+        would serve pre-reset stats."""
+        if not sg.persistent:
+            return False
+        if sg.device_resident and sg.stack._released:
+            return True
+        for key in sg.group_stores:
+            skey = StoreKey(where=key[0], group_by=key[1],
+                            mode=sg.mg.mode)
+            if sg.device_resident:
+                if self._device_stores.get(skey) is not sg.dstores[key]:
+                    return True
+            elif self._stores.get(skey) is not sg.group_stores[key]:
+                return True
+        return False
+
+    def _compose_group(self, sg: _StagedGroup) -> "list":
+        """The compose half: every query of the mode-group composes from
+        the staged pass (per distinct (where, group_by) key, one
+        re-segmentation).  First access to a deferred stat row blocks on
+        the launch here — accounted as "readback", not "compose"."""
+        if sg.pending:
+            # Drain the group's async launches before anything reads (or
+            # stales) its stores: the wait is the pipeline's exposed
+            # device time, booked where the serial route exposed it.
+            t_w = time.perf_counter()
+            for f in sg.pending:
+                f.result()
+            sg.pending = []
+            if sg.timings is not None:
+                sg.timings["readback"] = (
+                    sg.timings.get("readback", 0.0)
+                    + time.perf_counter() - t_w)
+        if self._group_stale(sg):
+            # A drift reset dropped one of this group's keys after its
+            # launch was staged.  The reset key's store went cold, so the
+            # staged stats must not be served: rebuild the prebuilt pair
+            # against the live store dict and re-run the group's launch
+            # (the fresh draw legitimately advances the RNG — the reset
+            # key NEEDS post-reset samples).
+            prebuilt = self._group_stores(sg.plan, sg.mg, self._stores)
+            sg = self._launch_group(
+                sg.plan, sg.mg, sg.pass_id, sg.rng, sg.route,
+                sg.deadline_samples, prebuilt, sg.persistent,
+                sg.budget_alloc, sg.chunk_blocks, sg.default_mode,
+                timings=sg.timings)
+        plan, mg, pass_id, route = sg.plan, sg.mg, sg.pass_id, sg.route
+        group_stores, key_aggs = sg.group_stores, sg.key_aggs
+        device_resident, dstores = sg.device_resident, sg.dstores
+        covered, new_samples = sg.covered, sg.new_samples
+        default_mode, timings = sg.default_mode, sg.timings
+        t0 = time.perf_counter()
+        r0 = timings.get("readback", 0.0) if timings is not None else 0.0
         sp = None  # the plain pass is composed lazily: an all-relational
         keyed = {}  # batch never pays for it
         out = []
@@ -2034,7 +2206,30 @@ class MultiQueryExecutor:
                     q, ans, StoreKey(where=key[0], group_by=key[1],
                                      mode=mg.mode), stamp, default_mode)
             out.append((i, ans))
+        if timings is not None:
+            # The blocking d2h a lazy row resolved during compose is
+            # already booked under "readback"; keep compose pure.
+            rb = timings.get("readback", 0.0) - r0
+            timings["compose"] = (timings.get("compose", 0.0)
+                                  + (time.perf_counter() - t0) - rb)
         return out
+
+    def _execute_group(self, plan: QueryPlan, mg: ModeGroup, pass_id: int,
+                       rng: np.random.Generator, route: str,
+                       deadline_samples: Optional[int],
+                       prebuilt: Optional[Tuple[dict, dict]] = None,
+                       persistent: bool = False,
+                       budget_alloc: Optional[int] = None,
+                       chunk_blocks: Optional[int] = None,
+                       default_mode: str = "calibrated",
+                       timings=None) -> "list":
+        """One shared sampling pass, launched and composed back to back —
+        the serial route (``run(pipeline=False)``).  The pipelined route
+        calls the same two halves with other groups' work in between."""
+        return self._compose_group(self._launch_group(
+            plan, mg, pass_id, rng, route, deadline_samples, prebuilt,
+            persistent, budget_alloc, chunk_blocks, default_mode,
+            timings=timings))
 
     def _budget_allocations(self, plan: QueryPlan,
                             queries: Sequence[IslaQuery],
@@ -2114,7 +2309,8 @@ class MultiQueryExecutor:
             budget: Optional[int] = None,
             chunk_blocks: Optional[int] = None,
             drift_check: Optional[float] = None,
-            budget_floor: Optional[int] = None) -> "list[QueryAnswer]":
+            budget_floor: Optional[int] = None,
+            pipeline: bool = False) -> "list[QueryAnswer]":
         """Answer every query from one shared sampling pass per mode-group.
 
         Parameters
@@ -2174,6 +2370,16 @@ class MultiQueryExecutor:
             ``split_budget(min_per_store=...)`` — a flood of new
             predicates cannot starve a nearly-converged store's small
             top-up (admission-loop QoS).
+        pipeline : bool, optional
+            Software-pipeline the mode-group passes: while group *k*'s
+            fused launch runs on device, the host draws and stages group
+            *k+1*'s samples, and group *k−1* composes from stat rows
+            whose d2h was started asynchronously (``defer_stats``) — no
+            blocking sync until a compose actually consumes a row.  The
+            RNG draw order and per-cell merge order are UNCHANGED (only
+            *when* each stage executes moves; compose consumes no RNG),
+            so answers are bit-identical (x64) to the serial route.
+            Per-stage wall times land in ``last_stage_times``.
 
         Returns
         -------
@@ -2207,6 +2413,8 @@ class MultiQueryExecutor:
         exactly the ``"device"`` path.
         """
         self._run_epoch += 1  # store ledgers may move: lookups re-validate
+        times = self.last_stage_times = dict.fromkeys(_STAGES, 0.0)
+        t_plan = time.perf_counter()
         if budget is not None and not incremental:
             raise ValueError(
                 "budget caps the incremental deficit top-up; without "
@@ -2251,17 +2459,44 @@ class MultiQueryExecutor:
                                           deadline_samples, budget,
                                           mg_stores, budget_floor)
                  if incremental else {})
+        times["plan"] = time.perf_counter() - t_plan
         answers = [None] * len(queries)
-        for pass_id, mg in enumerate(plan.mode_groups):
-            for i, ans in self._execute_group(
-                    plan, mg, pass_id, rng, route, deadline_samples,
-                    prebuilt=mg_stores[pass_id], persistent=incremental,
-                    budget_alloc=alloc.get(pass_id),
-                    chunk_blocks=chunk_blocks, default_mode=mode):
+
+        def _collect(results):
+            for i, ans in results:
                 # The cached plan's queries are priority-stripped; hand
                 # the caller back ITS query object.
                 ans.query = queries[i]
                 answers[i] = ans
+
+        if pipeline:
+            # Three-stage software pipeline over the mode-groups: group
+            # k's launch is dispatched with deferred stats, THEN group
+            # k-1 composes (its rows' async d2h has been progressing
+            # under group k's draw).  Draw order and merge order are the
+            # serial route's exactly — only the compose is delayed one
+            # group, and compose consumes no RNG.
+            staged_prev = None
+            for pass_id, mg in enumerate(plan.mode_groups):
+                staged = self._launch_group(
+                    plan, mg, pass_id, rng, route, deadline_samples,
+                    prebuilt=mg_stores[pass_id], persistent=incremental,
+                    budget_alloc=alloc.get(pass_id),
+                    chunk_blocks=chunk_blocks, default_mode=mode,
+                    defer_stats=True, timings=times)
+                if staged_prev is not None:
+                    _collect(self._compose_group(staged_prev))
+                staged_prev = staged
+            if staged_prev is not None:
+                _collect(self._compose_group(staged_prev))
+        else:
+            for pass_id, mg in enumerate(plan.mode_groups):
+                _collect(self._execute_group(
+                    plan, mg, pass_id, rng, route, deadline_samples,
+                    prebuilt=mg_stores[pass_id], persistent=incremental,
+                    budget_alloc=alloc.get(pass_id),
+                    chunk_blocks=chunk_blocks, default_mode=mode,
+                    timings=times))
         return answers
 
 

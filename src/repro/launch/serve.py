@@ -56,6 +56,16 @@ answer-so-far + shrinking-bound snapshots until each bound is earned:
 
   PYTHONPATH=src python -m repro.launch.serve --workload isla --smoke \
       --incremental --deadline-samples 20000 --tenants 2 --priority 4,1
+
+``--pipeline`` software-pipelines each tick: while one mode-group's fused
+launch runs on device, the host draws the next group's samples and the
+previous group composes from asynchronously fetched stat rows (answers are
+bit-identical — only WHEN stages run moves); between ticks the loop
+prefetches the queued batch's plan.  The per-tick log gains a stages[ms]
+segment (plan draw h2d launch readback compose):
+
+  PYTHONPATH=src python -m repro.launch.serve --workload isla --smoke \
+      --incremental --route device --pipeline
 """
 from __future__ import annotations
 
@@ -159,6 +169,14 @@ class IslaAdmissionLoop:
         snapshot to ``ticket.progress`` — and completes only when the
         bound is met.  Off (default), every ticket completes the tick it
         runs, degraded bounds reported honestly.
+    pipeline : bool, optional
+        Pipelined ticks: each ``run`` overlaps a mode-group's fused
+        launch with the next group's host draw and the previous group's
+        compose (``MultiQueryExecutor.run(pipeline=True)`` — answers
+        stay bit-identical), and between ticks the loop PREFETCHES the
+        plan-cache entry for the queued next batch while the device
+        would otherwise idle.  Per-stage wall times accumulate in
+        ``stage_seconds``.
 
     Examples
     --------
@@ -174,7 +192,8 @@ class IslaAdmissionLoop:
                  drift_check: Optional[float] = None,
                  budget_floor: Optional[int] = None,
                  admission: Optional[bool] = None,
-                 progressive: bool = False):
+                 progressive: bool = False,
+                 pipeline: bool = False):
         self.executor = executor
         self.rng = rng
         self.mode = mode
@@ -205,6 +224,7 @@ class IslaAdmissionLoop:
         self.admission = (self.incremental if admission is None
                           else bool(admission))
         self.progressive = bool(progressive)
+        self.pipeline = bool(pipeline)
         self._pending = collections.deque()
         self._inflight: "list[IslaTicket]" = []
         self._next_tid = 0
@@ -213,6 +233,9 @@ class IslaAdmissionLoop:
         self.samples_drawn = 0  # cumulative NEW samples across ticks
         self.deduped = 0        # tickets fanned out from an exact duplicate
         self.subsumed = 0       # tickets served from the answer cache
+        # Per-stage wall seconds (plan, draw, h2d, launch, readback,
+        # compose), accumulated over every executed tick's run().
+        self.stage_seconds: "dict[str, float]" = {}
 
     def submit(self, query) -> int:
         """Admit one query; returns its ticket id."""
@@ -247,6 +270,8 @@ class IslaAdmissionLoop:
             "plan_cache_misses": getattr(ex, "plan_cache_misses", 0),
             "plan_cache_evictions": getattr(ex, "plan_cache_evictions", 0),
             "answers_cached": getattr(ex, "answers_cached", 0),
+            "plans_prefetched": getattr(ex, "plans_prefetched", 0),
+            "stage_seconds": dict(self.stage_seconds),
         }
 
     @staticmethod
@@ -342,7 +367,11 @@ class IslaAdmissionLoop:
                 route=self.route, incremental=self.incremental,
                 budget=self.deadline_samples if self.incremental else None,
                 drift_check=self.drift_check,
-                budget_floor=self.budget_floor)
+                budget_floor=self.budget_floor,
+                pipeline=self.pipeline)
+            for k, v in getattr(self.executor, "last_stage_times",
+                                {}).items():
+                self.stage_seconds[k] = self.stage_seconds.get(k, 0.0) + v
             seen_passes = set()
             for t, a in zip(execute, answers):
                 if a.new_samples is not None \
@@ -392,8 +421,37 @@ class IslaAdmissionLoop:
         # Overflow returns to the FRONT of the queue, in order, ahead of
         # anything submitted after this tick started.
         self._pending.extendleft(reversed(overflow))
+        self._prefetch_pending()
         done.sort(key=lambda t: t.tid)
         return done
+
+    def _prefetch_pending(self) -> None:
+        """Cross-tick plan prefetch (pipelined loops only): with next
+        tick's queries already queued, touch/compile their PlanCache
+        entry NOW — planning is host-only Python that would otherwise
+        serialize with next tick's draws.  Best-effort: the predicted
+        batch mimics admission order + dedupe (subsumption serves are
+        not predicted); a mispredicted batch is just a plan-cache miss,
+        exactly as if no prefetch ran, and warm planning consumes no
+        RNG so the draw stream is unchanged either way."""
+        if not (self.pipeline and self.incremental and self._pending):
+            return
+        cand = list(self._pending)
+        if self.admission:
+            cand.sort(key=lambda t: -t.query.priority)
+            seen, batch = set(), []
+            for t in cand:
+                dk = self._dedupe_key(t.query)
+                if dk in seen:
+                    continue
+                seen.add(dk)
+                batch.append(t.query)
+                if len(batch) >= self.max_batch:
+                    break
+        else:
+            batch = [t.query for t in cand[:self.max_batch]]
+        self.executor.prefetch_plan(batch, mode=self.mode,
+                                    route=self.route)
 
     def run_until_drained(self, max_ticks: int = 1000
                           ) -> "list[IslaTicket]":
@@ -510,7 +568,8 @@ def serve_isla(args) -> None:
                              budget_floor=args.budget_floor,
                              admission=(False if args.no_admission
                                         else None),
-                             progressive=args.progressive)
+                             progressive=args.progressive,
+                             pipeline=args.pipeline)
     n_days = max(n_blocks // 2, 1)
     qrng = np.random.default_rng(args.seed + 2)
     t0 = time.perf_counter()
@@ -535,6 +594,11 @@ def serve_isla(args) -> None:
                      f"{s['plan_cache_misses'] - before['plan_cache_misses']}"
                      f"m, {s['subsumed'] - before['subsumed']} subsumed, "
                      f"{s['deduped'] - before['deduped']} deduped")
+        if args.pipeline:
+            b_st = before["stage_seconds"]
+            extra += ", stages[ms] " + " ".join(
+                f"{k}={1e3 * (v - b_st.get(k, 0.0)):.1f}"
+                for k, v in s["stage_seconds"].items())
         flight = (f", {loop.in_flight} in flight" if loop.in_flight else "")
         print(f"tick {loop._tick}: answered {len(done)} queries, "
               f"{loop.pending} pending{flight}{extra}")
@@ -633,6 +697,12 @@ def main():
                     help="OLA streaming (incremental): unearned answers "
                          "stay in flight, refine each tick, and complete "
                          "when their (e, beta) bound is met")
+    ap.add_argument("--pipeline", action="store_true",
+                    help="pipelined ticks: overlap each mode-group's "
+                         "fused launch with the next group's host draw "
+                         "and the previous group's compose (answers are "
+                         "bit-identical), prefetch next tick's plan "
+                         "between ticks, and log per-stage wall times")
     ap.add_argument("--no-admission", action="store_true",
                     help="disable the admission pipeline (plan cache "
                          "serving, dedupe, subsumption, priority order): "

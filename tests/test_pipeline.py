@@ -1,0 +1,239 @@
+"""Pipelined async tick (``MultiQueryExecutor.run(pipeline=True)``).
+
+The pipeline's correctness contract: the schedule moves (group *k+1*
+draws while group *k*'s fused launch runs on the launch-pool worker,
+and group *k−1* composes from deferred stat rows), but the RNG draw
+order and per-cell merge order are the serial route's exactly — so
+answers are bit-identical in float64 on every route, a drift reset
+landing between a group's launch and its compose must serve FRESH
+post-reset stats (the ``_group_stale`` relaunch), and a steady
+pipelined tick performs zero unsanctioned transfers under a
+process-wide ``jax.transfer_guard`` (process-wide because the launches
+run on the worker thread, outside any main-thread guard context).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core.engine import IslaQuery
+from repro.core.multiquery import (_STAGES, MultiQueryExecutor,
+                                   table_sampler)
+from repro.core.types import IslaParams, Predicate, StoreKey
+from repro.launch.serve import IslaAdmissionLoop
+
+N_BLOCKS, ROWS, REGIONS = 12, 500, 4
+
+
+def _tables(seed=0):
+    t_rng = np.random.default_rng(seed)
+    tables = []
+    for _ in range(N_BLOCKS):
+        g = t_rng.integers(0, REGIONS, size=ROWS)
+        tables.append({
+            "value": t_rng.normal(100.0 + 3.0 * g, 12.0, ROWS),
+            "region": g.astype(np.float64),
+            "flag": t_rng.integers(0, 2, size=ROWS).astype(np.float64),
+        })
+    return tables
+
+
+def _executor():
+    return MultiQueryExecutor(
+        [table_sampler(t) for t in _tables()], [10 ** 5] * N_BLOCKS,
+        params=IslaParams(), group_domains={"region": REGIONS})
+
+
+def _queries(modes=("calibrated", "faithful_cf")):
+    """Two mode-groups (two resolved modes) so the pipelined loop has a
+    staged group in flight while the next one launches."""
+    flag1 = Predicate(column="flag", eq=1.0)
+    out = []
+    for m in modes:
+        out += [
+            IslaQuery(e=0.05, beta=0.95, agg="AVG", mode=m),
+            IslaQuery(e=0.05, beta=0.95, agg="AVG", where=flag1, mode=m),
+            IslaQuery(e=0.05, beta=0.95, agg="AVG", group_by="region",
+                      mode=m),
+        ]
+    return out
+
+
+def _tick_both(route, ticks=3, pipeline_first=False):
+    """Run ``ticks`` incremental deficit-topping ticks on two fresh
+    executors over identical RNG streams — one serial, one pipelined —
+    and return their per-tick answer lists."""
+    per_route = []
+    for pipeline in ((True, False) if pipeline_first else (False, True)):
+        ex = _executor()
+        rng = np.random.default_rng(7)
+        got = []
+        for i in range(ticks):
+            got.append(ex.run(_queries(), rng, route=route,
+                              incremental=True,
+                              deadline_samples=30 * (i + 1),
+                              chunk_blocks=4, pipeline=pipeline))
+        per_route.append(got)
+    return per_route
+
+
+def _assert_identical(serial_ticks, pipe_ticks):
+    for t, (sa, pa) in enumerate(zip(serial_ticks, pipe_ticks)):
+        for s, p in zip(sa, pa):
+            assert float(s.value) == float(p.value), \
+                f"tick {t}: {p.value!r} != {s.value!r}"
+            assert (s.error_bound is None) == (p.error_bound is None)
+            if s.error_bound is not None:
+                assert s.error_bound == p.error_bound
+            sg_rows = s.groups or []
+            pg_rows = p.groups or []
+            assert len(sg_rows) == len(pg_rows)
+            for x, y in zip(sg_rows, pg_rows):
+                vx, vy = float(x.value), float(y.value)
+                assert vx == vy or (np.isnan(vx) and np.isnan(vy))
+            assert s.new_samples == p.new_samples
+
+
+@pytest.mark.parametrize("route", ["host", "device", "mesh"])
+def test_pipeline_bit_parity_x64(route):
+    """Pipelined answers are bit-identical to serial in float64 on all
+    three routes.  The x64 flip is process-wide (``jax.config``), not
+    the thread-local ``enable_x64`` context, so the launch-pool worker
+    compiles the same float64 programs as the main thread."""
+    x64_was = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        serial_ticks, pipe_ticks = _tick_both(route)
+    finally:
+        jax.config.update("jax_enable_x64", x64_was)
+    # Steady ticks must actually draw for the schedule to matter.
+    assert all(a.new_samples > 0 for a in serial_ticks[-1])
+    _assert_identical(serial_ticks, pipe_ticks)
+
+
+def test_pipeline_stage_telemetry():
+    """Every pipelined run books all six stage clocks, and a drawing
+    tick spends measurable time in draw + launch."""
+    ex = _executor()
+    rng = np.random.default_rng(3)
+    ex.run(_queries(), rng, route="device", incremental=True,
+           deadline_samples=30, chunk_blocks=4, pipeline=True)
+    times = ex.last_stage_times
+    assert set(times) == set(_STAGES)
+    assert all(v >= 0.0 for v in times.values())
+    assert times["draw"] > 0.0 and times["launch"] > 0.0
+
+
+@pytest.mark.transfer_guard
+def test_pipeline_transfer_guard_steady():
+    """Steady pipelined ticks — both the zero-draw warm repeat and a
+    drawing deficit top-up — complete under a process-wide
+    ``transfer_guard("disallow")``: every crossing (h2d uploads, the
+    async stat d2h, lazy materialization) is explicit."""
+    ex = _executor()
+    rng = np.random.default_rng(5)
+    qs = _queries()
+    ex.run(qs, rng, route="device", incremental=True,
+           deadline_samples=30, chunk_blocks=4, pipeline=True)
+    ex.run(qs, rng, route="device", incremental=True,
+           deadline_samples=30, chunk_blocks=4, pipeline=True)
+    jax.config.update("jax_transfer_guard", "disallow")
+    try:
+        # Converged: zero-draw, stats served from the launch cache.
+        warm = ex.run(qs, rng, route="device", incremental=True,
+                      deadline_samples=30, chunk_blocks=4, pipeline=True)
+        # Still-steady but DRAWING: the grown deadline re-opens the
+        # deficit, so panes upload and launches run under the guard.
+        drawn = ex.run(qs, rng, route="device", incremental=True,
+                       deadline_samples=60, chunk_blocks=4, pipeline=True)
+    finally:
+        jax.config.update("jax_transfer_guard", "allow")
+    assert all(a.new_samples == 0 for a in warm)
+    assert all(a.new_samples > 0 for a in drawn)
+
+
+def _staged_launch(ex, rng, defer):
+    """White-box: plan a warm batch and stage ONE mode-group's launch
+    (the first half of the pipelined loop), without composing."""
+    qs = _queries(modes=("calibrated",))
+    plan = ex._plan_cached(qs, rng, "calibrated", "device", None, None)
+    mg = plan.mode_groups[0]
+    prebuilt = ex._group_stores(plan, mg, ex._stores)
+    times = dict.fromkeys(_STAGES, 0.0)
+    sg = ex._launch_group(plan, mg, 0, rng, "device", 60,
+                          prebuilt=prebuilt, persistent=True,
+                          chunk_blocks=4, defer_stats=defer,
+                          timings=times)
+    for f in sg.pending:  # reset lands after the launch, before compose
+        f.result()
+    sg.pending = []
+    return sg
+
+
+def test_drift_reset_mid_pipeline_serves_fresh_stats():
+    """A per-key drift reset landing between a staged group's launch
+    and its compose must NOT serve the pre-reset stats: the compose
+    detects the stale store (``_group_stale``) and re-launches against
+    the live dict.  The serial executor performs the identical
+    launch / reset / re-launch sequence, so the answers must match
+    bitwise (float64)."""
+    x64_was = jax.config.jax_enable_x64
+    jax.config.update("jax_enable_x64", True)
+    try:
+        skey = StoreKey(where=Predicate(column="flag", eq=1.0),
+                        group_by=None, mode="calibrated")
+        outs = []
+        for defer in (True, False):
+            ex = _executor()
+            rng = np.random.default_rng(11)
+            # Warm incremental device state (pilot + first pass).
+            ex.run(_queries(modes=("calibrated",)), rng, route="device",
+                   incremental=True, deadline_samples=30, chunk_blocks=4)
+            sg = _staged_launch(ex, rng, defer)
+            staged_store = sg.dstores[(skey.where, None)]
+            ex._reset_key(skey)
+            assert ex._group_stale(sg)
+            out = ex._compose_group(sg)
+            # The WHERE key's answer came from a live post-reset store,
+            # not the staged pre-reset one.
+            live = ex._device_stores.get(skey)
+            assert live is not None and live is not staged_store
+            assert live.total_sampled > 0
+            outs.append(out)
+    finally:
+        jax.config.update("jax_enable_x64", x64_was)
+    for (i_p, a_p), (i_s, a_s) in zip(*outs):
+        assert i_p == i_s
+        assert float(a_p.value) == float(a_s.value)
+        assert a_p.new_samples == a_s.new_samples and a_p.new_samples > 0
+
+
+def test_compose_without_reset_uses_staged_stores():
+    """Control for the staleness path: with no reset, compose serves
+    the staged launch directly — no relaunch, no extra RNG draws."""
+    ex = _executor()
+    rng = np.random.default_rng(13)
+    ex.run(_queries(modes=("calibrated",)), rng, route="device",
+           incremental=True, deadline_samples=30, chunk_blocks=4)
+    state = rng.bit_generator.state
+    sg = _staged_launch(ex, rng, defer=True)
+    state_after_launch = rng.bit_generator.state
+    assert not ex._group_stale(sg)
+    ex._compose_group(sg)
+    assert rng.bit_generator.state == state_after_launch
+    assert state != state_after_launch  # the launch itself did draw
+
+
+def test_serve_loop_pipeline_stage_seconds():
+    """The admission loop's ``--pipeline`` mode accrues per-stage wall
+    clocks into ``stats["stage_seconds"]`` and still answers."""
+    ex = _executor()
+    loop = IslaAdmissionLoop(ex, np.random.default_rng(9),
+                             incremental=True, pipeline=True)
+    for q in _queries():
+        loop.submit(q)
+    done = loop.run_until_drained()
+    assert len(done) == len(_queries())
+    stages = loop.stats["stage_seconds"]
+    assert set(stages) == set(_STAGES)
+    assert sum(stages.values()) > 0.0
