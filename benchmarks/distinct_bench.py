@@ -1,0 +1,246 @@
+"""COUNT DISTINCT sketch-plane benchmark: accuracy, parity, overhead.
+
+Headlines (recorded in ``BENCH_distinct.json``):
+ * **accuracy** — HLL COUNT DISTINCT relative error vs exact cardinality
+   across >= 16 groups spanning both estimator regimes (linear counting
+   and the raw harmonic estimate), asserted within the standard
+   ~1.04/sqrt(m) error at m = 2^12 with slack;
+ * **merge parity** — the same stream ingested as ONE pass and as a
+   random partition into ticks yields byte-identical register planes
+   (merge = elementwise max is order- and partition-invariant), and the
+   device tick's resident plane matches the host plane bit for bit
+   (registers key on raw float64 bits, so fp32 pane math never touches
+   them);
+ * **tick overhead** — the fused device tick with the register pane
+   riding the launch vs the moments-only tick at the same size (the
+   price of the sketch plane on the steady serving path).
+
+Contract: rows print as ``(name, us_per_call, derived)``; ``--smoke``
+shrinks sizes for CI; ``--out DIR`` picks where BENCH_distinct.json
+lands.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.core import sketch as SK
+from repro.core.boundaries import make_boundaries
+from repro.core.moment_store import MomentStore
+from repro.core.types import IslaParams
+
+try:
+    from ._timing import time_best
+except ImportError:        # script mode: python benchmarks/distinct_bench.py
+    from _timing import time_best
+
+MU, SIGMA = 100.0, 20.0
+SLACK = 5.0                # tolerance = SLACK * 1.04/sqrt(m): ~5 sigma of
+                           # the sketch's standard error, loose enough to
+                           # never flake, tight enough to catch a broken
+                           # estimator or hash by an order of magnitude
+
+
+def _grouped_stream(rng, n_groups, n_blocks, rows_per_cell, smoke):
+    """A measure stream with KNOWN per-group cardinality: group g draws
+    integers from its own disjoint value range whose width sweeps the
+    estimator's regimes — small groups sit in linear counting, large
+    ones in the raw harmonic-mean estimate."""
+    lo, hi = (60, 3000) if smoke else (200, 30000)
+    card = np.linspace(lo, hi, n_groups).astype(np.int64)
+    vals, gids, bids = [], [], []
+    for g in range(n_groups):
+        v = rng.integers(0, card[g], size=n_blocks * rows_per_cell)
+        vals.append(g * 10 ** 6 + v)          # disjoint per-group ranges
+        gids.append(np.full(v.size, g))
+        bids.append(np.tile(np.arange(n_blocks), rows_per_cell))
+    vals = np.concatenate(vals).astype(np.float64)
+    gids = np.concatenate(gids)
+    bids = np.concatenate(bids)
+    order = rng.permutation(vals.size)
+    return vals[order], gids[order], bids[order]
+
+
+def accuracy(smoke=False):
+    """Per-group estimates vs exact cardinality at >= 16 groups, plus
+    the partition-merge bit-identity the sketch plane is built on."""
+    params = IslaParams()
+    b = make_boundaries(MU, SIGMA, params)
+    n_groups, n_blocks, rows = (16, 4, 300) if smoke else (24, 8, 1200)
+    rng = np.random.default_rng(0)
+    vals, gids, bids = _grouped_stream(rng, n_groups, n_blocks, rows,
+                                       smoke)
+    quotas = np.full(n_blocks, vals.size, dtype=np.int64)
+
+    one = MomentStore.fresh(n_blocks, b, MU, n_groups=n_groups,
+                            has_sketch=True)
+    one.ingest(vals, bids, quotas, group_ids=gids)
+
+    # The same stream as a RANDOM partition into ticks: registers must
+    # fold to the byte-identical plane (merge = max).
+    ticks = MomentStore.fresh(n_blocks, b, MU, n_groups=n_groups,
+                              has_sketch=True)
+    cuts = np.sort(rng.choice(vals.size, size=6, replace=False))
+    for seg in np.split(np.arange(vals.size), cuts):
+        if seg.size:
+            ticks.ingest(vals[seg], bids[seg], quotas,
+                         group_ids=gids[seg])
+    merge_ok = bool(np.array_equal(one.regs, ticks.regs))
+    if not merge_ok:
+        raise AssertionError("tick-merged registers != one-pass plane")
+
+    est = one.distinct_counts()
+    true = np.array([np.unique(vals[gids == g]).size
+                     for g in range(n_groups)], dtype=np.float64)
+    rel = np.abs(est - true) / true
+    tol = SLACK * SK.REL_ERROR
+    if float(rel.max()) > tol:
+        raise AssertionError(
+            f"distinct error {rel.max():.4f} exceeds {tol:.4f} "
+            f"(= {SLACK} x 1.04/sqrt({SK.M}))")
+    rows_out = [
+        (f"distinct_accuracy/g{n_groups}", 0.0, float(rel.max())),
+        ("tick_merge_bit_identical", 0.0, float(merge_ok)),
+    ]
+    return rows_out, {
+        "n_groups": int(n_groups), "m": int(SK.M),
+        "true_cardinality_range": [int(true.min()), int(true.max())],
+        "max_rel_error": float(rel.max()),
+        "mean_rel_error": float(rel.mean()),
+        "rel_error_tolerance": float(tol),
+        "standard_error": float(SK.REL_ERROR),
+        "slack_factor": SLACK,
+        "tick_merge_bit_identical": merge_ok,
+    }
+
+
+def route_parity(smoke=False):
+    """Host plane vs the device tick's resident plane, bit for bit.
+
+    The device route hashes the SAME raw float64 bits (shipped as uint32
+    limb panes) through the in-graph splitmix64 twin, so its uint8
+    registers — and therefore every distinct estimate — are
+    byte-identical to the host's, even though its moment math runs
+    fp32."""
+    from repro.core.moment_store import DeviceMomentStore
+
+    params = IslaParams()
+    b = make_boundaries(MU, SIGMA, params)
+    n_groups, n_blocks, rows = (4, 4, 200) if smoke else (8, 8, 600)
+    rng = np.random.default_rng(1)
+    vals, gids, bids = _grouped_stream(rng, n_groups, n_blocks, rows,
+                                       smoke)
+    sizes = np.full(n_blocks, 10.0 ** 6)
+    quotas = np.full(n_blocks, vals.size, dtype=np.int64)
+
+    host = MomentStore.fresh(n_blocks, b, MU, n_groups=n_groups,
+                             has_sketch=True)
+    dev = DeviceMomentStore.fresh_device(n_blocks, b, MU, sizes,
+                                         n_groups=n_groups,
+                                         has_sketch=True)
+    cuts = np.sort(rng.choice(vals.size, size=4, replace=False))
+    for seg in np.split(np.arange(vals.size), cuts):
+        if not seg.size:
+            continue
+        host.ingest(vals[seg], bids[seg], quotas, group_ids=gids[seg])
+        dev.ingest_tick(vals[seg], bids[seg], quotas, params,
+                        group_ids=gids[seg])
+    bit = bool(np.array_equal(host.regs, np.asarray(dev.regs)))
+    if not bit:
+        raise AssertionError("device register plane != host plane")
+    est_eq = bool(np.array_equal(host.distinct_counts(),
+                                 dev.distinct_counts()))
+    rows_out = [("device_plane_bit_identical", 0.0, float(bit))]
+    return rows_out, {
+        "device_bit_identical": bit,
+        "estimates_identical": est_eq,
+        "register_bytes_resident": int(np.asarray(dev.regs).nbytes),
+    }
+
+
+def tick_overhead(smoke=False):
+    """The steady fused tick with vs without the register pane: same
+    draw, same stacked launch shape — the delta is the sketch plane's
+    scatter + the O(groups) folded-register readback."""
+    from repro.core.moment_store import DeviceMomentStore, DeviceStack
+
+    params = IslaParams()
+    b = make_boundaries(MU, SIGMA, params)
+    n_groups, n_blocks, quota, rounds = ((3, 16, 40, 3) if smoke
+                                         else (8, 200, 64, 8))
+    sizes = np.full(n_blocks, 10.0 ** 7)
+    rng = np.random.default_rng(2)
+
+    def make_pass():
+        vals = rng.normal(MU, SIGMA, n_blocks * quota)
+        bids = np.repeat(np.arange(n_blocks), quota)
+        gids = rng.integers(0, n_groups, vals.size)
+        quotas = np.full(n_blocks, quota, dtype=np.int64)
+        return vals, bids, gids, quotas
+
+    passes = [make_pass() for _ in range(rounds + 1)]
+
+    def build(has_sketch):
+        stores = [DeviceMomentStore.fresh_device(
+            n_blocks, b, MU, sizes, n_groups=n_groups,
+            has_sketch=has_sketch)]
+        return DeviceStack(stores)
+
+    def tick(stack):
+        def f(p):
+            vals, bids, gids, quotas = p
+            return stack.tick(params, mode="calibrated", values=vals,
+                              quotas=quotas, dense=([gids], [None]))
+        return f
+
+    plain_best, _ = time_best(tick(build(False)), passes)
+    sk_best, _ = time_best(tick(build(True)), passes)
+    overhead = sk_best / max(plain_best, 1e-9)
+    rows_out = [
+        (f"moments_tick/g{n_groups}b{n_blocks}", plain_best, 1.0),
+        (f"sketch_tick/g{n_groups}b{n_blocks}", sk_best, overhead),
+    ]
+    return rows_out, {
+        "n_groups": n_groups, "n_blocks": n_blocks,
+        "samples_per_tick": int(n_blocks * quota), "rounds": rounds,
+        "moments_us_per_tick": plain_best,
+        "sketch_us_per_tick": sk_best,
+        "overhead_x": overhead,
+        "aggregation": "min over rounds",
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sizes so CI can keep the entrypoints alive")
+    ap.add_argument("--out", default=".",
+                    help="directory for BENCH_distinct.json")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+    report = {"smoke": bool(args.smoke)}
+    for section, bench in (("accuracy", accuracy),
+                           ("parity", route_parity),
+                           ("tick", tick_overhead)):
+        rows, rep = bench(smoke=args.smoke)
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived:.6g}", flush=True)
+        report[section] = rep
+    path = os.path.join(args.out, "BENCH_distinct.json")
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2, sort_keys=True)
+        f.write("\n")
+    acc = report["accuracy"]
+    print(f"# wrote {path} (max rel error {acc['max_rel_error']:.4f} "
+          f"over {acc['n_groups']} groups, tolerance "
+          f"{acc['rel_error_tolerance']:.4f}; device plane "
+          f"bit-identical: {report['parity']['device_bit_identical']})",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -627,6 +627,174 @@ def fused_solve(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
 
 
 # ---------------------------------------------------------------------------
+# Sketch-plane variants: the fused tick with a (n_cells, m) HLL register
+# pane riding the same donated launch.
+# ---------------------------------------------------------------------------
+#
+# COUNT DISTINCT state is a per-cell HyperLogLog register row whose merge
+# is an elementwise max — associative, commutative, idempotent — so the
+# tick-merge parity story is STRUCTURAL: any partition of a stream folds
+# to the bit-identical one-pass plane, on every route.  The variants below
+# are separate jitted functions (not flags on the moment-only launches) so
+# stacks without a sketch key keep their existing traces, donation
+# patterns and collective footprints byte-for-byte.
+#
+# Hash operands arrive as (hi, lo) uint32 limb pairs of the splitmix64'd
+# raw value bits (``sketch.value_limbs`` — computed on host, mixed
+# in-graph; sample-sized h2d like the value vector).  rho == 0 is the
+# scatter's neutral element, so masked lanes ride with a zeroed rank, and
+# bucket-pad / pruned rows drop through ``mode="drop"`` — pruned cells'
+# registers are never addressed and re-activate warm, exactly like the
+# moment rows.
+
+
+def _sketch_encode(hash_hi: jnp.ndarray, hash_lo: jnp.ndarray):
+    """In-graph hash mix + register encode: limb pairs -> (j, rho)."""
+    from . import sketch as SK
+    return SK.encode_graph(*SK.splitmix64_graph(hash_hi, hash_lo))
+
+
+def _sketch_fold(regs: jnp.ndarray, n_groups_list) -> jnp.ndarray:
+    """Fold the (n_cells, m) register plane to one (store, group) register
+    row each — max over every store's block axis (the register analogue of
+    ``group_row_stats``: the host reads O(groups) rows, never per-cell
+    registers).  Cells are (group, block)-contiguous per stacked store, so
+    the fold is a reshape-max, no scatter."""
+    n_b = regs.shape[0] // sum(n_groups_list)
+    out = []
+    o = 0
+    for g in n_groups_list:
+        out.append(regs[o:o + g * n_b].reshape(g, n_b, -1).max(axis=1))
+        o += g * n_b
+    return jnp.concatenate(out) if len(out) > 1 else out[0]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "mode", "geometry", "n_groups_list"),
+    donate_argnums=(0, 1, 2, 3, 4))
+def fused_tick_sketch(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+                      totals: jnp.ndarray, n_sampled: jnp.ndarray,
+                      regs: jnp.ndarray, values: jnp.ndarray,
+                      seg: jnp.ndarray, hash_hi: jnp.ndarray,
+                      hash_lo: jnp.ndarray, quotas: jnp.ndarray,
+                      bounds: jnp.ndarray, sketch0: jnp.ndarray,
+                      sizes: jnp.ndarray, inv_scale: jnp.ndarray = None, *,
+                      params: IslaParams, mode: str = "calibrated",
+                      geometry=None, n_groups_list=(1,)):
+    """``fused_tick`` with the HLL register plane riding the launch.
+
+    ``regs`` is the fifth donated state operand ((n_cells, m) uint8);
+    ``hash_hi`` / ``hash_lo`` are the samples' raw-bit limb pairs, aligned
+    with ``values`` / ``seg`` (bucket-pad lanes carry ``seg == n_cells``
+    and drop).  Returns ``(mom_s', mom_l', totals', n_sampled', regs',
+    partials, rows, group_regs)`` — ``group_regs`` the folded per-group
+    register rows, the only register bytes that ever read back.
+    """
+    mom_s, mom_l, totals, n_sampled, partials, rows = _tick_core(
+        mom_s, mom_l, totals, n_sampled, values, seg, quotas, bounds,
+        sketch0, sizes, inv_scale, params=params, mode=mode,
+        geometry=geometry, n_groups_list=n_groups_list)
+    j, rho = _sketch_encode(hash_hi, hash_lo)
+    regs = regs.at[seg, j].max(rho, mode="drop")
+    return (mom_s, mom_l, totals, n_sampled, regs, partials, rows,
+            _sketch_fold(regs, n_groups_list))
+
+
+def _sketch_dense_scatter(regs: jnp.ndarray, hash_hi2d: jnp.ndarray,
+                          hash_lo2d: jnp.ndarray, pad_valid: jnp.ndarray,
+                          gid_panes, valid_panes, *, n_groups_list,
+                          gid_slots, valid_slots, cell_idx=None):
+    """The dense-layout register merge: hash panes are block-major like
+    the value pane, each key's (block, group) lane maps to its resident
+    cell row, and invalid lanes (ragged pad / predicate miss) scatter the
+    neutral rho = 0.  ``cell_idx`` routes compacted pane rows onto the
+    full register plane (pads out-of-bounds -> drop), same contract as
+    ``_dense_core``'s ``active_cells``."""
+    j, rho0 = _sketch_encode(hash_hi2d, hash_lo2d)
+    n_rows = hash_hi2d.shape[0]
+    biota = jnp.arange(n_rows, dtype=jnp.int32)[:, None]
+    o = 0
+    for i, (gslot, vslot, g) in enumerate(zip(gid_slots, valid_slots,
+                                              n_groups_list)):
+        valid = pad_valid if vslot < 0 else pad_valid * valid_panes[vslot]
+        ok = valid > 0
+        rho = jnp.where(ok, rho0, jnp.uint8(0))
+        if g == 1:
+            row = jnp.broadcast_to(o + biota, j.shape)
+        else:
+            gid = jnp.where(ok, gid_panes[gslot].astype(jnp.int32), 0)
+            row = o + gid * n_rows + biota
+        cell = row if cell_idx is None else cell_idx[row]
+        regs = regs.at[cell, j].max(rho, mode="drop")
+        o += g * n_rows
+    return regs
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "mode", "geometry", "n_groups_list",
+                     "gid_slots", "valid_slots", "key_affine",
+                     "bound_slots"),
+    donate_argnums=(0, 1, 2, 3, 4))
+def fused_tick_dense_sketch(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+                            totals: jnp.ndarray, n_sampled: jnp.ndarray,
+                            regs: jnp.ndarray, values2d: jnp.ndarray,
+                            pad_valid: jnp.ndarray,
+                            hash_hi2d: jnp.ndarray,
+                            hash_lo2d: jnp.ndarray, quotas: jnp.ndarray,
+                            gid_panes, valid_panes, bounds: jnp.ndarray,
+                            sketch0: jnp.ndarray, sizes: jnp.ndarray,
+                            inv_scale: jnp.ndarray = None,
+                            active_cells=None, *, params: IslaParams,
+                            mode: str = "calibrated", geometry=None,
+                            n_groups_list=(1,), gid_slots=(-1,),
+                            valid_slots=(-1,), key_affine=None,
+                            bound_slots=None):
+    """``fused_tick_dense`` with the register plane riding the launch
+    (see ``fused_tick_sketch`` for the state/return contract and
+    ``_sketch_dense_scatter`` for the pane-to-cell mapping).  Unlike the
+    moment delta — whose dense fold is a float vector add — the register
+    merge is an integer max, so the dense route keeps the tagged route's
+    bit-parity contract for the sketch plane even in fp32 serving."""
+    mom_s, mom_l, totals, n_sampled, partials, rows = _dense_core(
+        mom_s, mom_l, totals, n_sampled, values2d, pad_valid, quotas,
+        gid_panes, valid_panes, bounds, sketch0, sizes, inv_scale,
+        params=params, mode=mode, geometry=geometry,
+        n_groups_list=n_groups_list, gid_slots=gid_slots,
+        valid_slots=valid_slots, key_affine=key_affine,
+        bound_slots=bound_slots, active_cells=active_cells)
+    regs = _sketch_dense_scatter(
+        regs, hash_hi2d, hash_lo2d, pad_valid, gid_panes, valid_panes,
+        n_groups_list=n_groups_list, gid_slots=gid_slots,
+        valid_slots=valid_slots,
+        cell_idx=None if active_cells is None else active_cells[0])
+    return (mom_s, mom_l, totals, n_sampled, regs, partials, rows,
+            _sketch_fold(regs, n_groups_list))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "mode", "geometry", "n_groups_list"))
+def fused_solve_sketch(mom_s: jnp.ndarray, mom_l: jnp.ndarray,
+                       totals: jnp.ndarray, n_sampled: jnp.ndarray,
+                       regs: jnp.ndarray, sketch0: jnp.ndarray,
+                       sizes: jnp.ndarray, inv_scale: jnp.ndarray = None,
+                       *, params: IslaParams, mode: str = "calibrated",
+                       geometry=None, n_groups_list=(1,)):
+    """``fused_solve`` for sketch stacks: the zero-draw re-solve also
+    re-folds the resident registers so a warm repeat serves distinct
+    answers from the same O(groups) readback.  No donation."""
+    thr, geometry = _scaled_solve_args(params, geometry, inv_scale)
+    partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
+                      geometry=geometry, thr=thr)
+    rows = group_row_stats(mom_s, mom_l, totals, partials, n_sampled,
+                           sizes, n_groups_list,
+                           float(params.min_region_count))
+    return partials, rows, _sketch_fold(regs, n_groups_list)
+
+
+# ---------------------------------------------------------------------------
 # Mesh launch: the fused tick sharded over the (group, block) cell axis.
 # ---------------------------------------------------------------------------
 #
@@ -801,6 +969,130 @@ def mesh_solve_fn(mesh, params: IslaParams, mode: str, geometry,
         body, mesh,
         in_specs=(row, row, row, vec, vec, vec, vec),
         out_specs=(vec, P(None, None)))
+    return jax.jit(sharded)
+
+
+@functools.lru_cache(maxsize=64)
+def mesh_tick_sketch_fn(mesh, params: IslaParams, mode: str, geometry,
+                        n_groups_list, per_cell_bounds: bool):
+    """``mesh_tick_fn`` with the register plane sharded alongside the
+    moment rows (``P(ax, None)`` — each shard owns its block run's
+    registers, resident across ticks).
+
+    The register merge is SHARD-LOCAL: samples retag to the local cell
+    window exactly like the moment scatter, so per-cell registers never
+    cross devices.  The only new collective is a ``pmax`` of the O(groups)
+    FOLDED register rows — each shard folds its local block run, the max
+    across shards is the full fold (max is associative/commutative, so
+    the mesh fold is bit-identical to the single-device fold by
+    construction, not by float luck).
+    """
+    from jax.sharding import PartitionSpec as P
+    ax = cell_axis(mesh)
+    row, vec, rep = P(ax, None), P(ax), P()
+    bspec = P(ax, None) if per_cell_bounds else P(None, None)
+
+    def body(mom_s, mom_l, totals, ns, regs, values, seg, hash_hi,
+             hash_lo, quotas, bounds, sketch0, sizes, inv_scale):
+        n_local = mom_s.shape[0]
+        lo = jax.lax.axis_index(ax).astype(seg.dtype) * n_local
+        own = (seg >= lo) & (seg < lo + n_local)
+        lseg = jnp.where(own, seg - lo, n_local).astype(seg.dtype)
+        if per_cell_bounds:
+            bounds = jnp.concatenate(
+                [bounds, jnp.full((1, 4), jnp.inf, bounds.dtype)])
+        mom_s, mom_l, totals, ns, partials, rows = _tick_core(
+            mom_s, mom_l, totals, ns, values, lseg, quotas, bounds,
+            sketch0, sizes, inv_scale, params=params, mode=mode,
+            geometry=geometry, n_groups_list=n_groups_list)
+        j, rho = _sketch_encode(hash_hi, hash_lo)
+        regs = regs.at[lseg, j].max(rho, mode="drop")
+        group_regs = jax.lax.pmax(_sketch_fold(regs, n_groups_list), ax)
+        return (mom_s, mom_l, totals, ns, regs, partials,
+                jax.lax.psum(rows, ax), group_regs)
+
+    sharded = _mesh_shard_map(
+        body, mesh,
+        in_specs=(row, row, row, vec, row, rep, rep, rep, rep, vec,
+                  bspec, vec, vec, vec),
+        out_specs=(row, row, row, vec, row, vec, P(None, None),
+                   P(None, None)))
+    return jax.jit(sharded, donate_argnums=(0, 1, 2, 3, 4))
+
+
+@functools.lru_cache(maxsize=64)
+def mesh_tick_dense_sketch_fn(mesh, params: IslaParams, mode: str,
+                              geometry, n_groups_list, gid_slots,
+                              valid_slots, key_affine, bound_slots,
+                              n_gid_panes: int, n_valid_panes: int,
+                              compacted: bool = False):
+    """``mesh_tick_dense_fn`` with the register plane riding the launch.
+
+    The hash panes shard block-major like the value pane, so each shard's
+    ``_sketch_dense_scatter`` addresses only its local register rows; the
+    folded-row ``pmax`` is the single register collective (see
+    ``mesh_tick_sketch_fn``).
+    """
+    from jax.sharding import PartitionSpec as P
+    ax = cell_axis(mesh)
+    row, vec = P(ax, None), P(ax)
+
+    def body(mom_s, mom_l, totals, ns, regs, values2d, pad_valid,
+             hash_hi2d, hash_lo2d, quotas, gid_panes, valid_panes,
+             bounds, sketch0, sizes, inv_scale, active_cells=None):
+        mom_s, mom_l, totals, ns, partials, rows = _dense_core(
+            mom_s, mom_l, totals, ns, values2d, pad_valid, quotas,
+            gid_panes, valid_panes, bounds, sketch0, sizes, inv_scale,
+            params=params, mode=mode, geometry=geometry,
+            n_groups_list=n_groups_list, gid_slots=gid_slots,
+            valid_slots=valid_slots, key_affine=key_affine,
+            bound_slots=bound_slots, active_cells=active_cells)
+        regs = _sketch_dense_scatter(
+            regs, hash_hi2d, hash_lo2d, pad_valid, gid_panes,
+            valid_panes, n_groups_list=n_groups_list,
+            gid_slots=gid_slots, valid_slots=valid_slots,
+            cell_idx=None if active_cells is None else active_cells[0])
+        group_regs = jax.lax.pmax(_sketch_fold(regs, n_groups_list), ax)
+        return (mom_s, mom_l, totals, ns, regs, partials,
+                jax.lax.psum(rows, ax), group_regs)
+
+    specs = (row, row, row, vec, row, row, row, row, row, vec,
+             (vec,) * n_gid_panes, (row,) * n_valid_panes,
+             P(None, None), vec, vec, vec)
+    if compacted:
+        specs = specs + ((vec, vec),)
+    sharded = _mesh_shard_map(
+        body, mesh,
+        in_specs=specs,
+        out_specs=(row, row, row, vec, row, vec, P(None, None),
+                   P(None, None)))
+    return jax.jit(sharded, donate_argnums=(0, 1, 2, 3, 4))
+
+
+@functools.lru_cache(maxsize=64)
+def mesh_solve_sketch_fn(mesh, params: IslaParams, mode: str, geometry,
+                         n_groups_list):
+    """``mesh_solve_fn`` for sketch stacks: the warm re-solve also
+    re-folds each shard's resident registers and pmaxes the O(groups)
+    rows.  No donation."""
+    from jax.sharding import PartitionSpec as P
+    ax = cell_axis(mesh)
+    row, vec = P(ax, None), P(ax)
+
+    def body(mom_s, mom_l, totals, ns, regs, sketch0, sizes, inv_scale):
+        thr, geo = _scaled_solve_args(params, geometry, inv_scale)
+        partials = phase2(mom_s, mom_l, sketch0, params, mode=mode,
+                          geometry=geo, thr=thr)
+        rows = group_row_stats(mom_s, mom_l, totals, partials, ns,
+                               sizes, n_groups_list,
+                               float(params.min_region_count))
+        group_regs = jax.lax.pmax(_sketch_fold(regs, n_groups_list), ax)
+        return partials, jax.lax.psum(rows, ax), group_regs
+
+    sharded = _mesh_shard_map(
+        body, mesh,
+        in_specs=(row, row, row, vec, row, vec, vec, vec),
+        out_specs=(vec, P(None, None), P(None, None)))
     return jax.jit(sharded)
 
 

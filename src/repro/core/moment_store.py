@@ -48,6 +48,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from . import sketch as _sketch
 from .engine import (Sampler, block_quotas, flat_segments,
                      phase1_sampling_batch, phase2_iteration_batch,
                      sample_moments_batch)
@@ -146,13 +147,19 @@ class MomentStore:
     anchor: Optional[Anchor] = None  # provenance of the frozen frame; its
                               # fingerprint keys warm-store reuse (a key
                               # whose anchor changed cannot merge moments)
+    has_sketch: bool = False  # True: an HLL register plane rides every
+                              # ingest (COUNT DISTINCT state)
+    regs: Optional[np.ndarray] = None  # (n_cells, sketch.M) uint8 HLL
+                              # registers; merge = elementwise max, so any
+                              # tick partition folds bit-identically
 
     @staticmethod
     def fresh(n_blocks: int, boundaries: Boundaries, sketch0: float,
               shift: float = 0.0, n_groups: int = 1,
               has_regions: bool = True,
               has_totals: bool = True,
-              anchor: Optional[Anchor] = None) -> "MomentStore":
+              anchor: Optional[Anchor] = None,
+              has_sketch: bool = False) -> "MomentStore":
         if n_blocks < 1 or n_groups < 1:
             raise ValueError(f"need n_blocks, n_groups >= 1; got "
                              f"({n_blocks}, {n_groups})")
@@ -166,18 +173,23 @@ class MomentStore:
             mom_s=np.zeros((n_cells, 4)), mom_l=np.zeros((n_cells, 4)),
             totals=np.zeros((n_cells, 3)),
             n_sampled=np.zeros(n_blocks, dtype=np.int64),
-            has_regions=has_regions, has_totals=has_totals, anchor=anchor)
+            has_regions=has_regions, has_totals=has_totals, anchor=anchor,
+            has_sketch=has_sketch,
+            regs=(np.zeros((n_cells, _sketch.M), dtype=np.uint8)
+                  if has_sketch else None))
 
     @staticmethod
     def from_anchor(n_blocks: int, anchor: Anchor, n_groups: int = 1,
                     has_regions: bool = True,
-                    has_totals: bool = True) -> "MomentStore":
+                    has_totals: bool = True,
+                    has_sketch: bool = False) -> "MomentStore":
         """``fresh`` with the frame taken wholesale from an ``Anchor`` —
         the per-key construction path of the incremental executor."""
         return MomentStore.fresh(
             n_blocks, anchor.boundaries, anchor.sketch0,
             shift=anchor.shift, n_groups=n_groups,
-            has_regions=has_regions, has_totals=has_totals, anchor=anchor)
+            has_regions=has_regions, has_totals=has_totals, anchor=anchor,
+            has_sketch=has_sketch)
 
     @property
     def n_cells(self) -> int:
@@ -194,7 +206,8 @@ class MomentStore:
                group_ids: Optional[np.ndarray] = None,
                mask: Optional[np.ndarray] = None,
                chunk_size: Optional[int] = None,
-               count_round: bool = True) -> None:
+               count_round: bool = True,
+               raw_values: Optional[np.ndarray] = None) -> None:
         """Merge one tagged pass into the store.
 
         ``values`` are on the SHIFTED scale (the caller applies
@@ -207,6 +220,12 @@ class MomentStore:
         ``count_round=False`` marks this ingest as a continuation chunk of
         the current logical round (block-chunked draws), so ``rounds``
         counts refinement rounds, not chunks.
+
+        ``raw_values`` (sketch stores) are the UN-shifted measure values —
+        the HLL hash-input contract keys registers on raw float64 bits so
+        every route and anchor builds the identical plane.  When omitted,
+        the store reconstructs them as ``values - shift`` (bit-exact only
+        for shift == 0; shifted stores should pass the raw stream).
         """
         quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
         if quotas.shape != (self.n_blocks,):
@@ -230,9 +249,37 @@ class MomentStore:
                 values, block_ids, self.n_blocks, group_ids=group_ids,
                 n_groups=self.n_groups, mask=mask,
                 carry=None if first else self.totals)
+        if self.has_sketch:
+            raw = (np.asarray(raw_values, dtype=np.float64).reshape(-1)
+                   if raw_values is not None
+                   else np.asarray(values, dtype=np.float64).reshape(-1)
+                   - self.shift)
+            seg, _ = flat_segments(
+                np.asarray(block_ids).reshape(-1).astype(np.intp),
+                self.n_blocks, group_ids, self.n_groups)
+            if mask is not None:
+                keep = np.asarray(mask, dtype=bool).reshape(-1)
+                raw, seg = raw[keep], seg[keep]
+            j, rho = _sketch.encode(_sketch.hash_values(raw))
+            _sketch.scatter_max(self.regs, seg, j, rho)
         self.n_sampled = self.n_sampled + quotas
         if count_round:
             self.rounds += 1
+
+    # -- sketch plane ------------------------------------------------------
+
+    def group_registers(self) -> np.ndarray:
+        """The per-group folded register rows — max over the block axis
+        (the mergeable-sketch group aggregate)."""
+        if not self.has_sketch:
+            raise ValueError("store was built without a sketch plane "
+                             "(has_sketch=False)")
+        return _sketch.fold_groups(self.regs, self.n_groups)
+
+    def distinct_counts(self) -> np.ndarray:
+        """(n_groups,) HLL COUNT DISTINCT estimates of the matching
+        measure values seen so far."""
+        return _sketch.estimate(self.group_registers())
 
     # -- solving -----------------------------------------------------------
 
@@ -414,17 +461,18 @@ class _LazyRows:
     needs the numbers.  ``timings`` (optional MutableMapping) accumulates
     the blocking remainder under ``"readback"`` seconds."""
 
-    __slots__ = ("_dev", "_np", "_timings")
+    __slots__ = ("_dev", "_np", "_timings", "_dtype")
 
-    def __init__(self, dev, timings=None) -> None:
+    def __init__(self, dev, timings=None, dtype=np.float64) -> None:
         self._dev = dev
         self._np = None
         self._timings = timings
+        self._dtype = dtype
 
     def resolve(self) -> np.ndarray:
         if self._np is None:
             t0 = time.perf_counter()
-            self._np = np.asarray(self._dev, dtype=np.float64)  # d2h sync
+            self._np = np.asarray(self._dev, dtype=self._dtype)  # d2h sync
             if self._timings is not None:
                 self._timings["readback"] = (
                     self._timings.get("readback", 0.0)
@@ -507,7 +555,8 @@ class DeviceMomentStore:
     def __init__(self, n_blocks: int, n_groups: int, boundaries: Boundaries,
                  sketch0: float, shift: float, scale: float,
                  block_sizes: Sequence[int], dtype,
-                 anchor: Optional[Anchor] = None) -> None:
+                 anchor: Optional[Anchor] = None,
+                 has_sketch: bool = False) -> None:
         import jax.numpy as jnp
 
         from . import distributed as D
@@ -524,6 +573,7 @@ class DeviceMomentStore:
         self.anchor = anchor
         self.block_sizes = [int(b) for b in block_sizes]
         self.dtype = dtype
+        self.has_sketch = bool(has_sketch)
         n_cells = self.n_groups * self.n_blocks
         # Resident state: owned directly until a DeviceStack adopts the
         # store, after which the stacked tensors are authoritative and
@@ -533,6 +583,12 @@ class DeviceMomentStore:
         self._mom_l = jnp.zeros((n_cells, 4), dtype)
         self._totals = jnp.zeros((n_cells, 3), dtype)
         self._ns_dev = jnp.zeros((self.n_blocks,), dtype)
+        # Sketch plane: resident uint8 HLL registers, same ownership
+        # dance as the moments (the plane is NOT scaled — registers are
+        # rank integers, identical across dtypes and routes).
+        self._regs = (jnp.zeros((n_cells, _sketch.M), jnp.uint8)
+                      if self.has_sketch else None)
+        self._group_regs = None  # last launch's folded (n_groups, M) rows
         self.n_sampled = np.zeros(self.n_blocks, dtype=np.int64)
         self.rounds = 0
         # Anchor constants, uploaded once at store creation (cold start —
@@ -606,6 +662,18 @@ class DeviceMomentStore:
         self._stats_valid = False
 
     @property
+    def regs(self):
+        if not self.has_sketch:
+            return None
+        return self._state_attr("_regs", 4)
+
+    @regs.setter
+    def regs(self, v):
+        self._detach()
+        self._regs = v
+        self._stats_valid = False
+
+    @property
     def _rows(self):
         """Cached (n_groups, 9) group-stat rows, float64 numpy.
 
@@ -644,7 +712,8 @@ class DeviceMomentStore:
                      block_sizes: Sequence[int], shift: float = 0.0,
                      n_groups: int = 1, scale: Optional[float] = None,
                      dtype=None,
-                     anchor: Optional[Anchor] = None) -> "DeviceMomentStore":
+                     anchor: Optional[Anchor] = None,
+                     has_sketch: bool = False) -> "DeviceMomentStore":
         import jax.numpy as jnp
         if dtype is None:
             dtype = DeviceMomentStore.default_dtype()
@@ -659,7 +728,8 @@ class DeviceMomentStore:
                                                          sketch0))
         return DeviceMomentStore(n_blocks, n_groups, boundaries,
                                  float(sketch0), float(shift), float(scale),
-                                 block_sizes, dtype, anchor=anchor)
+                                 block_sizes, dtype, anchor=anchor,
+                                 has_sketch=has_sketch)
 
     @staticmethod
     def from_host(store: MomentStore, block_sizes: Sequence[int],
@@ -667,12 +737,15 @@ class DeviceMomentStore:
                   ) -> "DeviceMomentStore":
         """One-time cold-start upload of a host store's state (warm
         promotion); after this the device copy is authoritative."""
+        import jax.numpy as jnp
+
         from . import distributed as D
 
         dst = DeviceMomentStore.fresh_device(
             store.n_blocks, store.boundaries, store.sketch0, block_sizes,
             shift=store.shift, n_groups=store.n_groups, scale=scale,
-            dtype=dtype, anchor=store.anchor)
+            dtype=dtype, anchor=store.anchor,
+            has_sketch=store.has_sketch)
         p4 = dst.scale ** np.arange(4)
         dst.mom_s = D.h2d(store.mom_s / p4, dst.dtype)
         dst.mom_l = D.h2d(store.mom_l / p4, dst.dtype)
@@ -680,6 +753,8 @@ class DeviceMomentStore:
         dst.n_sampled = store.n_sampled.copy()
         dst._n_sampled_dev = D.h2d(store.n_sampled.astype(np.float64),
                                    dst.dtype)
+        if store.has_sketch:
+            dst.regs = D.h2d(store.regs, jnp.uint8)
         dst.rounds = store.rounds
         return dst
 
@@ -695,7 +770,28 @@ class DeviceMomentStore:
             mom_l=np.asarray(self.mom_l, dtype=np.float64) * p4,
             totals=np.asarray(self.totals, dtype=np.float64) * p4[:3],
             n_sampled=self.n_sampled.copy(), rounds=self.rounds,
-            anchor=self.anchor)
+            anchor=self.anchor, has_sketch=self.has_sketch,
+            regs=(np.asarray(self.regs, dtype=np.uint8)
+                  if self.has_sketch else None))
+
+    # -- sketch plane ------------------------------------------------------
+
+    def group_registers(self) -> np.ndarray:
+        """(n_groups, M) folded register rows.  Steady state serves the
+        LAUNCH's folded rows (already streaming d2h with the stat rows —
+        zero extra register-plane traffic); the cold/diagnostic fallback
+        downloads the resident plane and folds on the host."""
+        if not self.has_sketch:
+            raise ValueError("store was built without a sketch plane "
+                             "(has_sketch=False)")
+        if self._stats_valid and self._group_regs is not None:
+            return np.asarray(self._group_regs, dtype=np.uint8)
+        return _sketch.fold_groups(np.asarray(self.regs), self.n_groups)
+
+    def distinct_counts(self) -> np.ndarray:
+        """(n_groups,) HLL COUNT DISTINCT estimates (host estimator over
+        the folded rows — identical math on every route)."""
+        return _sketch.estimate(self.group_registers())
 
     # -- properties / planning mirror --------------------------------------
 
@@ -807,10 +903,15 @@ class DeviceMomentStore:
             seg = stack.key_seg(0, self, block_ids, group_ids, mask)
             if mask is not None:
                 values = values[np.asarray(mask, dtype=bool).reshape(-1)]
+            hash_limbs = None
+            if self.has_sketch:
+                # Hash-input contract: raw UN-shifted float64 bits.
+                hash_limbs = _sketch.value_limbs(values - self.shift)
             out = stack.tick(
                 params, mode=mode, geometry=geometry,
                 values=values / self.scale,
-                seg=seg, quotas=quotas_arr, count_round=count_round)
+                seg=seg, quotas=quotas_arr, count_round=count_round,
+                hash_limbs=hash_limbs)
         return out[0]
 
     def solve_device(self, params: IslaParams, mode: str = "calibrated",
@@ -946,20 +1047,40 @@ class DeviceStack:
                 jnp.concatenate([st._mom_l for st in self.stores]),
                 jnp.concatenate([st._totals for st in self.stores]),
                 jnp.concatenate([st._ns_dev for st in self.stores]))
+        # Sketch plane: any sketch member lifts the whole stack onto the
+        # sketch launch twins (non-sketch members ride with inert
+        # all-zero register rows — max against zero is a no-op, and the
+        # twin keeps the moment-only stacks' traces untouched).
+        self.has_sketch = any(st.has_sketch for st in self.stores)
+        if self.has_sketch:
+            if len(self.stores) == 1:
+                self._regs_state = self.stores[0]._regs
+            else:
+                self._regs_state = jnp.concatenate(
+                    [st._regs if st.has_sketch
+                     else jnp.zeros((st.n_cells, _sketch.M), jnp.uint8)
+                     for st in self.stores])
+        else:
+            self._regs_state = None
         self._released = False
         for st in self.stores:
             st._mom_s = st._mom_l = st._totals = st._ns_dev = None
+            st._regs = None
             st._owner = self
 
     # -- state plumbing ----------------------------------------------------
 
     def state_slice(self, store: DeviceMomentStore, idx: int):
         """One adopted store's view of the stacked state (idx: 0 mom_s,
-        1 mom_l, 2 totals, 3 device draw ledger) — an eager device slice,
-        for diagnostics/downloads, never on the tick path."""
+        1 mom_l, 2 totals, 3 device draw ledger, 4 HLL registers) — an
+        eager device slice, for diagnostics/downloads, never on the tick
+        path."""
         k = next(i for i, st in enumerate(self.stores) if st is store)
         if idx < 3:
             return self._state[idx][int(self.offsets[k]):
+                                    int(self.offsets[k + 1])]
+        if idx == 4:
+            return self._regs_state[int(self.offsets[k]):
                                     int(self.offsets[k + 1])]
         b = self.n_blocks
         return self._state[3][k * b:(k + 1) * b]
@@ -988,17 +1109,20 @@ class DeviceStack:
             st._mom_s, st._mom_l = mom_s[o0:o1], mom_l[o0:o1]
             st._totals = totals[o0:o1]
             st._ns_dev = ns[k * b:(k + 1) * b]
+            if st.has_sketch:
+                st._regs = self._regs_state[o0:o1]
             st._owner = None
         # Drop the stacked tensors: slicing copied, so keeping them (e.g.
         # through a stale executor cache entry) would pin a dead copy of
         # every store's moments in device memory.
         self._state = None
+        self._regs_state = None
         self._sk_cells = None
         self._inflight.clear()
         self._released = True
 
     def _install_stats(self, partials, rows, cfg, defer=False,
-                       timings=None):
+                       timings=None, group_regs=None):
         """Hand each store its slice of the launch's stats.
 
         ``defer=False`` (the serial route): one blocking ``np.asarray``
@@ -1006,7 +1130,12 @@ class DeviceStack:
         byte.  ``defer=True`` (the pipelined route): the d2h is only
         STARTED (``distributed.d2h_async``) and each store gets a lazy
         ``_RowsView``; the host returns to drawing/staging the next
-        mode-group and the sync moves to whoever first reads the rows."""
+        mode-group and the sync moves to whoever first reads the rows.
+
+        ``group_regs`` (sketch launches) is the launch's folded
+        (n_rows, M) register rows; stores get lazy ``_RowsView`` slices of
+        ONE shared holder — never an eager device slice, whose scalar
+        start indices would be an implicit h2d under transfer_guard."""
         from . import distributed as D
 
         if defer:
@@ -1020,6 +1149,10 @@ class DeviceStack:
             if timings is not None:
                 timings["readback"] = (timings.get("readback", 0.0)
                                        + time.perf_counter() - t0)
+        gr_holder = None
+        if group_regs is not None:
+            gr_holder = _LazyRows(D.d2h_async(group_regs), timings,
+                                  dtype=np.uint8)
         out = []
         for k, st in enumerate(self.stores):
             r0, r1 = int(self.row_offsets[k]), int(self.row_offsets[k + 1])
@@ -1031,6 +1164,8 @@ class DeviceStack:
             st._rows = (_RowsView(holder, r0, r1) if defer
                         else rows_np[r0:r1] if len(self.stores) > 1
                         else rows_np)
+            if gr_holder is not None and st.has_sketch:
+                st._group_regs = _RowsView(gr_holder, r0, r1)
             st._stats_valid = True
             st._stats_cfg = cfg
             out.append((st._partials, st._rows_src))
@@ -1135,8 +1270,16 @@ class DeviceStack:
              seg: Optional[np.ndarray] = None,
              quotas: Optional[np.ndarray] = None,
              dense=None, count_round: bool = True, timings=None,
-             defer_stats: bool = False):
+             defer_stats: bool = False, hash_limbs=None):
         """One continuation round for every store in the stack.
+
+        A sketch stack additionally scatters the tick's samples into the
+        resident HLL register plane inside the SAME launch.  Tagged
+        callers must pass ``hash_limbs=(hi, lo)`` — the
+        ``sketch.value_limbs`` of the RAW unshifted measure values,
+        aligned with ``values``/``seg`` (the hash-input contract; the
+        scaled tagged values cannot recover the raw bits).  The dense
+        pane already carries raw values, so dense callers pass nothing.
 
         Two sample payloads, one launch either way:
 
@@ -1193,17 +1336,27 @@ class DeviceStack:
                         for st in self.stores]
             mom_s, mom_l, totals, ns = self._state
             t0 = time.perf_counter()
+            group_regs = None
             with D.stage_trace("isla:launch"):
-                partials, rows = D.fused_solve(
-                    mom_s, mom_l, totals, ns, self._sketch0_cells(),
-                    self._sizes, self._inv_scale, params=params,
-                    mode=mode, geometry=geometry,
-                    n_groups_list=self.n_groups_list)
+                if self.has_sketch:
+                    partials, rows, group_regs = D.fused_solve_sketch(
+                        mom_s, mom_l, totals, ns, self._regs_state,
+                        self._sketch0_cells(), self._sizes,
+                        self._inv_scale, params=params, mode=mode,
+                        geometry=geometry,
+                        n_groups_list=self.n_groups_list)
+                else:
+                    partials, rows = D.fused_solve(
+                        mom_s, mom_l, totals, ns, self._sketch0_cells(),
+                        self._sizes, self._inv_scale, params=params,
+                        mode=mode, geometry=geometry,
+                        n_groups_list=self.n_groups_list)
             if timings is not None:
                 timings["launch"] = (timings.get("launch", 0.0)
                                      + time.perf_counter() - t0)
             return self._install_stats(partials, rows, cfg,
-                                       defer=defer_stats, timings=timings)
+                                       defer=defer_stats, timings=timings,
+                                       group_regs=group_regs)
 
         values = np.asarray(values, dtype=np.float64).reshape(-1)
         quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
@@ -1272,24 +1425,51 @@ class DeviceStack:
                     valid_panes.append(D.h2d(m2d, self.dtype))
             v_dev = D.h2d(v2d, self.dtype)
             pad_dev = D.h2d(pad, self.dtype)
+            if self.has_sketch:
+                # Hash panes from the RAW dense stream (the pane itself
+                # is anchor-scaled; registers key on the raw bits).
+                hhi, hlo = _sketch.value_limbs(values)
+                hi2d = np.zeros(v2d.shape, dtype=np.uint32)
+                lo2d = np.zeros(v2d.shape, dtype=np.uint32)
+                hi2d[vmask] = hhi
+                lo2d[vmask] = hlo
+                hhi_dev = D.h2d(hi2d, jnp.uint32)
+                hlo_dev = D.h2d(lo2d, jnp.uint32)
             if timings is not None:
                 timings["h2d"] = (timings.get("h2d", 0.0)
                                   + time.perf_counter() - t_h)
             t_l = time.perf_counter()
+            group_regs = None
             with D.stage_trace("isla:launch"):
-                mom_s, mom_l, totals, ns, partials, rows = \
-                    D.fused_tick_dense(
-                        mom_s, mom_l, totals, ns, v_dev,
-                        pad_dev, q_dev, tuple(gid_panes),
-                        tuple(valid_panes), self._bound_rows,
-                        self._sketch0_cells(), self._sizes,
-                        self._inv_scale, active_cells,
+                if self.has_sketch:
+                    (mom_s, mom_l, totals, ns, regs, partials, rows,
+                     group_regs) = D.fused_tick_dense_sketch(
+                        mom_s, mom_l, totals, ns, self._regs_state,
+                        v_dev, pad_dev, hhi_dev, hlo_dev, q_dev,
+                        tuple(gid_panes), tuple(valid_panes),
+                        self._bound_rows, self._sketch0_cells(),
+                        self._sizes, self._inv_scale, active_cells,
                         params=params, mode=mode, geometry=geometry,
                         n_groups_list=self.n_groups_list,
                         gid_slots=tuple(gid_slots),
                         valid_slots=tuple(valid_slots),
                         key_affine=key_affine,
                         bound_slots=self._bound_slots)
+                    self._regs_state = regs
+                else:
+                    mom_s, mom_l, totals, ns, partials, rows = \
+                        D.fused_tick_dense(
+                            mom_s, mom_l, totals, ns, v_dev,
+                            pad_dev, q_dev, tuple(gid_panes),
+                            tuple(valid_panes), self._bound_rows,
+                            self._sketch0_cells(), self._sizes,
+                            self._inv_scale, active_cells,
+                            params=params, mode=mode, geometry=geometry,
+                            n_groups_list=self.n_groups_list,
+                            gid_slots=tuple(gid_slots),
+                            valid_slots=tuple(valid_slots),
+                            key_affine=key_affine,
+                            bound_slots=self._bound_slots)
             if timings is not None:
                 timings["launch"] = (timings.get("launch", 0.0)
                                      + time.perf_counter() - t_l)
@@ -1307,17 +1487,43 @@ class DeviceStack:
             q_dev = D.h2d(quotas.astype(np.float64), self.dtype)
             v_dev = D.h2d(v_pad, self.dtype)
             s_dev = D.h2d(s_pad, jnp.int32)
+            if self.has_sketch:
+                if hash_limbs is None:
+                    raise ValueError(
+                        "sketch stack tagged tick needs hash_limbs "
+                        "(sketch.value_limbs of the raw values)")
+                hhi, hlo = hash_limbs
+                hhi_pad = np.zeros(bucket, dtype=np.uint32)
+                hlo_pad = np.zeros(bucket, dtype=np.uint32)
+                hhi_pad[:m] = hhi
+                hlo_pad[:m] = hlo
+                hhi_dev = D.h2d(hhi_pad, jnp.uint32)
+                hlo_dev = D.h2d(hlo_pad, jnp.uint32)
             if timings is not None:
                 timings["h2d"] = (timings.get("h2d", 0.0)
                                   + time.perf_counter() - t_h)
             t_l = time.perf_counter()
+            group_regs = None
             with D.stage_trace("isla:launch"):
-                mom_s, mom_l, totals, ns, partials, rows = D.fused_tick(
-                    mom_s, mom_l, totals, ns, v_dev,
-                    s_dev, q_dev, self._bounds,
-                    self._sketch0_cells(), self._sizes, self._inv_scale,
-                    params=params, mode=mode, geometry=geometry,
-                    n_groups_list=self.n_groups_list)
+                if self.has_sketch:
+                    (mom_s, mom_l, totals, ns, regs, partials, rows,
+                     group_regs) = D.fused_tick_sketch(
+                        mom_s, mom_l, totals, ns, self._regs_state,
+                        v_dev, s_dev, hhi_dev, hlo_dev, q_dev,
+                        self._bounds, self._sketch0_cells(), self._sizes,
+                        self._inv_scale, params=params, mode=mode,
+                        geometry=geometry,
+                        n_groups_list=self.n_groups_list)
+                    self._regs_state = regs
+                else:
+                    mom_s, mom_l, totals, ns, partials, rows = \
+                        D.fused_tick(
+                            mom_s, mom_l, totals, ns, v_dev,
+                            s_dev, q_dev, self._bounds,
+                            self._sketch0_cells(), self._sizes,
+                            self._inv_scale,
+                            params=params, mode=mode, geometry=geometry,
+                            n_groups_list=self.n_groups_list)
             if timings is not None:
                 timings["launch"] = (timings.get("launch", 0.0)
                                      + time.perf_counter() - t_l)
@@ -1327,7 +1533,8 @@ class DeviceStack:
             if count_round:
                 st.rounds += 1
         return self._install_stats(partials, rows, cfg,
-                                   defer=defer_stats, timings=timings)
+                                   defer=defer_stats, timings=timings,
+                                   group_regs=group_regs)
 
 
 class _MeshPartialsView:
@@ -1433,6 +1640,13 @@ class MeshDeviceStack(DeviceStack):
         self._state = (cells(mom_s, 4), cells(mom_l, 4),
                        cells(totals, 3),
                        D.mesh_h2d(mesh, ns_mesh, vec, self.dtype))
+        if self.has_sketch:
+            # Register plane in mesh placement (pad cells stay all-zero
+            # — inert under max); uint8 end to end, no scaling.
+            regs_mesh = np.zeros((self.n_cells_mesh, _sketch.M),
+                                 dtype=np.uint8)
+            regs_mesh[cmap_all] = np.asarray(self._regs_state)
+            self._regs_state = D.mesh_h2d(mesh, regs_mesh, row, jnp.uint8)
         # Stack constants, re-uploaded in mesh placement (pad cells get
         # inert fills: zero sizes / sketch, unit inv_scale, +inf cuts).
         sizes = np.zeros(S * K * bl, dtype=np.float64)
@@ -1472,6 +1686,8 @@ class MeshDeviceStack(DeviceStack):
         k = next(i for i, st in enumerate(self.stores) if st is store)
         if idx < 3:
             return self._state[idx][self._cell_maps[k]]
+        if idx == 4:
+            return self._regs_state[self._cell_maps[k]]
         b = self.n_blocks
         return self._state[3][self._ns_map[k * b:(k + 1) * b]]
 
@@ -1491,9 +1707,12 @@ class MeshDeviceStack(DeviceStack):
         shard — never shard 0 alone."""
         if self._released:
             return
+        import jax.numpy as jnp
+
         from . import distributed as D
         mom_s, mom_l, totals, ns = (np.asarray(a, dtype=np.float64)
                                     for a in self._state)
+        regs = (np.asarray(self._regs_state) if self.has_sketch else None)
         b = self.n_blocks
         for k, st in enumerate(self.stores):
             cm = self._cell_maps[k]
@@ -1502,14 +1721,17 @@ class MeshDeviceStack(DeviceStack):
             st._mom_l = D.h2d(mom_l[cm], self.dtype)
             st._totals = D.h2d(totals[cm], self.dtype)
             st._ns_dev = D.h2d(ns[nm], self.dtype)
+            if st.has_sketch:
+                st._regs = D.h2d(regs[cm], jnp.uint8)
             st._owner = None
         self._state = None
+        self._regs_state = None
         self._sk_cells = None
         self._inflight.clear()
         self._released = True
 
     def _install_stats(self, partials, rows, cfg, defer=False,
-                       timings=None):
+                       timings=None, group_regs=None):
         from . import distributed as D
 
         if defer:
@@ -1523,12 +1745,18 @@ class MeshDeviceStack(DeviceStack):
             if timings is not None:
                 timings["readback"] = (timings.get("readback", 0.0)
                                        + time.perf_counter() - t0)
+        gr_holder = None
+        if group_regs is not None:
+            gr_holder = _LazyRows(D.d2h_async(group_regs), timings,
+                                  dtype=np.uint8)
         out = []
         for k, st in enumerate(self.stores):
             r0, r1 = int(self.row_offsets[k]), int(self.row_offsets[k + 1])
             st._partials = _MeshPartialsView(partials, self._cell_maps[k])
             st._rows = (_RowsView(holder, r0, r1) if defer
                         else rows_np[r0:r1])
+            if gr_holder is not None and st.has_sketch:
+                st._group_regs = _RowsView(gr_holder, r0, r1)
             st._stats_valid = True
             st._stats_cfg = cfg
             out.append((st._partials, st._rows_src))
@@ -1600,11 +1828,14 @@ class MeshDeviceStack(DeviceStack):
              seg: Optional[np.ndarray] = None,
              quotas: Optional[np.ndarray] = None,
              dense=None, count_round: bool = True, timings=None,
-             defer_stats: bool = False):
+             defer_stats: bool = False, hash_limbs=None):
         """``DeviceStack.tick`` on the mesh layout — identical payload
         contract except tagged ``seg`` carries MESH cell ids (from
         ``key_seg``), and each store's returned partials are lazy
-        mesh->store gather views (``_MeshPartialsView``)."""
+        mesh->store gather views (``_MeshPartialsView``).  Sketch stacks
+        keep register rows shard-local (merge by max needs no psum);
+        only the O(groups) FOLDED rows cross shards, via one pmax
+        alongside the stat-row psum."""
         import jax.numpy as jnp
         from jax.sharding import PartitionSpec
 
@@ -1626,18 +1857,29 @@ class MeshDeviceStack(DeviceStack):
                    for st in self.stores):
                 return [(st._partials, st._rows_src)
                         for st in self.stores]
-            solve = D.mesh_solve_fn(self.mesh, params, mode, geometry,
-                                    self.n_groups_list)
             t0 = time.perf_counter()
+            group_regs = None
             with D.stage_trace("isla:launch"):
-                partials, rows = solve(*self._state,
-                                       self._sketch0_cells(),
-                                       self._sizes, self._inv_scale)
+                if self.has_sketch:
+                    solve = D.mesh_solve_sketch_fn(
+                        self.mesh, params, mode, geometry,
+                        self.n_groups_list)
+                    partials, rows, group_regs = solve(
+                        *self._state, self._regs_state,
+                        self._sketch0_cells(), self._sizes,
+                        self._inv_scale)
+                else:
+                    solve = D.mesh_solve_fn(self.mesh, params, mode,
+                                            geometry, self.n_groups_list)
+                    partials, rows = solve(*self._state,
+                                           self._sketch0_cells(),
+                                           self._sizes, self._inv_scale)
             if timings is not None:
                 timings["launch"] = (timings.get("launch", 0.0)
                                      + time.perf_counter() - t0)
             return self._install_stats(partials, rows, cfg,
-                                       defer=defer_stats, timings=timings)
+                                       defer=defer_stats, timings=timings,
+                                       group_regs=group_regs)
 
         values = np.asarray(values, dtype=np.float64).reshape(-1)
         quotas = np.asarray(quotas, dtype=np.int64).reshape(-1)
@@ -1704,19 +1946,43 @@ class MeshDeviceStack(DeviceStack):
                     valid_slots.append(len(valid_panes))
                     valid_panes.append(D.mesh_h2d(
                         self.mesh, block_pad(m2d), row, self.dtype))
-            fn = D.mesh_tick_dense_fn(
-                self.mesh, params, mode, geometry, self.n_groups_list,
-                tuple(gid_slots), tuple(valid_slots), key_affine,
-                self._bound_slots, len(gid_panes), len(valid_panes),
-                compacted=active_cells is not None)
-            args = (*self._state,
-                    D.mesh_h2d(self.mesh, block_pad(v2d), row,
-                               self.dtype),
-                    D.mesh_h2d(self.mesh, block_pad(pad), row,
-                               self.dtype),
-                    q_dev, tuple(gid_panes), tuple(valid_panes),
-                    self._bound_rows, self._sketch0_cells(),
-                    self._sizes, self._inv_scale)
+            if self.has_sketch:
+                hhi, hlo = _sketch.value_limbs(values)
+                hi2d = np.zeros(v2d.shape, dtype=np.uint32)
+                lo2d = np.zeros(v2d.shape, dtype=np.uint32)
+                hi2d[vmask] = hhi
+                lo2d[vmask] = hlo
+                fn = D.mesh_tick_dense_sketch_fn(
+                    self.mesh, params, mode, geometry, self.n_groups_list,
+                    tuple(gid_slots), tuple(valid_slots), key_affine,
+                    self._bound_slots, len(gid_panes), len(valid_panes),
+                    compacted=active_cells is not None)
+                args = (*self._state, self._regs_state,
+                        D.mesh_h2d(self.mesh, block_pad(v2d), row,
+                                   self.dtype),
+                        D.mesh_h2d(self.mesh, block_pad(pad), row,
+                                   self.dtype),
+                        D.mesh_h2d(self.mesh, block_pad(hi2d), row,
+                                   jnp.uint32),
+                        D.mesh_h2d(self.mesh, block_pad(lo2d), row,
+                                   jnp.uint32),
+                        q_dev, tuple(gid_panes), tuple(valid_panes),
+                        self._bound_rows, self._sketch0_cells(),
+                        self._sizes, self._inv_scale)
+            else:
+                fn = D.mesh_tick_dense_fn(
+                    self.mesh, params, mode, geometry, self.n_groups_list,
+                    tuple(gid_slots), tuple(valid_slots), key_affine,
+                    self._bound_slots, len(gid_panes), len(valid_panes),
+                    compacted=active_cells is not None)
+                args = (*self._state,
+                        D.mesh_h2d(self.mesh, block_pad(v2d), row,
+                                   self.dtype),
+                        D.mesh_h2d(self.mesh, block_pad(pad), row,
+                                   self.dtype),
+                        q_dev, tuple(gid_panes), tuple(valid_panes),
+                        self._bound_rows, self._sketch0_cells(),
+                        self._sizes, self._inv_scale)
             if active_cells is not None:
                 args = args + (active_cells,)
             if timings is not None:
@@ -1746,27 +2012,56 @@ class MeshDeviceStack(DeviceStack):
             q_dev = D.mesh_h2d(self.mesh, q_pad, vec, self.dtype)
             v_dev = D.mesh_h2d(self.mesh, v_pad, rep, self.dtype)
             s_dev = D.mesh_h2d(self.mesh, s_pad, rep, jnp.int32)
+            if self.has_sketch:
+                if hash_limbs is None:
+                    raise ValueError(
+                        "sketch stack tagged tick needs hash_limbs "
+                        "(sketch.value_limbs of the raw values)")
+                hhi, hlo = hash_limbs
+                hhi_pad = np.zeros(bucket, dtype=np.uint32)
+                hlo_pad = np.zeros(bucket, dtype=np.uint32)
+                hhi_pad[:m] = hhi
+                hlo_pad[:m] = hlo
+                hhi_dev = D.mesh_h2d(self.mesh, hhi_pad, rep, jnp.uint32)
+                hlo_dev = D.mesh_h2d(self.mesh, hlo_pad, rep, jnp.uint32)
             if timings is not None:
                 timings["h2d"] = (timings.get("h2d", 0.0)
                                   + time.perf_counter() - t_h)
-            fn = D.mesh_tick_fn(self.mesh, params, mode, geometry,
-                                self.n_groups_list, not self._uniform)
             t_l = time.perf_counter()
             with D.stage_trace("isla:launch"):
-                out = fn(*self._state, v_dev, s_dev,
-                         q_dev, self._bounds, self._sketch0_cells(),
-                         self._sizes, self._inv_scale)
+                if self.has_sketch:
+                    fn = D.mesh_tick_sketch_fn(
+                        self.mesh, params, mode, geometry,
+                        self.n_groups_list, not self._uniform)
+                    out = fn(*self._state, self._regs_state, v_dev,
+                             s_dev, hhi_dev, hlo_dev, q_dev,
+                             self._bounds, self._sketch0_cells(),
+                             self._sizes, self._inv_scale)
+                else:
+                    fn = D.mesh_tick_fn(self.mesh, params, mode, geometry,
+                                        self.n_groups_list,
+                                        not self._uniform)
+                    out = fn(*self._state, v_dev, s_dev,
+                             q_dev, self._bounds, self._sketch0_cells(),
+                             self._sizes, self._inv_scale)
             if timings is not None:
                 timings["launch"] = (timings.get("launch", 0.0)
                                      + time.perf_counter() - t_l)
-        mom_s, mom_l, totals, ns, partials, rows = out
+        group_regs = None
+        if self.has_sketch:
+            (mom_s, mom_l, totals, ns, regs, partials, rows,
+             group_regs) = out
+            self._regs_state = regs
+        else:
+            mom_s, mom_l, totals, ns, partials, rows = out
         self._state = (mom_s, mom_l, totals, ns)
         for st in self.stores:
             st.n_sampled = st.n_sampled + quotas
             if count_round:
                 st.rounds += 1
         return self._install_stats(partials, rows, cfg,
-                                   defer=defer_stats, timings=timings)
+                                   defer=defer_stats, timings=timings,
+                                   group_regs=group_regs)
 
 
 def proportional_allocate(amounts: np.ndarray, budget: int) -> np.ndarray:

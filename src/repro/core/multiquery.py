@@ -80,6 +80,7 @@ from typing import Callable, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from . import sketch as _sketch
 from .engine import (AUTO_SKEW_THRESHOLD, MODES, IslaQuery, block_quotas,
                      phase2_iteration_batch, resolve_mode_and_geometry)
 from .modulation import empirical_geometry
@@ -93,7 +94,11 @@ from .types import (AggregateResult, Anchor, BlockResultsBatch,
                     Boundaries, IslaParams, Predicate, StoreKey, ZoneMap,
                     ZONE_EMPTY, ZONE_FULL, ZONE_PARTIAL, demand_dominates)
 
-AGGREGATES = ("AVG", "SUM", "COUNT", "VAR")
+AGGREGATES = ("AVG", "SUM", "COUNT", "VAR", "count_distinct")
+# Aggregates served from the store's mergeable HLL register plane rather
+# than the moment rows; they ride the same pass/tick but their error bound
+# is the sketch's ~1.04/sqrt(m) relative standard error, not Eq. 1.
+SKETCH_AGGREGATES = ("count_distinct",)
 # Aggregates answered exactly from catalog metadata — they never constrain
 # the shared sampling rate.  Only the *unpredicated, ungrouped* form is
 # exact: a WHERE or GROUP BY makes COUNT an estimate that consumes samples.
@@ -250,6 +255,9 @@ class KeyedPass:
     n_all: int                 # computed, even on need_mean=False passes
     w_all: float
     degraded_all: bool
+    distinct_g: Optional[np.ndarray] = None  # (G,) HLL COUNT DISTINCT
+                               # estimates (only on need_distinct passes)
+    distinct_all: Optional[float] = None     # estimate over the grand fold
 
 
 @dataclasses.dataclass
@@ -683,7 +691,9 @@ class MultiQueryExecutor:
                         if group_by is not None else None)
                 store.ingest(values, block_ids, chunk.chunk_quotas,
                              group_ids=gids, mask=mask,
-                             count_round=id(store) not in counted)
+                             count_round=id(store) not in counted,
+                             raw_values=(raw if store.has_sketch
+                                         else None))
                 counted.add(id(store))
 
     def _iter_row_chunks(self, quotas: np.ndarray,
@@ -1505,13 +1515,16 @@ class MultiQueryExecutor:
 
     def _keyed_stats(self, plan: QueryPlan, mg: ModeGroup,
                      store: MomentStore, route: str,
-                     need_mean: bool = True) -> KeyedPass:
+                     need_mean: bool = True,
+                     need_distinct: bool = False) -> KeyedPass:
         """Compose one (where, group_by) key's per-cell statistics from its
         store's accumulated (group, block) moments.
 
-        ``need_mean=False`` (COUNT-only keys) skips Phase 2 — the cell
-        counts alone answer the query; the mean-side fields come back NaN
-        and must not be read."""
+        ``need_mean=False`` (COUNT/count_distinct-only keys) skips Phase 2
+        — the cell counts alone answer the query; the mean-side fields
+        come back NaN and must not be read.  ``need_distinct=True``
+        (count_distinct keys) additionally folds the store's HLL register
+        plane per group and estimates cardinalities."""
         params = self.params
         n_b = store.n_blocks
         n_groups = store.n_groups
@@ -1575,6 +1588,12 @@ class MultiQueryExecutor:
         tot_var = max(float(s2.sum() / max(n_all, 1)) - tot_mean ** 2, 0.0)
         sigma_all = (math.sqrt(tot_var * n_all / max(n_all - 1, 1))
                      if n_all >= 2 else float("nan"))
+        distinct_g = None
+        distinct_all = None
+        if need_distinct:
+            folded = store.group_registers()
+            distinct_g = _sketch.estimate(folded)
+            distinct_all = float(_sketch.estimate(folded.max(axis=0)))
         return KeyedPass(
             n_groups=n_groups, partials=partials, cell_counts=cnt,
             cell_weights=weights, mean_g=mean_g, ex2_g=ex2_g,
@@ -1584,7 +1603,8 @@ class MultiQueryExecutor:
             mean_all=mean_all, ex2_all=ex2_all, sigma_all=sigma_all,
             plain_mean_all=(tot_mean if n_all else float("nan")),
             n_all=n_all, w_all=w_all,
-            degraded_all=bool(degraded_g.any()))
+            degraded_all=bool(degraded_g.any()),
+            distinct_g=distinct_g, distinct_all=distinct_all)
 
     # -- device-resident execution -----------------------------------------
 
@@ -1613,6 +1633,14 @@ class MultiQueryExecutor:
                 dst._owner.release()
             self._device_stores.pop(skey, None)
             dst = None
+        if dst is not None and dst.has_sketch != host_store.has_sketch:
+            # The key's sketch shape changed (a distinct ask arrived and
+            # _group_stores rebuilt the host store cold): the old mirror
+            # has no register history to keep — rebuild to match.
+            if dst._owner is not None:
+                dst._owner.release()
+            self._device_stores.pop(skey, None)
+            dst = None
         if dst is None:
             warm = (host_store.mom_s.any() or host_store.totals.any()
                     or host_store.n_sampled.any())
@@ -1625,7 +1653,8 @@ class MultiQueryExecutor:
                     host_store.sketch0, self.block_sizes,
                     shift=host_store.shift,
                     n_groups=host_store.n_groups,
-                    anchor=host_store.anchor)
+                    anchor=host_store.anchor,
+                    has_sketch=host_store.has_sketch)
             self._device_stores[skey] = dst
         return dst
 
@@ -1722,6 +1751,11 @@ class MultiQueryExecutor:
                            timings=timings, defer_stats=defer_stats)
                 return
             segs, vals = [], []
+            his, los = [], []
+            if stack.has_sketch:
+                # Register hashes key on the RAW (unshifted) float64 bits
+                # — shared across every key regardless of anchor frame.
+                hhi, hlo = _sketch.value_limbs(raw)
             shifted = {}  # (shift, scale) -> prepared stream (shared)
             for k_i, key in enumerate(keys):
                 where, group_by = key
@@ -1739,12 +1773,18 @@ class MultiQueryExecutor:
                 segs.append(stack.key_seg(k_i, dst, block_ids, gids,
                                           mask))
                 vals.append(values if mask is None else values[mask])
+                if stack.has_sketch:
+                    his.append(hhi if mask is None else hhi[mask])
+                    los.append(hlo if mask is None else hlo[mask])
             stack.tick(self.params, mode=dev_mode, geometry=mg.geometry,
                        values=np.concatenate(vals),
                        seg=np.concatenate(segs),
                        quotas=chunk.chunk_quotas,
                        count_round=chunk.first,
-                       timings=timings, defer_stats=defer_stats)
+                       timings=timings, defer_stats=defer_stats,
+                       hash_limbs=((np.concatenate(his),
+                                    np.concatenate(los))
+                                   if stack.has_sketch else None))
 
         pending = []
         for chunk, columns, block_ids in self._iter_row_chunks(
@@ -1759,11 +1799,13 @@ class MultiQueryExecutor:
                 pending[-3].result()  # bound queued drawn-row memory
         return pending
 
-    def _keyed_stats_device(self, dst: DeviceMomentStore) -> KeyedPass:
+    def _keyed_stats_device(self, dst: DeviceMomentStore,
+                            need_distinct: bool = False) -> KeyedPass:
         """``_keyed_stats`` served from the device tick's group-stat rows:
         the host reads O(groups) reduced statistics, never per-cell
         moments.  Per-cell fields of the ``KeyedPass`` are None — the
-        composers only read group-level fields."""
+        composers only read group-level fields.  ``need_distinct=True``
+        reads the tick's folded O(groups) register rows the same way."""
         rows = dst._rows
         s = dst.scale
         n_g = rows[:, 0]
@@ -1793,6 +1835,12 @@ class MultiQueryExecutor:
         tot_var = max(float(s2.sum() / max(n_all, 1)) - tot_mean ** 2, 0.0)
         sigma_all = (math.sqrt(tot_var * n_all / max(n_all - 1, 1))
                      if n_all >= 2 else float("nan"))
+        distinct_g = None
+        distinct_all = None
+        if need_distinct:
+            folded = dst.group_registers()
+            distinct_g = _sketch.estimate(folded)
+            distinct_all = float(_sketch.estimate(folded.max(axis=0)))
         return KeyedPass(
             n_groups=dst.n_groups, partials=None, cell_counts=None,
             cell_weights=None, mean_g=mean_g, ex2_g=ex2_g, sigma_g=sigma_g,
@@ -1802,7 +1850,8 @@ class MultiQueryExecutor:
             sigma_all=sigma_all,
             plain_mean_all=(tot_mean if n_all else float("nan")),
             n_all=n_all, w_all=w_all,
-            degraded_all=bool(degraded_g.any()))
+            degraded_all=bool(degraded_g.any()),
+            distinct_g=distinct_g, distinct_all=distinct_all)
 
     def _base_stats_device(self, plan: QueryPlan, mg: ModeGroup,
                            dst: DeviceMomentStore) -> SharedPass:
@@ -1905,6 +1954,12 @@ class MultiQueryExecutor:
             bound = self._count_bound(w, n_drawn, beta_z)
             # deterministic across batch compositions (see _compose_keyed)
             mean = float(kp.plain_mean_g[g]) - shift if n else float("nan")
+        elif q.agg == "count_distinct":
+            # HLL estimate over the group's folded register row; the bound
+            # is the sketch's standard error — sample-size independent.
+            value = float(kp.distinct_g[g])
+            bound = _sketch.distinct_error(value, beta_z)
+            mean = float(kp.plain_mean_g[g]) - shift if n else float("nan")
         else:  # VAR
             value = (max(float(kp.ex2_g[g]) - float(kp.mean_g[g]) ** 2, 0.0)
                      if n else float("nan"))
@@ -1941,6 +1996,14 @@ class MultiQueryExecutor:
             # COUNT never estimates a leverage mean (its key may have
             # skipped Phase 2 entirely); report the plain matching-sample
             # mean so the field is deterministic across batch compositions.
+            mean = kp.plain_mean_all - shift if kp.n_all else float("nan")
+        elif q.agg == "count_distinct":
+            # The HLL estimate over every seen sample; unlike COUNT its
+            # bound is the register plane's standard error, earned from
+            # tick one — so distinct answers always cache/subsume.
+            value = kp.distinct_all
+            bound = _sketch.distinct_error(value, beta_z)
+            half = bound
             mean = kp.plain_mean_all - shift if kp.n_all else float("nan")
         else:  # VAR
             value = (max(kp.ex2_all - kp.mean_all ** 2, 0.0)
@@ -1994,25 +2057,37 @@ class MultiQueryExecutor:
                     if where is not None:
                         self._key_anchors[where] = anchor
                     st = None
+                if st is not None and "count_distinct" in aggs \
+                        and not st.has_sketch:
+                    # A distinct ask arrived on a warm key without a
+                    # sketch plane: registers must see EVERY ingested
+                    # sample, and history cannot be re-hashed — the key
+                    # goes cold and rebuilds with the plane attached.
+                    self._drop_key_state(skey, stores)
+                    st = None
                 if st is None:
                     # Persistent stores always accumulate regions: a later
                     # batch may add an AVG to a key first seen COUNT-only,
                     # and past samples cannot be re-classified.
-                    st = MomentStore.from_anchor(n_b, anchor,
-                                                 n_groups=n_groups)
+                    st = MomentStore.from_anchor(
+                        n_b, anchor, n_groups=n_groups,
+                        has_sketch=("count_distinct" in aggs))
                     stores[skey] = st
             elif key == (None, None):
                 # The plain pass always keeps regions (its composed mean
-                # is the leverage answer); totals only feed VAR's ex2.
+                # is the leverage answer); totals feed VAR's ex2 and the
+                # keyed composition count_distinct rides through.
                 st = MomentStore.from_anchor(
                     n_b, anchor, n_groups=n_groups,
-                    has_totals=("VAR" in aggs))
+                    has_totals=("VAR" in aggs or "count_distinct" in aggs),
+                    has_sketch=("count_distinct" in aggs))
             else:
                 # Keyed passes always need totals (cell weights / counts);
-                # COUNT-only keys skip the region sweep.
+                # COUNT/count_distinct-only keys skip the region sweep.
                 st = MomentStore.from_anchor(
                     n_b, anchor, n_groups=n_groups,
-                    has_regions=(aggs != {"COUNT"}))
+                    has_regions=bool(aggs - {"COUNT", "count_distinct"}),
+                    has_sketch=("count_distinct" in aggs))
             out[key] = st
         return out, key_aggs
 
@@ -2175,7 +2250,7 @@ class MultiQueryExecutor:
             q = plan.queries[i]
             key = _pass_key(q)
             st = group_stores[key]
-            if key == (None, None):
+            if key == (None, None) and q.agg != "count_distinct":
                 if sp is None:
                     sp = (self._base_stats_device(plan, mg, dstores[key])
                           if device_resident
@@ -2183,12 +2258,16 @@ class MultiQueryExecutor:
                 ans = self._compose_plain(q, sp, mg, pass_id)
             else:
                 if key not in keyed:
+                    need_distinct = "count_distinct" in key_aggs[key]
                     keyed[key] = (
-                        self._keyed_stats_device(dstores[key])
+                        self._keyed_stats_device(
+                            dstores[key], need_distinct=need_distinct)
                         if device_resident
                         else self._keyed_stats(
                             plan, mg, st, route,
-                            need_mean=(key_aggs[key] != {"COUNT"})))
+                            need_mean=bool(key_aggs[key]
+                                           - {"COUNT", "count_distinct"}),
+                            need_distinct=need_distinct))
                 n_drawn = (dstores[key].total_sampled if device_resident
                            else st.total_sampled)
                 shift_k = (dstores[key].shift if device_resident

@@ -315,6 +315,136 @@ def isla_fused_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
     return mom, partials
 
 
+REG_ROWS = 32       # HLL register block: 4096 registers = (32, 128) tile
+                    # — exactly the int8 minimum TPU tile, so one cell's
+                    # registers are one native uint8 VMEM block.
+
+
+def _sketch_kernel(hi_ref, lo_ref, valid_ref, prior_ref, o_ref):
+    """One grid step: merge one (tm, 128) hash-limb tile into the cell's
+    (1, 32, 128) HLL register block (elementwise max accumulation).
+
+    The hash and the (j, rho) encoding are the shared in-graph uint32-limb
+    twins from ``repro.core.sketch`` — the SAME traced arithmetic the
+    fused jnp tick runs, so the Pallas route is bit-identical by
+    construction.  The scatter is realized as the TPU-native one-hot
+    lane-max: for each of the 32 register sublane rows, samples landing
+    on that row one-hot against the 128 lanes and max-reduce over the
+    tile (a dense VPU reduction instead of a data-dependent scatter).
+
+    ``valid_ref`` masks pad lanes to rho = 0 — the merge's neutral
+    element — because unlike the moments' in-N padding contract a pad
+    value's hash would otherwise hit a real register.
+    """
+    from repro.core import sketch as _sk
+
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = prior_ref[...]
+
+    hi, lo = hi_ref[0], lo_ref[0]                         # (tm, 128)
+    j, rho = _sk.encode_graph(*_sk.splitmix64_graph(hi, lo))
+    rho = jnp.where(valid_ref[0] != 0, rho.astype(jnp.int32), 0)
+    lane = (j & (LANE - 1))[..., None]                    # (tm, 128, 1)
+    lane_ids = jax.lax.broadcasted_iota(
+        jnp.int32, lane.shape[:-1] + (LANE,), len(lane.shape) - 1)
+    rows = []
+    for rr in range(REG_ROWS):
+        rho_r = jnp.where(j >> 7 == rr, rho, 0)[..., None]
+        # (tm, 128, 128) one-hot contributions -> (128,) lane max
+        rows.append(jnp.max(jnp.where(lane_ids == lane, rho_r, 0),
+                            axis=(0, 1)))
+    tile = jnp.stack(rows).astype(jnp.uint8)              # (32, 128)
+    o_ref[...] = jnp.maximum(o_ref[...], tile[None])
+
+
+@functools.partial(jax.jit, static_argnames=("tm", "interpret"))
+def isla_sketch_pallas(hash_hi3d: jnp.ndarray, hash_lo3d: jnp.ndarray,
+                       valid3d: jnp.ndarray, tm: int = DEFAULT_TM,
+                       interpret: bool = False,
+                       prior: jnp.ndarray = None) -> jnp.ndarray:
+    """Tiled HLL register merge — the sketch plane's Phase 1 twin.
+
+    hash_hi3d / hash_lo3d: (n_cells, rows, 128) uint32 — the raw measure
+    bits as ``sketch.value_limbs`` panes, rows % tm == 0; valid3d: same
+    shape, nonzero on real samples (pad lanes scatter the neutral
+    rho = 0).  ``prior`` optionally seeds each cell's register block with
+    its previous-round (n_cells, 32, 128) uint8 state — like the moments
+    prior, one launch both folds the fresh round and merges it into the
+    store's plane (merge = max makes ANY tick partition bit-identical).
+    Returns (n_cells, 32, 128) uint8 registers; ``.reshape(n_cells,
+    4096)`` is the ``MomentStore.regs`` layout.
+    """
+    n_cells, rows, lane = hash_hi3d.shape
+    if lane != LANE:
+        raise ValueError(f"last dim must be {LANE}, got {lane}")
+    if rows % tm != 0:
+        raise ValueError(f"rows {rows} not a multiple of tile rows {tm}")
+    n_tiles = rows // tm
+    if prior is None:
+        prior = jnp.zeros((n_cells, REG_ROWS, LANE), jnp.uint8)
+    if prior.shape != (n_cells, REG_ROWS, LANE):
+        raise ValueError(f"prior must be ({n_cells}, {REG_ROWS}, {LANE}), "
+                         f"got {prior.shape}")
+
+    grid_spec = pl.GridSpec(
+        grid=(n_cells, n_tiles),
+        in_specs=[
+            pl.BlockSpec((1, tm, LANE), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, tm, LANE), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, tm, LANE), lambda c, i: (c, i, 0)),
+            pl.BlockSpec((1, REG_ROWS, LANE), lambda c, i: (c, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, REG_ROWS, LANE), lambda c, i: (c, 0, 0)),
+    )
+    return pl.pallas_call(
+        _sketch_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_cells, REG_ROWS, LANE),
+                                       jnp.uint8),
+        interpret=interpret,
+    )(hash_hi3d, hash_lo3d, valid3d, prior)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("params", "mode", "geometry", "tm", "stride",
+                     "interpret"),
+    donate_argnums=(2, 3))
+def isla_fused_sketch_pallas(values3d: jnp.ndarray, bounds: jnp.ndarray,
+                             prior: jnp.ndarray, prior_regs: jnp.ndarray,
+                             hash_hi3d: jnp.ndarray,
+                             hash_lo3d: jnp.ndarray,
+                             valid3d: jnp.ndarray, sketch0: jnp.ndarray,
+                             params, mode: str = "calibrated",
+                             geometry=None, tm: int = DEFAULT_TM,
+                             stride: int = 1, interpret: bool = False,
+                             inv_scale: jnp.ndarray = None):
+    """``isla_fused_pallas`` with the register pane riding the launch:
+    Phase 1 moments, the HLL register merge, and the branchless Phase 2
+    solve chained in ONE jit over the same donated accumulators — the
+    kernel-route twin of ``distributed.fused_tick_dense_sketch``.
+
+    ``prior`` (n_cells, 2, 4) and ``prior_regs`` (n_cells, 32, 128) are
+    both consumed and replaced.  The hash panes carry the RAW measure
+    bits (``sketch.value_limbs``), never the scaled/shifted pane values.
+    Returns ``(moments, regs, partials)``.
+    """
+    from repro.core.distributed import _scaled_solve_args, phase2
+
+    mom = isla_moments_batched_pallas(values3d, bounds, tm=tm,
+                                      stride=stride, interpret=interpret,
+                                      prior=prior)
+    regs = isla_sketch_pallas(hash_hi3d, hash_lo3d, valid3d, tm=tm,
+                              interpret=interpret, prior=prior_regs)
+    if geometry is not None:
+        geometry = (jnp.float32(geometry[0]), jnp.float32(geometry[1]))
+    thr, geometry = _scaled_solve_args(params, geometry, inv_scale)
+    partials = phase2(mom[:, 0, :], mom[:, 1, :], sketch0, params,
+                      mode=mode, geometry=geometry, thr=thr)
+    return mom, regs, partials
+
+
 def _pilot_kernel(x_ref, o_ref):
     x = x_ref[...].astype(jnp.float32)
 

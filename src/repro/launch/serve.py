@@ -494,7 +494,8 @@ def _random_query(rng: np.random.Generator, e: float,
                   priority: float = 1.0):
     from repro.core import IslaQuery, Predicate
 
-    agg = ("AVG", "SUM", "COUNT", "VAR")[int(rng.integers(0, 4))]
+    agg = ("AVG", "SUM", "COUNT", "VAR",
+           "count_distinct")[int(rng.integers(0, 5))]
     where = None
     if rng.random() < 0.5:
         # Half the predicated queries are day-selective: the WHERE the

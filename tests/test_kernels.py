@@ -304,3 +304,74 @@ def test_fused_pallas_per_cell_bounds_and_inv_scale(rng):
                         mode="calibrated")
         np.testing.assert_allclose(np.asarray(partials[c]),
                                    np.asarray(want_p), rtol=1e-5)
+
+
+def _host_regs(vals_per_cell):
+    """One-pass host register plane for a list of per-cell value arrays."""
+    from repro.core import sketch as SK
+    regs = np.zeros((len(vals_per_cell), SK.M), np.uint8)
+    for c, v in enumerate(vals_per_cell):
+        j, rho = SK.encode(SK.hash_values(np.asarray(v, np.float64)))
+        SK.scatter_max(regs, np.full(len(v), c), j, rho)
+    return regs
+
+
+def test_sketch_kernel_matches_host_twin_and_merges(rng):
+    """The HLL scatter kernel: bit-identical to the host numpy twin on a
+    masked pane, and two prior-seeded rounds fold to the one-pass plane
+    (merge = elementwise max inside the launch)."""
+    from repro.core import sketch as SK
+    from repro.kernels.isla_moments import (LANE, REG_ROWS,
+                                            isla_sketch_pallas)
+
+    n_cells, rows = 3, 256
+    vals = np.round(rng.normal(0, 50, (n_cells, rows * LANE)))
+    valid = rng.random((n_cells, rows * LANE)) < 0.9
+    host = _host_regs([vals[c][valid[c]] for c in range(n_cells)])
+
+    hi, lo = SK.value_limbs(vals.reshape(-1))
+    hi3 = jnp.asarray(hi.reshape(n_cells, rows, LANE))
+    lo3 = jnp.asarray(lo.reshape(n_cells, rows, LANE))
+    v3 = jnp.asarray(valid.reshape(n_cells, rows, LANE).astype(np.uint32))
+    got = isla_sketch_pallas(hi3, lo3, v3, tm=64, interpret=True)
+    assert got.shape == (n_cells, REG_ROWS, LANE) and got.dtype == jnp.uint8
+    assert np.array_equal(np.asarray(got).reshape(n_cells, SK.M), host)
+
+    half = rows // 2
+    r1 = isla_sketch_pallas(hi3[:, :half], lo3[:, :half], v3[:, :half],
+                            tm=64, interpret=True)
+    r2 = isla_sketch_pallas(hi3[:, half:], lo3[:, half:], v3[:, half:],
+                            tm=64, interpret=True, prior=r1)
+    assert np.array_equal(np.asarray(r2), np.asarray(got))
+
+
+def test_fused_sketch_kernel_rides_the_launch_unchanged(rng):
+    """The fused moments+sketch kernel returns the plain fused kernel's
+    exact moments and phase-2 partials (the register pane must not
+    perturb the fp32 pipeline) while its uint8 registers match the host
+    twin bit for bit."""
+    from repro.core import sketch as SK
+    from repro.core.types import IslaParams
+    from repro.kernels.isla_moments import (LANE, isla_fused_pallas,
+                                            isla_fused_sketch_pallas)
+
+    params = IslaParams(e=0.5)
+    n_cells, rows = 2, 128
+    vals = np.round(rng.normal(100, 20, (n_cells, rows, LANE)))
+    prior = jnp.zeros((n_cells, 2, 4), jnp.float32)
+    prior_regs = jnp.zeros((n_cells, 32, LANE), jnp.uint8)
+    hi, lo = SK.value_limbs(vals.reshape(-1))
+    hi3 = jnp.asarray(hi.reshape(n_cells, rows, LANE))
+    lo3 = jnp.asarray(lo.reshape(n_cells, rows, LANE))
+    v3 = jnp.ones((n_cells, rows, LANE), jnp.uint32)
+    mom, regs, partials = isla_fused_sketch_pallas(
+        jnp.asarray(vals, jnp.float32), BOUNDS_ARR, prior, prior_regs,
+        hi3, lo3, v3, jnp.float32(100.0), params, tm=64, interpret=True)
+    mom2, partials2 = isla_fused_pallas(
+        jnp.asarray(vals, jnp.float32), BOUNDS_ARR,
+        jnp.zeros((n_cells, 2, 4), jnp.float32), jnp.float32(100.0),
+        params, tm=64, interpret=True)
+    assert np.array_equal(np.asarray(mom), np.asarray(mom2))
+    assert np.array_equal(np.asarray(partials), np.asarray(partials2))
+    host = _host_regs([vals[c].reshape(-1) for c in range(n_cells)])
+    assert np.array_equal(np.asarray(regs).reshape(n_cells, SK.M), host)

@@ -170,4 +170,5 @@ def test_validation_errors():
         ex.run([IslaQuery()], np.random.default_rng(0), mode="calibratd")
     with pytest.raises(ValueError, match="one sampler per block"):
         MultiQueryExecutor(normal_samplers(b=3), [1, 2])
-    assert set(AGGREGATES) == {"AVG", "SUM", "COUNT", "VAR"}
+    assert set(AGGREGATES) == {"AVG", "SUM", "COUNT", "VAR",
+                               "count_distinct"}

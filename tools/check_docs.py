@@ -7,18 +7,25 @@ Scans README.md and docs/*.md for inline links:
    (checked relative to the markdown file's own location);
  * ``#anchor`` fragments must match a heading in the target file,
    GitHub-slugified (lowercase, punctuation stripped, spaces -> dashes);
- * http(s)/mailto links are skipped (no network in CI).
+ * http(s)/mailto links are skipped (no network in CI);
+ * every ``BENCH_*.json`` NAME-DROPPED anywhere in README.md,
+   ROADMAP.md or docs/*.md (links or plain prose — bench reports are
+   usually cited by filename, not linked) must exist at the repo root
+   and parse as JSON, so docs never point at a bench artifact that was
+   renamed or never regenerated.
 
 Exits non-zero listing every broken link.  No dependencies beyond the
 standard library.
 """
 from __future__ import annotations
 
+import json
 import re
 import sys
 from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
+BENCH_RE = re.compile(r"\bBENCH_\w+\.json\b")
 LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
 HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
 FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
@@ -65,6 +72,25 @@ def check_file(md: Path) -> "list[str]":
     return errors
 
 
+def check_bench_reports(md: Path) -> "list[str]":
+    """Every BENCH_*.json the doc mentions must exist at the repo root
+    and parse — name-drops count, not just markdown links."""
+    errors = []
+    for name in sorted(set(BENCH_RE.findall(
+            md.read_text(encoding="utf-8")))):
+        dest = ROOT / name
+        if not dest.exists():
+            errors.append(f"{md.relative_to(ROOT)}: stale bench pointer "
+                          f"-> {name} (no such file at repo root)")
+            continue
+        try:
+            json.loads(dest.read_text(encoding="utf-8"))
+        except ValueError as exc:
+            errors.append(f"{md.relative_to(ROOT)}: bench report {name} "
+                          f"is not valid JSON ({exc})")
+    return errors
+
+
 def main() -> int:
     files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
     files = [f for f in files if f.exists()]
@@ -74,10 +100,17 @@ def main() -> int:
     errors = []
     for md in files:
         errors.extend(check_file(md))
+    bench_files = files + ([ROOT / "ROADMAP.md"]
+                           if (ROOT / "ROADMAP.md").exists() else [])
+    n_bench = 0
+    for md in bench_files:
+        n_bench += len(set(BENCH_RE.findall(
+            md.read_text(encoding="utf-8"))))
+        errors.extend(check_bench_reports(md))
     for e in errors:
         print(e, file=sys.stderr)
-    print(f"check_docs: {len(files)} file(s), "
-          f"{len(errors)} broken link(s)")
+    print(f"check_docs: {len(files)} file(s), {n_bench} bench "
+          f"pointer(s), {len(errors)} broken link(s)")
     return 1 if errors else 0
 
 
